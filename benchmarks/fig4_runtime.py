@@ -1,0 +1,85 @@
+"""Fig 4 reproduction (App. B): per-step rotation-update runtime vs dimension.
+
+The paper compares GCD methods against the Cayley transform per update step
+(batch size 1); Cayley pays an O(n³) linear solve per step that does not
+parallelize, GCD pays one matmul (the directional-derivative scores) + an
+O(n) selection + an O(n²) pair-apply.
+
+We time one full update step for n ∈ {64, 128, 256, 512} on CPU (same
+"completely fair setup" as the paper's Fig 4b). Trends, not absolutes, are
+the claim: GCD-R ≪ Cayley, GCD-G < Cayley, both growing more slowly.
+Also timed: the SVD Procrustes solve (the OPQ inner step GCD replaces).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import cayley as cayley_mod
+from repro.core import opq, rotation
+
+
+def run(dims=(64, 128, 256, 512), verbose=True):
+    out = {}
+    for n in dims:
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (1, n))  # batch size 1, as in the paper
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+        def loss_of_R(R):
+            return jnp.sum((X @ R) * w)
+
+        # --- GCD variants: one full update step
+        state = rotation.init(n)
+        G = jax.grad(loss_of_R)(state.R)
+
+        def gcd_step(method, st, g, k):
+            return rotation.update(st, g, 1e-3, k, method=method)
+
+        res = {}
+        for method in ("random", "greedy", "steepest"):
+            fn = jax.jit(lambda st, g, k, m=method: rotation.update(
+                st, g, 1e-3, k, method=m))
+            us = time_call(fn, state, G, key)
+            res[f"gcd_{method}"] = us
+        # beyond-paper: serial-scan greedy vs vectorized-rounds greedy
+        from repro.core import matching as match_mod
+        res["match_greedy_serial"] = time_call(
+            jax.jit(match_mod.greedy_matching), G - G.T)
+        res["match_greedy_fast"] = time_call(
+            jax.jit(match_mod.greedy_matching_fast), G - G.T)
+
+        # --- Cayley: parameter grad + transform (the per-step work)
+        A = 0.01 * jax.random.normal(key, (n, n))
+
+        def cayley_loss(a):
+            return loss_of_R(cayley_mod.cayley(a))
+
+        cay_step = jax.jit(lambda a: a - 1e-3 * jax.grad(cayley_loss)(a))
+        res["cayley"] = time_call(cay_step, A)
+
+        # --- SVD Procrustes (OPQ inner solve)
+        Y = jax.random.normal(jax.random.fold_in(key, 2), (256, n))
+        Z = jax.random.normal(jax.random.fold_in(key, 3), (256, n))
+        svd_fn = jax.jit(lambda y, z: opq.procrustes_rotation(y, z))
+        res["svd"] = time_call(svd_fn, Y, Z)
+
+        out[n] = res
+        if verbose:
+            for k, v in res.items():
+                emit(f"fig4/n{n}/{k}", v)
+    checks = {
+        "gcd_r_faster_than_cayley_at_512": out[512]["gcd_random"]
+        < out[512]["cayley"],
+        "gcd_scales_better": (out[512]["gcd_random"] / out[64]["gcd_random"])
+        < (out[512]["cayley"] / max(out[64]["cayley"], 1e-9)) * 2.0,
+    }
+    if verbose:
+        for k, v in checks.items():
+            emit(f"fig4/check/{k}", 0.0, str(v))
+    return out, checks
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Pallas-kernel micro-benchmarks.
+
+On this CPU container the kernels execute in interpret mode (Python), so
+wall-clock numbers measure the XLA-oracle path and only CHECK the kernels'
+numerics at benchmark shapes; the kernels' perf story on TPU is carried by
+the §Roofline VMEM/BlockSpec analysis instead. Emits allclose status per
+kernel at a production-ish shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import givens
+from repro.kernels import ops, ref
+
+
+def run(verbose=True):
+    key = jax.random.PRNGKey(0)
+    results = {}
+
+    # givens_rotate @ (m=8192, n=512)
+    m, n = 8192, 512
+    X = jax.random.normal(key, (m, n))
+    perm = np.random.RandomState(0).permutation(n)
+    pi, pj = jnp.asarray(perm[: n // 2]), jnp.asarray(perm[n // 2:])
+    theta = jax.random.normal(jax.random.fold_in(key, 1), (n // 2,))
+    want = givens.apply_pair_rotations(X, pi, pj, theta)
+    got = ops.apply_pair_rotations(X, pi, pj, theta)
+    ok = np.allclose(got, want, atol=1e-4)
+    us = time_call(jax.jit(
+        lambda x, a, b, t: ops.apply_pair_rotations(x, a, b, t, use_kernel=False)),
+        X, pi, pj, theta)
+    results["givens_rotate"] = ok
+    if verbose:
+        emit("kernels/givens_rotate", us, f"allclose={ok}")
+
+    # gcd_score @ n=512
+    G = jax.random.normal(key, (512, 512))
+    R = jax.random.normal(jax.random.fold_in(key, 2), (512, 512))
+    ok = np.allclose(ops.gcd_score(G, R), ref.gcd_score_ref(G, R), atol=1e-2)
+    us = time_call(jax.jit(lambda g, r: ref.gcd_score_ref(g, r)), G, R)
+    results["gcd_score"] = ok
+    if verbose:
+        emit("kernels/gcd_score", us, f"allclose={ok}")
+
+    # pq_assign @ (m=16384, n=512, D=64, K=256)
+    Xq = jax.random.normal(key, (16384, 512))
+    cb = jax.random.normal(jax.random.fold_in(key, 3), (64, 256, 8))
+    ok = bool(jnp.all(ops.pq_assign(Xq, cb) == ref.pq_assign_ref(Xq, cb)))
+    us = time_call(jax.jit(lambda x, c: ref.pq_assign_ref(x, c)), Xq, cb)
+    results["pq_assign"] = ok
+    if verbose:
+        emit("kernels/pq_assign", us, f"match={ok}")
+
+    # adc_lookup @ (b=8, D=64, K=256, N=65536)
+    lut = jax.random.normal(key, (8, 64, 256))
+    codes = jax.random.randint(jax.random.fold_in(key, 4), (65536, 64), 0, 256)
+    ok = np.allclose(ops.adc_lookup(lut, codes),
+                     ref.adc_lookup_ref(lut, codes), atol=1e-3)
+    us = time_call(jax.jit(lambda l, c: ref.adc_lookup_ref(l, c)), lut, codes)
+    results["adc_lookup"] = ok
+    if verbose:
+        emit("kernels/adc_lookup", us, f"allclose={ok}")
+
+    # embedding_bag @ (V=100k, dim=64, L=16384)
+    table = jax.random.normal(key, (100_000, 64))
+    idx = jax.random.randint(jax.random.fold_in(key, 5), (16384,), 0, 100_000)
+    bags = jnp.sort(jax.random.randint(jax.random.fold_in(key, 6), (16384,), 0, 2048))
+    got = ops.embedding_bag(table, idx, bags, 2048)
+    want = ref.embedding_bag_ref(table, idx, bags, 2048)
+    ok = np.allclose(got, want, atol=1e-3)
+    us = time_call(jax.jit(
+        lambda t, i, b: ref.embedding_bag_ref(t, i, b, 2048)), table, idx, bags)
+    results["embedding_bag"] = ok
+    if verbose:
+        emit("kernels/embedding_bag", us, f"allclose={ok}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""§Roofline aggregation: read experiments/dryrun/*.json into the 40-cell
+table (arch × shape × mesh → three terms + dominant + useful-compute ratio).
+
+Emits CSV rows and can render the EXPERIMENTS.md markdown table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(verbose: bool = True, dryrun_dir: str = DRYRUN_DIR):
+    recs = load(dryrun_dir)
+    ok = [r for r in recs if r.get("ok")]
+    for r in ok:
+        rep = r["report"]
+        if verbose:
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                f"compute={rep['compute_s']:.3e};memory={rep['memory_s']:.3e};"
+                f"collective={rep['collective_s']:.3e};dominant={rep['dominant']};"
+                f"fraction={rep['roofline_fraction']:.3f};"
+                f"peakGiB={rep['memory']['peak_bytes']/2**30:.2f}",
+            )
+    if verbose:
+        emit("roofline/summary", 0.0,
+             f"cells_ok={len(ok)};cells_failed={len(recs)-len(ok)}")
+    return recs
+
+
+def markdown_table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16") -> str:
+    recs = [r for r in load(dryrun_dir) if r.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | FLOPs/dev | compute s | memory s | collective s |"
+        " dominant | useful ratio | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED:"
+                         f" {r.get('error','?')[:60]} | | | | | | | |")
+            continue
+        rep = r["report"]
+        ratio = rep.get("useful_compute_ratio", float("nan"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rep['flops_per_device']:.2e} |"
+            f" {rep['compute_s']:.2e} | {rep['memory_s']:.2e} |"
+            f" {rep['collective_s']:.2e} | {rep['dominant']} |"
+            f" {ratio:.2f} | {rep['memory']['peak_bytes']/2**30:.2f} |"
+            f" {'yes' if r.get('fits_hbm') else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (+ kernel microbench + roofline
+aggregation). Prints ``name,us_per_call,derived`` CSV. Use
+``--only fig2a,fig4`` to run a subset, ``--fast`` for the CI-sized pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2a,fig2bc,table1,fig4,kernels,roofline")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+
+    if want("fig2a"):
+        from benchmarks import fig2a_convergence
+        _res, checks = fig2a_convergence.run(
+            num=2048 if args.fast else 4096,
+            iters=15 if args.fast else 25)
+        failures += [f"fig2a/{k}" for k, v in checks.items() if not v]
+
+    if want("fig2bc"):
+        from benchmarks import fig2bc_stability
+        _out, stable = fig2bc_stability.run(
+            num=2048 if args.fast else 4096,
+            runs=3 if args.fast else 5,
+            iters=12 if args.fast else 20)
+        if not stable:
+            failures.append("fig2bc/stability")
+
+    if want("table1"):
+        from benchmarks import fig3_table1_e2e
+        _res, checks = fig3_table1_e2e.run(
+            steps=60 if args.fast else 250,
+            warmup=30 if args.fast else 40)
+        failures += [f"table1/{k}" for k, v in checks.items() if not v]
+
+    if want("fig4"):
+        from benchmarks import fig4_runtime
+        _out, checks = fig4_runtime.run(
+            dims=(64, 128, 256) if args.fast else (64, 128, 256, 512))
+        failures += [f"fig4/{k}" for k, v in checks.items() if not v]
+
+    if want("kernels"):
+        from benchmarks import kernels_micro
+        results = kernels_micro.run()
+        failures += [f"kernels/{k}" for k, v in results.items() if not v]
+
+    if want("roofline"):
+        from benchmarks import roofline_table
+        roofline_table.run()
+
+    print(f"# total {time.time()-t0:.1f}s; claim-check failures: "
+          f"{failures if failures else 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""GraphSAGE → trainable PQ index: the paper's technique on GNN embeddings.
+
+GraphSAGE's original unsupervised use produces node embeddings consumed by
+nearest-neighbor retrieval — exactly where the paper's index layer slots in.
+This example trains GraphSAGE on a synthetic community graph, attaches the
+GCD-rotated PQ index to the output embeddings, and measures neighbor-recall
+through the compressed index vs the frozen-rotation baseline.
+
+Run:  PYTHONPATH=src python examples/gnn_index.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import opq, pq
+from repro.data import graph as graph_lib
+from repro.models import gnn
+from repro.training import optimizer as opt_lib
+from repro.training import train_state as ts
+
+
+def main():
+    g = graph_lib.synthetic_graph(0, num_nodes=2000, avg_degree=8, d_feat=32,
+                                  num_classes=8)
+    cfg = gnn.GraphSAGEConfig(name="sage", d_in=32, d_hidden=64,
+                              num_classes=8, sample_sizes=(8, 4))
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt_lib.OptimizerConfig(lr=3e-3, total_steps=120, warmup_steps=10)
+    state = ts.init_state(jax.random.PRNGKey(1), params, ocfg)
+    step = jax.jit(ts.make_train_step(
+        lambda p, h0, h1, h2, y: gnn.loss_minibatch(p, [h0, h1, h2], y, cfg),
+        ocfg))
+
+    for i in range(120):
+        rng = np.random.RandomState(i)
+        seeds = rng.randint(0, g.num_nodes, size=64)
+        feats, labels = graph_lib.sample_blocks(g, seeds, cfg.sample_sizes, i)
+        state, m = step(state, *feats, labels)
+        if i % 30 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+
+    # full-graph node embeddings (classifier input)
+    src, dst = g.edge_list()
+    h = jnp.asarray(g.feats)
+    for l in range(cfg.num_layers):
+        h_n = gnn._aggregate_edges(h, jnp.asarray(src), jnp.asarray(dst),
+                                   g.num_nodes, cfg.aggregator)
+        h = gnn._sage_layer(state.params[f"layer{l}"], h, h_n)
+    print(f"node embeddings: {h.shape}")
+
+    # index the embeddings with GCD rotation vs frozen
+    cfg_pq = pq.PQConfig(8, 32)
+    exact = jnp.argsort(-(h @ h.T), axis=1)[:, 1:11]  # true top-10 neighbors
+    for solver in ("frozen", "gcd_greedy"):
+        R, cb, trace = opq.alternating_minimization(
+            jax.random.PRNGKey(3), h, cfg_pq, iters=15,
+            rotation_solver=solver, inner_steps=5, lr=2e-3)
+        codes = pq.assign(h @ R, cb)
+        lut = pq.adc_lut(h @ R, cb)
+        approx = jnp.argsort(-pq.adc_score(lut, codes), axis=1)[:, 1:11]
+        rec = np.mean([
+            len(set(np.asarray(approx[i]).tolist())
+                & set(np.asarray(exact[i]).tolist())) / 10
+            for i in range(200)
+        ])
+        print(f"{solver:12s} distortion {float(trace[-1]):.4f}  "
+              f"neighbor recall@10 {rec:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: learn a rotation with Givens coordinate descent (paper §3.1).
+
+Generates anisotropic SIFT-like vectors, then compares rotation learners on
+fixed embeddings:
+  * classic OPQ (SVD Procrustes)     — the baseline GCD replaces
+  * GCD-G (greedy, paper Algorithm 1+2)
+  * frozen identity rotation         — lower bound
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import givens, opq, pq
+from repro.data import synthetic
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    X = synthetic.sift_like(key, num=4096, dim=64)
+    cfg = pq.PQConfig(num_subspaces=8, num_codewords=32)
+    print(f"data: {X.shape}, PQ D={cfg.num_subspaces} K={cfg.num_codewords}")
+
+    for solver, kw in [
+        ("frozen", {}),
+        ("svd", {}),
+        ("gcd_greedy", dict(inner_steps=5, lr=2e-3)),
+        ("gcd_steepest", dict(inner_steps=5, lr=2e-3)),
+    ]:
+        R, cb, trace = opq.alternating_minimization(
+            jax.random.PRNGKey(1), X, cfg, iters=25, rotation_solver=solver, **kw
+        )
+        tr = np.asarray(trace)
+        ortho = float(givens.orthogonality_error(R))
+        print(f"{solver:14s} distortion {tr[0]:.4f} → {tr[-1]:.4f}   "
+              f"‖RᵀR−I‖={ortho:.2e}")
+
+    print("\nGCD matches OPQ without a single SVD — and it drops straight "
+          "into an SGD loop (see examples/train_twotower.py).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ANN serving example: build a PQ index with a GCD-learned rotation and
+serve batched maximum-inner-product queries via ADC.
+
+The serving path is exactly the paper's T(X) = φ(XR)Rᵀ deployed as an index:
+  * offline: learn (R, codebooks) with GCD, encode the corpus to uint8 codes
+    (32× compression at D=8 on 64-dim vectors vs f32);
+  * online: per query batch, one LUT build (b·D·K dots) + ADC scan over the
+    corpus (the Pallas adc_lookup kernel's job on TPU).
+
+Run:  PYTHONPATH=src python examples/serve_ann.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import opq, pq
+from repro.data import synthetic
+from repro.kernels import ops
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    N, dim, D, K = 100_000, 64, 16, 256
+    corpus = synthetic.sift_like(key, N, dim)
+    queries = synthetic.sift_like(jax.random.PRNGKey(1), 256, dim)
+
+    print(f"corpus {N}×{dim} (f32: {N*dim*4/2**20:.0f} MiB)")
+    t0 = time.time()
+    R, cb, trace = opq.alternating_minimization(
+        jax.random.PRNGKey(2), corpus[:8192], pq.PQConfig(D, K), iters=15,
+        rotation_solver="gcd_greedy", inner_steps=5, lr=2e-3)
+    print(f"index learned in {time.time()-t0:.1f}s "
+          f"(distortion {float(trace[0]):.3f} → {float(trace[-1]):.3f})")
+
+    codes = pq.assign(corpus @ R, cb).astype(jnp.uint8)
+    print(f"codes: {codes.shape} uint8 ({codes.size/2**20:.0f} MiB — "
+          f"{corpus.size*4/codes.size:.0f}× compression)")
+
+    # --- serve a query batch
+    @jax.jit
+    def serve(q_batch):
+        lut = pq.adc_lut(q_batch @ R, cb)          # (b, D, K)
+        scores = ops.adc_lookup(lut, codes.astype(jnp.int32), use_kernel=False)
+        return jax.lax.top_k(scores, 10)
+
+    scores, top10 = serve(queries)
+    jax.block_until_ready(top10)
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(serve(queries))
+    dt = (time.time() - t0) / 3
+    print(f"served 256 queries × {N} items in {dt*1e3:.1f} ms "
+          f"({256*N/dt/1e9:.2f} G score/s on CPU)")
+
+    # recall@10 vs exact search
+    exact = jnp.argsort(-(queries @ corpus.T), axis=1)[:, :10]
+    rec = np.mean([
+        len(set(np.asarray(top10[i]).tolist())
+            & set(np.asarray(exact[i]).tolist())) / 10
+        for i in range(256)
+    ])
+    print(f"recall@10 vs exact MIPS: {rec:.3f}")
+
+
+if __name__ == "__main__":
+    main()

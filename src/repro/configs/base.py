@@ -1,0 +1,72 @@
+"""Architecture registry scaffolding.
+
+Every assigned architecture ships one module exposing an ``ArchSpec``:
+  * ``make_config()``      — the FULL published config (dry-run only;
+                             exercised via ShapeDtypeStruct, never allocated)
+  * ``make_smoke()``       — a reduced same-family config for CPU smoke tests
+  * ``shapes``             — the arch's own input-shape set (the 40-cell grid)
+  * ``config_for_shape()`` — per-shape config adjustments (e.g. the paper's
+                             PQ KV cache switches on for long_500k; decode
+                             cells use long-context sharding rules)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+
+class Shape(NamedTuple):
+    kind: str            # train | prefill | decode | gnn_full | gnn_minibatch
+    #                      | gnn_graph_batch | recsys_train | recsys_serve
+    #                      | recsys_retrieval
+    params: dict[str, Any]
+
+
+class ArchSpec(NamedTuple):
+    arch_id: str
+    family: str          # lm | gnn | recsys
+    make_config: Callable[[], Any]
+    make_smoke: Callable[[], Any]
+    shapes: dict[str, Shape]
+    adjust: Callable[[Any, str], Any] | None = None  # (cfg, shape_name) -> cfg
+    notes: str = ""
+
+    def config_for_shape(self, shape_name: str):
+        cfg = self.make_config()
+        if self.adjust is not None:
+            cfg = self.adjust(cfg, shape_name)
+        return cfg
+
+
+# The LM-family shape grid (same four shapes for all five LM archs).
+LM_SHAPES = {
+    "train_4k": Shape("train", {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": Shape("prefill", {"seq_len": 32768, "global_batch": 32}),
+    "decode_32k": Shape("decode", {"seq_len": 32768, "global_batch": 128}),
+    # All five assigned LMs are full-attention; dense-cache 500k decode is
+    # memory-infeasible (DESIGN.md §4) — this cell runs the paper technique:
+    # PQ-compressed KV cache with learned GCD rotation, ADC attention.
+    "long_500k": Shape("decode", {"seq_len": 524288, "global_batch": 1,
+                                   "pq_cache": True}),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": Shape("gnn_full", {"n_nodes": 2708, "n_edges": 10556,
+                                        "d_feat": 1433}),
+    "minibatch_lg": Shape("gnn_minibatch", {"n_nodes": 232965,
+                                            "n_edges": 114615892,
+                                            "batch_nodes": 1024,
+                                            "fanout": (15, 10),
+                                            "d_feat": 602}),
+    "ogb_products": Shape("gnn_full", {"n_nodes": 2449029,
+                                       "n_edges": 61859140, "d_feat": 100}),
+    "molecule": Shape("gnn_graph_batch", {"n_nodes": 30, "n_edges": 64,
+                                          "batch": 128, "d_feat": 64}),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": Shape("recsys_train", {"batch": 65536}),
+    "serve_p99": Shape("recsys_serve", {"batch": 512}),
+    "serve_bulk": Shape("recsys_serve", {"batch": 262144}),
+    "retrieval_cand": Shape("recsys_retrieval", {"batch": 1,
+                                                 "n_candidates": 1_000_000}),
+}

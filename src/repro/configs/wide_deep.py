@@ -1,0 +1,33 @@
+"""wide-deep [recsys]: n_sparse=40 embed_dim=32 mlp=1024-512-256
+interaction=concat [arXiv:1606.07792; paper].
+
+1M rows/field × 40 fields = 40M-row fused table, row-sharded over the model
+axis. The paper's technique applies as PQ embedding-table compression (no ANN
+stage in a pure ranker — DESIGN.md §Arch-applicability)."""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.recsys import WideDeepConfig
+
+
+def make_config() -> WideDeepConfig:
+    return WideDeepConfig(
+        name="wide-deep", n_sparse=40, vocab_per_field=1_000_000,
+        embed_dim=32, mlp_dims=(1024, 512, 256),
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+
+
+def make_smoke() -> WideDeepConfig:
+    return WideDeepConfig(
+        name="wide-deep-smoke", n_sparse=6, vocab_per_field=128,
+        embed_dim=8, mlp_dims=(32, 16),
+        dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id="wide-deep", family="recsys", make_config=make_config,
+    make_smoke=make_smoke, shapes=base.RECSYS_SHAPES,
+    notes="Fused 40M-row table; wide = per-id weight table.",
+)

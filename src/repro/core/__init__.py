@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — GCD rotation learning + trainable PQ index.
+
+Modules:
+  givens       Givens rotation math (directional derivs, commuting pair apply)
+  matching     GCD-R / GCD-G / GCD-S pair selection (+ exact DP test oracle)
+  rotation     Trainable SO(n) rotation state & update (Algorithm 2)
+  cayley       Cayley-transform baseline
+  pq           Product quantization (k-means, STE, ADC)
+  opq          OPQ alternating minimization + fixed-embedding harness (Fig 2)
+  index_layer  T(X) = φ(XR)Rᵀ trainable index layer (Fig 1)
+  kv_quant     PQ-compressed KV cache (paper technique on LM attention)
+"""
+from repro.core import (  # noqa: F401
+    cayley,
+    givens,
+    index_layer,
+    kv_quant,
+    matching,
+    opq,
+    pq,
+    rotation,
+)

@@ -1,0 +1,41 @@
+"""Cayley-transform rotation baseline (paper §1.1, compared in §3).
+
+R(A) = (I − A)(I + A)⁻¹ with A skew-symmetric, parameterized by the strict
+lower triangle of an (n, n) matrix. Differentiable end-to-end, but every
+evaluation costs an n×n linear solve that does not parallelize on
+GPU/TPU — the paper's (and our) motivation for GCD. Numerically unstable
+near rotations with −1 eigenvalues (noted in §1.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def skew_from_params(params: jax.Array) -> jax.Array:
+    """Antisymmetrize: A = tril(params, -1) − tril(params, -1)ᵀ."""
+    L = jnp.tril(params, -1)
+    return L - L.T
+
+
+def cayley(params: jax.Array) -> jax.Array:
+    """R = (I − A)(I + A)⁻¹ ∈ SO(n). Solved as (I + A)ᵀ x = (I − A)ᵀ row-wise."""
+    A = skew_from_params(params)
+    n = A.shape[0]
+    I = jnp.eye(n, dtype=A.dtype)
+    # solve (I + A) R = (I − A)  =>  R = (I + A)^{-1} (I − A); both orderings
+    # give an orthogonal matrix since (I−A) and (I+A)^{-1} commute.
+    return jnp.linalg.solve(I + A, I - A)
+
+
+def inverse_cayley(R: jax.Array) -> jax.Array:
+    """A with cayley(A) == R (valid when I + R is invertible): A = (I−R)(I+R)⁻¹."""
+    n = R.shape[0]
+    I = jnp.eye(n, dtype=R.dtype)
+    A = jnp.linalg.solve((I + R).T, (I - R).T).T
+    return jnp.tril(A, -1)  # params form
+
+
+def init(n: int, dtype=jnp.float32) -> jax.Array:
+    """Identity rotation: A = 0."""
+    return jnp.zeros((n, n), dtype=dtype)

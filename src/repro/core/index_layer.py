@@ -1,0 +1,101 @@
+"""The paper's trainable embedding-index layer:  T(X) = φ(X·R)·Rᵀ  (§2.1).
+
+Sits at the top of the item tower of a two-tower retrieval model (Fig 1).
+Forward rotates the batch into the PQ-friendly basis, product-quantizes with
+a straight-through estimator, and rotates back, so downstream retrieval loss
+sees (a differentiable surrogate of) exactly what the serving index returns.
+
+Parameters:
+  * ``rot``: RotationState — updated by GCD (never by the inner optimizer).
+  * ``codebooks``: (D, K, sub) — trained by the distortion loss (plain SGD
+    path) or by streaming EMA.
+
+The total loss (Eq. 1) is  L_ret(T(X)) + (1/m)·‖XR − φ(XR)‖².
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import opq, pq
+
+
+class IndexLayerConfig(NamedTuple):
+    dim: int
+    num_subspaces: int = 8
+    num_codewords: int = 256
+    distortion_weight: float = 1.0
+
+    @property
+    def pq_cfg(self) -> pq.PQConfig:
+        return pq.PQConfig(self.num_subspaces, self.num_codewords)
+
+
+class IndexLayerParams(NamedTuple):
+    """R is a plain array so the whole tree is jax.grad-able; the GCD
+    accumulator state (step counter, preconditioners) lives in the optimizer
+    (training.optimizer treats any leaf named 'R'/'rot_*' as a manifold
+    parameter and applies Algorithm 2 instead of Adam)."""
+
+    R: jax.Array
+    codebooks: jax.Array
+
+
+def init(key: jax.Array, cfg: IndexLayerConfig, dtype=jnp.float32) -> IndexLayerParams:
+    n, sub = cfg.dim, cfg.dim // cfg.num_subspaces
+    cb = 0.01 * jax.random.normal(
+        key, (cfg.num_subspaces, cfg.num_codewords, sub), dtype=dtype
+    )
+    return IndexLayerParams(R=jnp.eye(n, dtype=dtype), codebooks=cb)
+
+
+def warm_start(
+    key: jax.Array,
+    X: jax.Array,
+    cfg: IndexLayerConfig,
+    opq_iters: int = 200,
+    kmeans_iters: int = 1,
+) -> IndexLayerParams:
+    """Paper §3.2 setup: run OPQ on a warm-up sample to initialize R and the
+    codebooks before joint training starts."""
+    R, cb, _ = opq.opq(key, X, cfg.pq_cfg, iters=opq_iters, kmeans_iters=kmeans_iters)
+    return IndexLayerParams(R=R, codebooks=cb)
+
+
+def apply(params: IndexLayerParams, X: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """T(X) = φ(XR)Rᵀ with STE; returns (T(X), distortion scalar).
+
+    Gradients: ∂/∂X flows straight-through φ and through both rotations;
+    ∂/∂codebooks comes from the distortion term; ∂/∂R is consumed by the GCD
+    update outside (the caller differentiates wrt ``params.R``).
+    """
+    R = params.R
+    XR = X @ R
+    q = pq.quantize_ste(XR, params.codebooks)
+    out = q @ R.T
+    dist = pq.distortion(XR, params.codebooks)
+    return out, dist
+
+
+def apply_no_ste(params: IndexLayerParams, X: jax.Array) -> jax.Array:
+    """Serving-path forward: hard quantization, no gradient bridging."""
+    R = params.R
+    return pq.quantize(X @ R, params.codebooks) @ R.T
+
+
+def encode(params: IndexLayerParams, X: jax.Array) -> jax.Array:
+    """Index-build path: item codes (m, D) for the serving index."""
+    return pq.assign(X @ params.R, params.codebooks)
+
+
+def adc_scores(params: IndexLayerParams, queries: jax.Array,
+               codes: jax.Array) -> jax.Array:
+    """Serving-path ADC scoring: (b, n) queries × (N, D) codes -> (b, N).
+
+    Inner-product scores in the rotated space equal scores in the original
+    space because R is orthogonal: ⟨q, φ(xR)Rᵀ⟩ = ⟨qR, φ(xR)⟩.
+    """
+    lut = pq.adc_lut(queries @ params.R, params.codebooks)
+    return pq.adc_score(lut, codes)

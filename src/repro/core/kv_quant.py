@@ -1,0 +1,191 @@
+"""PQ-compressed KV cache with a learned (GCD) rotation — the paper's
+embedding-index layer transplanted onto LM attention (beyond-paper feature,
+see DESIGN.md §4).
+
+Keys/values are quantized **per head vector** (head_dim-dim) with a per-layer
+rotation R ∈ SO(head_dim) and per-layer codebooks, exactly the T(X)=φ(XR)Rᵀ
+structure of the paper. Decode-time attention never dequantizes the cache
+into dense form:
+
+  * scores:  q·k̂ᵀ = Σ_d LUT[d, code_d]         (ADC, one gather per subspace)
+  * output:  Σ_s w_s·v̂_s = Σ_{d,k} H[d,k]·C_v[d,k]  with the weight histogram
+             H[d,k] = Σ_{s: code_s,d = k} w_s   (scatter-add + tiny matmul)
+
+Memory: head_dim·2 bytes → D bytes per vector (e.g. 128·2B → 16B at D=16,
+a 16× cut) — this is what makes the 500k-context decode cells feasible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq
+
+
+class KVQuantConfig(NamedTuple):
+    head_dim: int
+    num_subspaces: int = 16
+    num_codewords: int = 256
+
+    @property
+    def sub(self) -> int:
+        return self.head_dim // self.num_subspaces
+
+    @property
+    def pq_cfg(self) -> pq.PQConfig:
+        return pq.PQConfig(self.num_subspaces, self.num_codewords)
+
+
+class KVQuantParams(NamedTuple):
+    """Per-layer parameters (no leading layer axis; stack outside)."""
+
+    rot_k: jax.Array  # (hd, hd)
+    rot_v: jax.Array  # (hd, hd)
+    cb_k: jax.Array   # (D, K, sub)
+    cb_v: jax.Array   # (D, K, sub)
+
+
+def init(key: jax.Array, cfg: KVQuantConfig, dtype=jnp.float32) -> KVQuantParams:
+    k1, k2 = jax.random.split(key)
+    hd, D, K, sub = cfg.head_dim, cfg.num_subspaces, cfg.num_codewords, cfg.sub
+    return KVQuantParams(
+        rot_k=jnp.eye(hd, dtype=dtype),
+        rot_v=jnp.eye(hd, dtype=dtype),
+        cb_k=0.02 * jax.random.normal(k1, (D, K, sub), dtype=dtype),
+        cb_v=0.02 * jax.random.normal(k2, (D, K, sub), dtype=dtype),
+    )
+
+
+def _flatten_heads(x: jax.Array) -> tuple[jax.Array, tuple]:
+    """(..., hd) -> (prod(...), hd) plus the lead shape for unflattening."""
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def encode_kv(params: KVQuantParams, k: jax.Array, v: jax.Array):
+    """Quantize key/value tensors (..., hd) -> codes (..., D) uint8/int32."""
+    dt = pq.PQConfig(params.cb_k.shape[0], params.cb_k.shape[1]).code_dtype()
+    kf, lead = _flatten_heads(k)
+    vf, _ = _flatten_heads(v)
+    ck = pq.assign(kf @ params.rot_k, params.cb_k).astype(dt)
+    cv = pq.assign(vf @ params.rot_v, params.cb_v).astype(dt)
+    D = params.cb_k.shape[0]
+    return ck.reshape(*lead, D), cv.reshape(*lead, D)
+
+
+def decode_k(params: KVQuantParams, codes: jax.Array) -> jax.Array:
+    """Codes (..., D) -> dense keys (..., hd): k̂ = decode(c)·Rᵀ."""
+    lead = codes.shape[:-1]
+    flat = pq.decode(codes.reshape(-1, codes.shape[-1]).astype(jnp.int32), params.cb_k)
+    return (flat @ params.rot_k.T).reshape(*lead, params.rot_k.shape[0])
+
+
+def decode_v(params: KVQuantParams, codes: jax.Array) -> jax.Array:
+    lead = codes.shape[:-1]
+    flat = pq.decode(codes.reshape(-1, codes.shape[-1]).astype(jnp.int32), params.cb_v)
+    return (flat @ params.rot_v.T).reshape(*lead, params.rot_v.shape[0])
+
+
+def adc_scores(params: KVQuantParams, q: jax.Array, k_codes: jax.Array) -> jax.Array:
+    """q (..., hd) vs key codes (..., S, D) -> scores (..., S).
+
+    ⟨q, k̂⟩ = ⟨qR, decode(c)⟩ = Σ_d LUT[d, c_d] with LUT = split(qR)·C_kᵀ.
+    Leading axes of q and k_codes must broadcast-match (e.g. (B, H) each).
+    """
+    D, K, _ = params.cb_k.shape
+    qr = q @ params.rot_k  # rotate query into PQ basis
+    lut = jnp.einsum("...ds,dks->...dk", pq.split(qr, D), params.cb_k)  # (..., D, K)
+    # gather: out[..., s] = sum_d lut[..., d, codes[..., s, d]], accumulated
+    # with a scan over the D subspaces so the peak gather buffer is O(S)
+    # instead of O(S·D·rep) — at S=524288 the all-D gather costs GiBs/device
+    # (the Pallas adc_lookup kernel tiles a one-hot matmul instead; this is
+    # the XLA-safe reference path).
+    codes_t = jnp.swapaxes(k_codes.astype(jnp.int32), -1, -2)  # (..., D, S)
+    lut_d = jnp.moveaxis(lut, -2, 0)      # (D, ..., K)
+    codes_d = jnp.moveaxis(codes_t, -2, 0)  # (D, ..., S)
+
+    def add_one(acc, dl):
+        l_d, c_d = dl
+        return acc + jnp.take_along_axis(l_d, c_d, axis=-1), None
+
+    S = k_codes.shape[-2]
+    lead = jnp.broadcast_shapes(lut.shape[:-2], k_codes.shape[:-2])
+    acc0 = jnp.zeros((*lead, S), lut.dtype)
+    out, _ = jax.lax.scan(add_one, acc0, (lut_d, codes_d))
+    return out
+
+
+def weighted_value_sum(params: KVQuantParams, w: jax.Array,
+                       v_codes: jax.Array) -> jax.Array:
+    """Σ_s w[..., s] · v̂[..., s, :] without dequantizing the cache.
+
+    H[..., d, k] = Σ_{s: code=k} w_s  (histogram), out = Σ_{d,k} H·C_v[d,k]
+    concatenated over d.  w: (..., S), v_codes: (..., S, D) -> (..., hd).
+    """
+    D, K, sub = params.cb_v.shape
+    S = w.shape[-1]
+    lead = w.shape[:-1]
+    # scatter-add the weights into (D, K) histograms. GQA repetition: the
+    # rep axis of w shares one set of codes — vmap with codes held constant
+    # instead of broadcasting them (a materialized int32 broadcast costs
+    # rep × S × D × 4 bytes: ~5 GiB at the 500k-context decode shape).
+    code_lead = v_codes.shape[:-2]
+    rep_shape = lead[len(code_lead):]       # extra axes w has beyond codes
+    wf = w.reshape(-1, *rep_shape, S).reshape(
+        -1, int(np.prod(rep_shape, dtype=int)) if rep_shape else 1, S)
+    cf = v_codes.astype(jnp.int32).reshape(-1, S, D)
+
+    def one_hist(wb, cb):  # wb (R, S), cb (S, D) -> (R, D, K)
+        def per_rep(wr):
+            return jax.vmap(
+                lambda col: jax.ops.segment_sum(wr, col, num_segments=K),
+                in_axes=1,
+            )(cb)
+        return jax.vmap(per_rep)(wb)
+
+    hist = jax.vmap(one_hist)(wf, cf).reshape(*lead, D, K)
+    parts = jnp.einsum("...dk,dks->...ds", hist, params.cb_v)  # (..., D, sub)
+    out = parts.reshape(*parts.shape[:-2], D * sub)
+    return out @ params.rot_v.T  # rotate back out of the PQ basis
+
+
+def adc_decode_attention(
+    params: KVQuantParams,
+    q: jax.Array,          # (B, H, hd) single-step query
+    k_codes: jax.Array,    # (B, H_kv, S, D)
+    v_codes: jax.Array,    # (B, H_kv, S, D)
+    length_mask: jax.Array | None = None,  # (B, S) bool, True = valid
+    scale: float | None = None,
+) -> jax.Array:
+    """One decode step of attention entirely in the compressed domain.
+
+    Supports GQA: H query heads read from H_kv cache heads (H % H_kv == 0).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    H_kv = k_codes.shape[1]
+    rep = H // H_kv
+    scale = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(B, H_kv, rep, hd)
+    # scores: (B, H_kv, rep, S)
+    scores = adc_scores(params, qg, k_codes[:, :, None]) * scale
+    if length_mask is not None:
+        scores = jnp.where(length_mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    # v_codes passed WITHOUT the rep axis: the histogram vmap shares one set
+    # of codes across the rep heads (no broadcast materialization).
+    out = weighted_value_sum(params, w, v_codes)  # (B, H_kv, rep, hd)
+    return out.reshape(B, H, hd)
+
+
+def kv_distortion(params: KVQuantParams, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Distortion loss on sampled K/V vectors — the Eq.(1) second term for the
+    KV index; drives codebook SGD training and supplies ∇_R for GCD."""
+    kf, _ = _flatten_heads(k)
+    vf, _ = _flatten_heads(v)
+    dk = pq.distortion(kf @ params.rot_k, params.cb_k)
+    dv = pq.distortion(vf @ params.rot_v, params.cb_v)
+    return dk + dv

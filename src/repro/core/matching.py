@@ -1,0 +1,251 @@
+"""Coordinate-pair selection for Givens coordinate descent (paper §2.3).
+
+Given the antisymmetric directional-derivative matrix ``A`` (from
+``givens.directional_derivs``), select ``n//2`` disjoint axis pairs — a
+perfect matching on the complete graph over the n coordinate axes — by one
+of the paper's three strategies:
+
+  * GCD-R  ``random_matching``   O(n)        shuffle + pair consecutively
+  * GCD-G  ``greedy_matching``   O(n² log n) sort |A|, greedy disjoint scan
+  * GCD-S  ``steepest_matching`` greedy + vectorized 2-opt refinement
+           (TPU surrogate for the O(n³) serial blossom the paper itself
+           brackets as impractical; see DESIGN.md §2). ``exact_matching_dp``
+           is the exact bitmask-DP oracle for small n used in tests.
+
+Also the paper's *overlapping* ablations (§3.1): top-k edge selection
+without the disjointness constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def random_matching(key: jax.Array, n: int):
+    """GCD-R: uniformly random perfect matching over {0..n-1}."""
+    perm = jax.random.permutation(key, n)
+    p = n // 2
+    return perm[:p], perm[p : 2 * p]
+
+
+@functools.partial(jax.jit, static_argnames=("max_edges",))
+def greedy_matching(A: jax.Array, max_edges: int | None = None):
+    """GCD-G (Algorithm 1): greedy bipartite matching on |A|.
+
+    Sorts all i<j edges by |A_ij| descending and takes an edge whenever both
+    endpoints are still free. On the complete graph this always completes a
+    perfect matching after at most n²/2 inspected edges; the while_loop exits
+    as soon as n//2 pairs are found.
+    """
+    n = A.shape[0]
+    p = n // 2
+    w = jnp.abs(A)
+    ii = jnp.arange(n)
+    upper = ii[:, None] < ii[None, :]
+    flat = jnp.where(upper, w, -jnp.inf).reshape(-1)
+    order = jnp.argsort(-flat)  # descending edge indices into n*n
+    n_edges = order.shape[0] if max_edges is None else max_edges
+
+    def cond(state):
+        t, count, _, _, _ = state
+        return (count < p) & (t < n_edges)
+
+    def body(state):
+        t, count, used, pi, pj = state
+        e = order[t]
+        i, j = e // n, e % n
+        take = (~used[i]) & (~used[j])
+        used = used.at[i].set(used[i] | take).at[j].set(used[j] | take)
+        slot = jnp.where(take, count, p)  # p = scratch slot
+        pi = pi.at[slot].set(jnp.where(take, i, pi[slot]))
+        pj = pj.at[slot].set(jnp.where(take, j, pj[slot]))
+        return t + 1, count + take.astype(jnp.int32), used, pi, pj
+
+    state = (
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((n,), dtype=bool),
+        jnp.zeros((p + 1,), dtype=jnp.int32),
+        jnp.zeros((p + 1,), dtype=jnp.int32),
+    )
+    _, _, _, pi, pj = jax.lax.while_loop(cond, body, state)
+    return pi[:p], pj[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("edges_per_round",))
+def greedy_matching_fast(A: jax.Array, edges_per_round: int | None = None):
+    """Exact-equivalent GCD-G matching in vectorized ROUNDS (beyond-paper).
+
+    ``greedy_matching`` scans the sorted edge list one edge at a time —
+    up to n²/2 sequential while-loop steps (~160 ms at n=512 on CPU; the
+    matching typically completes only near the end of the list because the
+    LAST pair's edge can rank anywhere). This variant exploits a structural
+    fact: restricting greedy to the currently-FREE nodes and re-sorting
+    yields exactly the same matching (edges touching used nodes are skipped
+    by greedy anyway, and relative order among free-free edges is
+    unchanged). So each round (a) masks used nodes out of the score matrix,
+    (b) re-sorts — fully vectorized, (c) scans only the top ``8n`` edges.
+    Every round matches ≥1 pair (the best free-free edge is always taken),
+    and empirically 1–3 rounds complete the matching: the serial scan
+    shrinks from O(n²) to O(n) steps per round.
+    """
+    n = A.shape[0]
+    p = n // 2
+    m = min(edges_per_round or 8 * n, n * n)  # top_k k must fit n² edges
+    w0 = jnp.abs(A)
+    ii = jnp.arange(n)
+    upper = ii[:, None] < ii[None, :]
+
+    def cond(state):
+        count, _, _, _ = state
+        return count < p
+
+    def round_body(state):
+        count, used, pi, pj = state
+        free = ~used
+        mask = upper & free[:, None] & free[None, :]
+        flat = jnp.where(mask, w0, -jnp.inf).reshape(-1)
+        _, order = jax.lax.top_k(flat, m)  # vectorized global sort prefix
+
+        def step(carry, e):
+            count, used, pi, pj = carry
+            i, j = e // n, e % n
+            ok = (~used[i]) & (~used[j]) & (i != j)
+            used = used.at[i].set(used[i] | ok).at[j].set(used[j] | ok)
+            slot = jnp.where(ok, count, p)
+            pi = pi.at[slot].set(jnp.where(ok, i, pi[slot]))
+            pj = pj.at[slot].set(jnp.where(ok, j, pj[slot]))
+            return (count + ok.astype(jnp.int32), used, pi, pj), None
+
+        (count, used, pi, pj), _ = jax.lax.scan(step, (count, used, pi, pj), order)
+        return count, used, pi, pj
+
+    state = (
+        jnp.int32(0), jnp.zeros((n,), bool),
+        jnp.zeros((p + 1,), jnp.int32), jnp.zeros((p + 1,), jnp.int32),
+    )
+    count, used, pi, pj = jax.lax.while_loop(cond, round_body, state)
+    return pi[:p], pj[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def two_opt_refine(A: jax.Array, pi: jax.Array, pj: jax.Array, sweeps: int = 16):
+    """Vectorized 2-opt: repeatedly apply the single best pair-swap.
+
+    For pairs (i₁,j₁), (i₂,j₂) consider rewirings (i₁,i₂),(j₁,j₂) and
+    (i₁,j₂),(j₁,i₂); take the globally best improving swap each sweep.
+    Monotonically increases total |A| weight, so the result dominates the
+    greedy matching it starts from (our GCD-S surrogate).
+    """
+    w = jnp.abs(A)
+    p = pi.shape[0]
+
+    def sweep(_, state):
+        pi, pj = state
+        cur = w[pi, pj]  # (p,)
+        pair_w = cur[:, None] + cur[None, :]
+        alt1 = w[pi[:, None], pi[None, :]] + w[pj[:, None], pj[None, :]]
+        alt2 = w[pi[:, None], pj[None, :]] + w[pj[:, None], pi[None, :]]
+        gain = jnp.maximum(alt1, alt2) - pair_w
+        eye = jnp.eye(p, dtype=bool)
+        gain = jnp.where(eye, -jnp.inf, gain)
+        idx = jnp.argmax(gain)
+        a, b = idx // p, idx % p
+        use1 = alt1[a, b] >= alt2[a, b]
+        improving = gain[a, b] > 1e-12
+        # new pair a: (pi[a], pi[b] or pj[b]); new pair b: (pj[a], pj[b] or pi[b])
+        na_j = jnp.where(use1, pi[b], pj[b])
+        nb_j = jnp.where(use1, pj[b], pi[b])
+        new_pi = pi.at[b].set(pj[a])
+        new_pj = pj.at[a].set(na_j).at[b].set(nb_j)
+        pi = jnp.where(improving, new_pi, pi)
+        pj = jnp.where(improving, new_pj, pj)
+        return pi, pj
+
+    pi, pj = jax.lax.fori_loop(0, sweeps, sweep, (pi, pj))
+    return pi, pj
+
+
+def steepest_matching(A: jax.Array, sweeps: int = 16):
+    """GCD-S surrogate: greedy matching + 2-opt refinement (see DESIGN.md)."""
+    pi, pj = greedy_matching(A)
+    return two_opt_refine(A, pi, pj, sweeps=sweeps)
+
+
+def overlapping_topk(A: jax.Array, k: int | None = None):
+    """Paper §3.1 ablation: top-k |A| edges WITHOUT disjointness.
+
+    Returned pairs may share axes, so they do not commute; callers must apply
+    them sequentially (see rotation.apply_overlapping).
+    """
+    n = A.shape[0]
+    k = n // 2 if k is None else k
+    ii = jnp.arange(n)
+    upper = ii[:, None] < ii[None, :]
+    flat = jnp.where(upper, jnp.abs(A), -jnp.inf).reshape(-1)
+    _, idx = jax.lax.top_k(flat, k)
+    return idx // n, idx % n
+
+
+def overlapping_random(key: jax.Array, n: int, k: int | None = None):
+    """Random k edges (with possible overlap) — the GCD-R overlapping ablation."""
+    k = n // 2 if k is None else k
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, (k,), 0, n)
+    # force j != i by sampling an offset in [1, n)
+    off = jax.random.randint(kj, (k,), 1, n)
+    j = (i + off) % n
+    lo, hi = jnp.minimum(i, j), jnp.maximum(i, j)
+    return lo, hi
+
+
+def exact_matching_dp(A: np.ndarray):
+    """Exact max-weight perfect matching via bitmask DP (test oracle, n ≤ 16).
+
+    dp[mask] = best total |A|-weight perfectly matching the set bits of mask.
+    O(2ⁿ·n²) — numpy/python only, never jitted.
+    """
+    w = np.abs(np.asarray(A))
+    n = w.shape[0]
+    assert n % 2 == 0 and n <= 16, "oracle is for small even n"
+    full = (1 << n) - 1
+    NEG = -np.inf
+    dp = np.full(1 << n, NEG)
+    choice = np.full((1 << n, 2), -1, dtype=np.int64)
+    dp[0] = 0.0
+    for mask in range(1 << n):
+        if dp[mask] == NEG:
+            continue
+        # find first free axis
+        i = 0
+        while i < n and (mask >> i) & 1:
+            i += 1
+        if i == n:
+            continue
+        for j in range(i + 1, n):
+            if (mask >> j) & 1:
+                continue
+            nm = mask | (1 << i) | (1 << j)
+            val = dp[mask] + w[i, j]
+            if val > dp[nm]:
+                dp[nm] = val
+                choice[nm] = (i, j)
+    # backtrack
+    pairs = []
+    mask = full
+    while mask:
+        i, j = choice[mask]
+        pairs.append((int(i), int(j)))
+        mask &= ~((1 << int(i)) | (1 << int(j)))
+    pairs = pairs[::-1]
+    pi = np.array([a for a, _ in pairs], dtype=np.int32)
+    pj = np.array([b for _, b in pairs], dtype=np.int32)
+    return pi, pj, float(dp[full])
+
+
+def matching_weight(A, pi, pj) -> jax.Array:
+    """Total |A| weight of a matching — comparison metric in tests/benches."""
+    return jnp.sum(jnp.abs(jnp.asarray(A)[pi, pj]))

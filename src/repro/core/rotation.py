@@ -1,0 +1,170 @@
+"""Trainable SO(n) rotation via Givens coordinate descent (paper Algorithm 2).
+
+``GCDRotation`` owns the rotation matrix R and performs projection-free
+manifold updates:
+
+    G  = ∇_R L                      (ordinary backprop gradient)
+    A  = GᵀR − RᵀG                  (directional derivatives, Prop. 1)
+    (pi, pj) ← select n/2 disjoint pairs   (GCD-R / GCD-G / GCD-S)
+    θℓ = −λ · A[iℓ, jℓ] / √2
+    R  ← R · ∏ℓ R_{iℓ jℓ}(θℓ)       (commuting block update, O(n²))
+
+R stays exactly orthogonal at every step (up to fp rounding) — no SVD, no
+matrix exponential, no Cayley solve.
+
+The optional diagonal preconditioners (adagrad / adam over the (n, n)
+directional-derivative field) implement the paper's remark that GCD "can be
+easily integrated with standard neural network training algorithms, such as
+Adagrad and Adam".
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import givens, matching
+
+METHODS = ("random", "greedy", "steepest", "overlap_greedy", "overlap_random")
+
+
+class RotationState(NamedTuple):
+    """State of the trainable rotation."""
+
+    R: jax.Array              # (n, n) current rotation, in SO(n)
+    step: jax.Array           # int32 step counter
+    accum: jax.Array          # (n, n) preconditioner 1st accumulator (adagrad/adam-m)
+    accum2: jax.Array         # (n, n) adam-v accumulator (unused for adagrad)
+
+
+def init(n: int, dtype=jnp.float32) -> RotationState:
+    return RotationState(
+        R=jnp.eye(n, dtype=dtype),
+        step=jnp.int32(0),
+        accum=jnp.zeros((n, n), dtype=jnp.float32),
+        accum2=jnp.zeros((n, n), dtype=jnp.float32),
+    )
+
+
+def init_from(R: jax.Array) -> RotationState:
+    n = R.shape[0]
+    return RotationState(
+        R=R,
+        step=jnp.int32(0),
+        accum=jnp.zeros((n, n), dtype=jnp.float32),
+        accum2=jnp.zeros((n, n), dtype=jnp.float32),
+    )
+
+
+def _precondition(state: RotationState, A: jax.Array, preconditioner: str,
+                  beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8):
+    """Optionally rescale the directional-derivative field elementwise."""
+    if preconditioner == "none":
+        return A, state.accum, state.accum2
+    t = state.step.astype(jnp.float32) + 1.0
+    if preconditioner == "adagrad":
+        acc = state.accum + jnp.square(A)
+        Ahat = A / (jnp.sqrt(acc) + eps)
+        return Ahat, acc, state.accum2
+    if preconditioner == "adam":
+        m = beta1 * state.accum + (1.0 - beta1) * A
+        v = beta2 * state.accum2 + (1.0 - beta2) * jnp.square(A)
+        mhat = m / (1.0 - beta1**t)
+        vhat = v / (1.0 - beta2**t)
+        Ahat = mhat / (jnp.sqrt(vhat) + eps)
+        return Ahat, m, v
+    raise ValueError(f"unknown preconditioner {preconditioner!r}")
+
+
+def gcd_step(
+    R: jax.Array,
+    G: jax.Array,
+    accum: jax.Array,
+    accum2: jax.Array,
+    step: jax.Array,
+    lr: float | jax.Array,
+    key: jax.Array,
+    *,
+    method: str = "greedy",
+    preconditioner: str = "none",
+    sweeps: int = 16,
+):
+    """Functional core of Algorithm 2 — vmappable over stacked rotations
+    (e.g. the per-layer KV rotations (L, hd, hd)). Returns
+    (R_new, accum, accum2)."""
+    n = R.shape[0]
+    state = RotationState(R=R, step=step, accum=accum, accum2=accum2)
+    A = givens.directional_derivs(G.astype(jnp.float32), R.astype(jnp.float32))
+    Ahat, acc, acc2 = _precondition(state, A, preconditioner)
+
+    if method == "random":
+        pi, pj = matching.random_matching(key, n)
+    elif method == "greedy":
+        # exact-equivalent vectorized-rounds variant: ~12× faster at n=512
+        # than the one-edge-at-a-time scan (see matching.greedy_matching_fast)
+        pi, pj = matching.greedy_matching_fast(Ahat)
+    elif method == "steepest":
+        pi, pj = matching.steepest_matching(Ahat, sweeps=sweeps)
+    elif method == "overlap_greedy":
+        pi, pj = matching.overlapping_topk(Ahat)
+    elif method == "overlap_random":
+        pi, pj = matching.overlapping_random(key, n)
+    else:
+        raise ValueError(f"unknown GCD method {method!r}")
+
+    theta = -jnp.asarray(lr, jnp.float32) * Ahat[pi, pj] / givens.SQRT2
+    if method.startswith("overlap"):
+        R_new = apply_overlapping(R, pi, pj, theta)
+    else:
+        R_new = givens.apply_pair_rotations(R, pi, pj, theta.astype(R.dtype))
+    return R_new, acc, acc2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "preconditioner", "sweeps")
+)
+def update(
+    state: RotationState,
+    G: jax.Array,
+    lr: float | jax.Array,
+    key: jax.Array,
+    *,
+    method: str = "greedy",
+    preconditioner: str = "none",
+    sweeps: int = 16,
+) -> RotationState:
+    """One GCD step. ``G`` is the plain gradient ∇_R L (already psum'd in
+    data-parallel training). The matching is computed from |A| and the step
+    angle for pair ℓ is −lr · Â[iℓ, jℓ] / √2 (paper Algorithm 2, line 8)."""
+    R_new, acc, acc2 = gcd_step(
+        state.R, G, state.accum, state.accum2, state.step, lr, key,
+        method=method, preconditioner=preconditioner, sweeps=sweeps,
+    )
+    return RotationState(R=R_new, step=state.step + 1, accum=acc, accum2=acc2)
+
+
+def apply_overlapping(R: jax.Array, pi: jax.Array, pj: jax.Array,
+                      theta: jax.Array) -> jax.Array:
+    """Sequentially apply possibly-overlapping rotations (ablation only).
+
+    Overlapping pairs do not commute, so this is a serial fori_loop — the
+    paper's point is precisely that this is both slower and theoretically
+    unsound; we keep it for the §3.1 ablation benchmarks.
+    """
+
+    def body(l, Rc):
+        i, j, t = pi[l], pj[l], theta[l].astype(Rc.dtype)
+        ci, cj = Rc[:, i], Rc[:, j]
+        c, s = jnp.cos(t), jnp.sin(t)
+        Rc = Rc.at[:, i].set(c * ci + s * cj)
+        Rc = Rc.at[:, j].set(c * cj - s * ci)
+        return Rc
+
+    return jax.lax.fori_loop(0, pi.shape[0], body, R)
+
+
+def rotation_grad(loss_fn, R: jax.Array) -> jax.Array:
+    """Convenience: ∇_R loss_fn(R)."""
+    return jax.grad(loss_fn)(R)

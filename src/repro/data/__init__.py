@@ -1,0 +1,2 @@
+"""Data substrate: synthetic generators (matched to the paper's dataset
+statistics), CSR graph + real neighbor sampler, checkpointable pipeline."""

@@ -1,0 +1,121 @@
+"""Graph substrate: CSR storage, synthetic power-law graphs, and the REAL
+neighbor sampler required by the minibatch_lg cell (GraphSAGE fanout 15-10).
+
+The sampler is uniform-with-replacement from each node's CSR adjacency row
+(exactly GraphSAGE's sampler); isolated nodes self-loop. Host-side numpy for
+the data pipeline plus a pure-jax variant (padded adjacency) used inside jit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CSRGraph(NamedTuple):
+    indptr: np.ndarray   # (N+1,)
+    indices: np.ndarray  # (E,)
+    feats: np.ndarray    # (N, F)
+    labels: np.ndarray   # (N,)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.indices.shape[0]
+
+    def edge_list(self):
+        """(src, dst) arrays — src is the neighbor, dst the row node."""
+        dst = np.repeat(np.arange(self.num_nodes), np.diff(self.indptr))
+        return self.indices.copy(), dst
+
+
+def synthetic_graph(seed: int, num_nodes: int, avg_degree: int, d_feat: int,
+                    num_classes: int = 41) -> CSRGraph:
+    """Power-law-ish random graph with community-correlated features/labels."""
+    rng = np.random.RandomState(seed)
+    # preferential-attachment-flavored degree sequence
+    deg = np.minimum(
+        rng.zipf(1.6, size=num_nodes), max(4 * avg_degree, 16)
+    ).astype(np.int64)
+    deg = np.maximum((deg * avg_degree / max(deg.mean(), 1)).astype(np.int64), 1)
+    total = int(deg.sum())
+    comm = rng.randint(0, num_classes, size=num_nodes)
+    # endpoints biased toward same community
+    dst = np.repeat(np.arange(num_nodes), deg)
+    same = rng.rand(total) < 0.6
+    rand_nbr = rng.randint(0, num_nodes, size=total)
+    # same-community neighbor: random node with matching community via shuffle
+    by_comm = {c: np.where(comm == c)[0] for c in range(num_classes)}
+    comm_pick = np.array(
+        [by_comm[comm[d]][rng.randint(len(by_comm[comm[d]]))] for d in dst[same]]
+    ) if same.any() else np.empty(0, np.int64)
+    src = rand_nbr.copy()
+    src[same] = comm_pick
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(num_nodes + 1, np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    indptr = np.cumsum(indptr)
+    centers = rng.randn(num_classes, d_feat).astype(np.float32)
+    feats = centers[comm] + 0.5 * rng.randn(num_nodes, d_feat).astype(np.float32)
+    return CSRGraph(indptr=indptr, indices=src.astype(np.int32),
+                    feats=feats, labels=comm.astype(np.int32))
+
+
+def sample_neighbors_np(graph: CSRGraph, nodes: np.ndarray, fanout: int,
+                        rng: np.random.RandomState) -> np.ndarray:
+    """Uniform-with-replacement CSR sampling: (B,) -> (B, fanout) int32."""
+    starts = graph.indptr[nodes]
+    degs = graph.indptr[nodes + 1] - starts
+    out = np.empty((len(nodes), fanout), np.int32)
+    r = rng.randint(0, 1 << 30, size=(len(nodes), fanout))
+    safe_deg = np.maximum(degs, 1)
+    offs = r % safe_deg[:, None]
+    out[:] = graph.indices[starts[:, None] + offs]
+    out[degs == 0] = nodes[degs == 0, None]  # isolated → self-loop
+    return out
+
+
+def sample_blocks(graph: CSRGraph, seeds: np.ndarray,
+                  fanouts: tuple[int, ...], seed: int):
+    """GraphSAGE minibatch blocks: features at each hop, dense layout.
+
+    Returns [ (B,F), (B,f1,F), (B,f1,f2,F), ... ] ready for
+    models.gnn.minibatch_forward, plus seed labels.
+    """
+    rng = np.random.RandomState(seed)
+    frontier = [seeds.astype(np.int64)]
+    for f in fanouts:
+        flat = frontier[-1].reshape(-1)
+        nbrs = sample_neighbors_np(graph, flat, f, rng)
+        frontier.append(nbrs.reshape(*frontier[-1].shape, f))
+    feats = [jnp.asarray(graph.feats[ids]) for ids in frontier]
+    labels = jnp.asarray(graph.labels[seeds])
+    return feats, labels
+
+
+def padded_adjacency(graph: CSRGraph, max_degree: int):
+    """Dense (N, max_degree) neighbor matrix (−1 padded) + (N,) degrees —
+    the device-resident form used by the pure-jax sampler."""
+    N = graph.num_nodes
+    adj = -np.ones((N, max_degree), np.int32)
+    deg = np.minimum(np.diff(graph.indptr), max_degree).astype(np.int32)
+    for v in range(N):
+        s = graph.indptr[v]
+        adj[v, : deg[v]] = graph.indices[s : s + deg[v]]
+    return jnp.asarray(adj), jnp.asarray(deg)
+
+
+def sample_neighbors_jax(key: jax.Array, adj: jax.Array, deg: jax.Array,
+                         nodes: jax.Array, fanout: int) -> jax.Array:
+    """Pure-jax uniform sampler over the padded adjacency (jit/pjit-safe)."""
+    r = jax.random.randint(key, (*nodes.shape, fanout), 0, 1 << 30)
+    d = jnp.maximum(deg[nodes], 1)[..., None]
+    cols = r % d
+    nbrs = jnp.take_along_axis(adj[nodes], cols, axis=-1)
+    return jnp.where(nbrs >= 0, nbrs, nodes[..., None])

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper's pitch is parallel rotation learning; the hot paths it (and our
+beyond-paper extensions) exercise are:
+
+  givens_rotate   apply n/2 disjoint Givens rotations (plane combine)
+  gcd_score       A = GᵀR − RᵀG fused matmul + antisymmetrize
+  pq_assign       nearest-codeword search fused with argmin epilogue
+  adc_lookup      ADC score scan via the one-hot MXU trick
+  embedding_bag   scalar-prefetch gather + bag-sum (recsys substrate)
+
+``ops`` holds the jit'd wrappers (public API), ``ref`` the pure-jnp oracles.
+All kernels validate on CPU with interpret=True.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: ADC (asymmetric distance computation) score scan.
+
+Scores a query batch against N PQ-coded items: out[b, n] = Σ_d LUT[b, d, c_nd].
+CPU/GPU implementations use SIMD gathers (André et al. 2015); gathers are
+lane-hostile on TPU, so this kernel uses the **one-hot matmul trick**
+(DESIGN.md §2): a (bn, D·K) one-hot expansion of the code tile is contracted
+against the reshaped LUT on the MXU. The one-hot tile lives only in VMEM and
+is rebuilt per grid step — HBM traffic stays at O(N·D + N·b).
+
+Grid (N/bn,): each step scores one item tile against all b queries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+
+
+def _kernel(codes_ref, lut_ref, out_ref, *, K: int):
+    codes = codes_ref[...].astype(jnp.int32)        # (bn, D)
+    lut = lut_ref[...].astype(jnp.float32)          # (b, D, K)
+    b, D, _ = lut.shape
+    bn = codes.shape[0]
+    # one-hot over the K axis: (bn, D, K)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, D, K), 2)
+    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        onehot.reshape(bn, D * K),
+        lut.reshape(b, D * K),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, b)
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def adc_lookup(
+    lut: jax.Array,
+    codes: jax.Array,
+    *,
+    block_n: int = 1024,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """lut (b, D, K) float, codes (N, D) integer  ->  scores (b, N) float32."""
+    b, D, K = lut.shape
+    N = codes.shape[0]
+    bn = min(block_n, N)
+    grid = (cdiv(N, bn),)
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+            pl.BlockSpec((b, D, K), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, b), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut)
+    return out.T

@@ -1,0 +1,30 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True``, which executes the kernel body in
+Python. ``INTERPRET`` flips automatically off-TPU so the same call sites work
+in both environments.
+"""
+from __future__ import annotations
+
+import jax
+
+# interpret=True everywhere except a real TPU backend.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pick_block(dim: int, preferred: int, align: int = 128) -> int:
+    """Largest hardware-aligned block ≤ preferred that does not exceed dim
+    (padded up to ``align`` when dim itself is small)."""
+    if dim <= preferred:
+        return round_up(dim, align) if dim % align else dim
+    b = preferred - (preferred % align) or align
+    return b

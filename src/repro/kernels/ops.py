@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the system calls. Each wrapper:
+  * reshapes/permutes into the kernel's preferred layout,
+  * dispatches to the Pallas kernel (interpret=True off-TPU),
+  * exposes a ``use_kernel=False`` escape hatch to the pure-jnp oracle in
+    ref.py (also used by the allclose tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adc_lookup as _adc
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import gcd_score as _score
+from repro.kernels import givens_rotate as _rot
+from repro.kernels import pq_assign as _assign
+from repro.kernels import ref
+
+
+def _apply_impl(pi, pj, X, theta, use_kernel: bool):
+    c = jnp.cos(theta)
+    s = jnp.sin(theta)
+    lead = X.shape[:-1]
+    n = X.shape[-1]
+    Xf = X.reshape(-1, n)
+    xe = jnp.take(Xf, pi, axis=1)
+    xo = jnp.take(Xf, pj, axis=1)
+    if use_kernel:
+        ye, yo = _rot.givens_rotate(xe, xo, c, s)
+    else:
+        ye, yo = ref.givens_rotate_ref(xe, xo, c, s)
+    Yf = Xf.at[:, pi].set(ye.astype(X.dtype)).at[:, pj].set(yo.astype(X.dtype))
+    return Yf.reshape(*lead, n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _apply_pair_rotations(X, theta, pi, pj, use_kernel):
+    return _apply_impl(pi, pj, X, theta, use_kernel)
+
+
+def _apply_fwd(X, theta, pi, pj, use_kernel):
+    return _apply_impl(pi, pj, X, theta, use_kernel), (X, theta, pi, pj)
+
+
+def _apply_bwd(use_kernel, res, dY):
+    """Pallas calls don't autodiff; the rotation is linear & orthogonal so
+    dX = dY rotated by −θ, and dθ_ℓ = Σ rows ⟨dY, ∂Y/∂θ_ℓ⟩ (plane-local)."""
+    X, theta, pi, pj = res
+    dX = _apply_impl(pi, pj, dY, -theta, use_kernel)
+    c = jnp.cos(theta).astype(X.dtype)
+    s = jnp.sin(theta).astype(X.dtype)
+    xe = jnp.take(X, pi, axis=-1)
+    xo = jnp.take(X, pj, axis=-1)
+    dye = jnp.take(dY, pi, axis=-1)
+    dyo = jnp.take(dY, pj, axis=-1)
+    # y_e = c·x_e + s·x_o ; y_o = c·x_o − s·x_e
+    dtheta = jnp.sum(
+        (dye * (-s * xe + c * xo) + dyo * (-s * xo - c * xe)).astype(jnp.float32),
+        axis=tuple(range(X.ndim - 1)),
+    ).astype(theta.dtype)
+    f0 = lambda a: jnp.zeros(a.shape, jax.dtypes.float0)
+    return dX, dtheta, f0(pi), f0(pj)
+
+
+_apply_pair_rotations.defvjp(_apply_fwd, _apply_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def apply_pair_rotations(X, pi, pj, theta, *, use_kernel: bool = True):
+    """Drop-in for core.givens.apply_pair_rotations backed by the Pallas
+    plane-rotation kernel: permute pair columns adjacent, rotate the even/odd
+    planes in VMEM, scatter back. Differentiable via custom_vjp."""
+    return _apply_pair_rotations(X, theta, pi, pj, use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def gcd_score(G, R, *, use_kernel: bool = True):
+    """A = GᵀR − RᵀG (fused; float32)."""
+    if use_kernel:
+        return _score.gcd_score(G, R)
+    return ref.gcd_score_ref(G, R)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def pq_assign(X, codebooks, *, use_kernel: bool = True):
+    """Nearest-codeword assignment (m, n) -> (m, D) int32."""
+    if use_kernel:
+        return _assign.pq_assign(X, codebooks)
+    return ref.pq_assign_ref(X, codebooks)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def adc_lookup(lut, codes, *, use_kernel: bool = True):
+    """ADC scores (b, D, K) × (N, D) -> (b, N)."""
+    if use_kernel:
+        return _adc.adc_lookup(lut, codes)
+    return ref.adc_lookup_ref(lut, codes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "use_kernel"))
+def embedding_bag(table, indices, bag_ids, num_bags: int, weights=None, *,
+                  use_kernel: bool = True):
+    """EmbeddingBag(sum) -> (num_bags, dim) float32. bag_ids must be sorted."""
+    if use_kernel:
+        return _bag.embedding_bag(table, indices, bag_ids, num_bags, weights)
+    return ref.embedding_bag_ref(table, indices, bag_ids, num_bags, weights)

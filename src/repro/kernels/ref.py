@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>_ref`` is the semantic ground truth: tests sweep shapes/dtypes
+and assert the kernel output is allclose to these. They are also the XLA
+fallback path used on hosts where Pallas lowering is unavailable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def givens_rotate_ref(xe: jax.Array, xo: jax.Array, c: jax.Array, s: jax.Array):
+    """Rotate paired column planes: (m, p) × 2, cos/sin (p,) -> (ye, yo).
+
+    ye = c·xe + s·xo ;  yo = c·xo − s·xe   (column pairs already permuted
+    adjacent by the caller — see core.givens.apply_pair_rotations).
+    """
+    c = c.astype(xe.dtype)[None, :]
+    s = s.astype(xe.dtype)[None, :]
+    return c * xe + s * xo, c * xo - s * xe
+
+
+def gcd_score_ref(G: jax.Array, R: jax.Array) -> jax.Array:
+    """A = M − Mᵀ with M = GᵀR (paper Algorithm 2 line 3)."""
+    M = G.T.astype(jnp.float32) @ R.astype(jnp.float32)
+    return (M - M.T).astype(R.dtype)
+
+
+def pq_assign_ref(X: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Nearest codeword per subspace. X (m, n), codebooks (D, K, sub) -> (m, D)."""
+    D = codebooks.shape[0]
+    m, n = X.shape
+    Xs = X.reshape(m, D, n // D)
+    dots = jnp.einsum("mds,dks->mdk", Xs, codebooks)
+    cn = jnp.sum(jnp.square(codebooks), axis=-1)
+    return jnp.argmin(cn[None] - 2.0 * dots, axis=-1).astype(jnp.int32)
+
+
+def adc_lookup_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """ADC score sum. lut (b, D, K), codes (N, D) -> (b, N)."""
+    D = lut.shape[1]
+    g = lut[:, jnp.arange(D)[None, :], codes.astype(jnp.int32)]  # (b, N, D)
+    return jnp.sum(g, axis=-1)
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array, bag_ids: jax.Array,
+                      num_bags: int, weights: jax.Array | None = None) -> jax.Array:
+    """EmbeddingBag(sum): table (V, dim), flat indices (L,), sorted bag_ids (L,)
+    -> (num_bags, dim). JAX has no native EmbeddingBag — this is the
+    take + segment_sum construction the system uses everywhere."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=num_bags)

@@ -1,0 +1,644 @@
+"""Dry-run cell builders: (architecture × shape × mesh) → a lowerable program.
+
+For every grid cell this module produces:
+  * ``fn``               — the step function (train_step with the FULL
+                           optimizer incl. the GCD update, or a serve path)
+  * ``abstract_inputs``  — ShapeDtypeStruct stand-ins (weak-type-correct,
+                           shardable, zero allocation)
+  * ``in_shardings`` / ``out_shardings`` — resolved from the arch's logical
+                           rule table against the given mesh
+  * ``meta``             — MODEL_FLOPS and cell bookkeeping for §Roofline.
+
+Training cells lower the whole system (fwd + bwd + AdamW + GCD manifold
+update); serve cells lower prefill/decode/scoring with donated caches.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cbase
+from repro.configs import get as get_arch
+from repro.models import gnn, param as param_lib, recsys
+from repro.models import transformer as tfm
+from repro.sharding import rules as sh
+from repro.training import optimizer as opt_lib
+from repro.training import train_state as ts
+
+SDS = jax.ShapeDtypeStruct
+
+
+class Cell(NamedTuple):
+    fn: Any
+    abstract_inputs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _shard(mesh, logical, rules, shape, name="?"):
+    return NamedSharding(mesh, sh.logical_to_spec(logical, rules, mesh, shape, name))
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Abstract param/optimizer trees
+# ---------------------------------------------------------------------------
+
+def abstract_params(spec_tree, param_dtype):
+    return param_lib.abstract_params(spec_tree, param_dtype)
+
+
+def params_shardings(spec_tree, rules, mesh):
+    logical = param_lib.logical_tree(spec_tree)
+    shapes = jax.tree.map(lambda s: s.shape, spec_tree,
+                          is_leaf=param_lib.is_spec)
+    return jax.tree.map(
+        lambda lg, shp: NamedSharding(
+            mesh, sh.logical_to_spec(lg, rules, mesh, shp)),
+        logical, shapes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def abstract_opt_state(aparams, ocfg: opt_lib.OptimizerConfig):
+    adafactor = ocfg.name == "adafactor"
+
+    def mu_leaf(a):
+        if adafactor:
+            return SDS(opt_lib.factored_shapes(a.shape)[0], jnp.float32)
+        return SDS(a.shape, ocfg.moment_dtype)
+
+    def nu_leaf(a):
+        if adafactor:
+            return SDS(opt_lib.factored_shapes(a.shape)[1], jnp.float32)
+        return SDS(a.shape, ocfg.moment_dtype)
+
+    mu = jax.tree.map(mu_leaf, aparams)
+    nu = jax.tree.map(nu_leaf, aparams)
+
+    def rot_leaf(path, a):
+        if opt_lib.is_manifold_path(path):
+            return SDS(a.shape, jnp.float32)
+        return SDS((), jnp.float32)
+
+    ra = jax.tree_util.tree_map_with_path(rot_leaf, aparams)
+    return opt_lib.OptState(mu=mu, nu=nu, rot_acc=ra, rot_acc2=ra,
+                            step=SDS((), jnp.int32))
+
+
+def opt_shardings(spec_tree, rules, mesh, aparams, ocfg):
+    adafactor = ocfg.name == "adafactor"
+    logical = param_lib.logical_tree(spec_tree)
+    is_lg = lambda x: (isinstance(x, tuple)
+                       and all(isinstance(e, (str, type(None))) for e in x))
+
+    def factored_sh(lg, shp, which):
+        if len(shp) >= 2:
+            lg2 = lg[:-1] if which == 0 else lg[:-2] + lg[-1:]
+            shp2 = opt_lib.factored_shapes(shp)[which]
+        else:
+            lg2, shp2 = (lg, shp) if which == 0 else ((), ())
+        return NamedSharding(mesh, sh.logical_to_spec(lg2, rules, mesh, shp2))
+
+    shapes = jax.tree.map(lambda s: s.shape, spec_tree,
+                          is_leaf=param_lib.is_spec)
+    if adafactor:
+        mu = jax.tree.map(lambda lg, s: factored_sh(lg, s, 0), logical,
+                          shapes, is_leaf=is_lg)
+        nu = jax.tree.map(lambda lg, s: factored_sh(lg, s, 1), logical,
+                          shapes, is_leaf=is_lg)
+    else:
+        ps = params_shardings(spec_tree, rules, mesh)
+        mu = nu = ps
+
+    def rot_leaf(path, s):
+        return _repl(mesh)
+
+    ra = jax.tree_util.tree_map_with_path(rot_leaf, aparams)
+    return opt_lib.OptState(mu=mu, nu=nu, rot_acc=ra, rot_acc2=ra,
+                            step=_repl(mesh))
+
+
+def abstract_train_state(spec_tree, param_dtype, ocfg):
+    ap = abstract_params(spec_tree, param_dtype)
+    return ts.TrainState(
+        params=ap,
+        opt_state=abstract_opt_state(ap, ocfg),
+        step=SDS((), jnp.int32),
+        rng=SDS((2,), jnp.uint32),
+    )
+
+
+def train_state_shardings(spec_tree, rules, mesh, param_dtype, ocfg):
+    ap = abstract_params(spec_tree, param_dtype)
+    ps = params_shardings(spec_tree, rules, mesh)
+    return ts.TrainState(
+        params=ps,
+        opt_state=opt_shardings(spec_tree, rules, mesh, ap, ocfg),
+        step=_repl(mesh),
+        rng=_repl(mesh),
+    )
+
+
+def _metrics_shardings(mesh):
+    return {"loss": _repl(mesh), "grad_norm": _repl(mesh), "lr": _repl(mesh)}
+
+
+def _opt_cfg_for(cfg) -> opt_lib.OptimizerConfig:
+    """bf16 Adam moments for the ≥50B archs (memory math in DESIGN.md §6);
+    microbatch accumulation factor comes from the arch config."""
+    big, accum = False, 1
+    if isinstance(cfg, tfm.TransformerConfig):
+        big = tfm.num_params(cfg) > 50e9
+        accum = cfg.train_accum_steps
+    return opt_lib.OptimizerConfig(
+        # ≥50B: Adafactor (factored 2nd moment, no 1st) — Adam's two
+        # params-sized moments + their update copies cannot fit 16 GiB/chip
+        # at 340B/256 chips (DESIGN.md §6). Adafactor's update-RMS clip
+        # replaces global grad-norm clipping (grad_clip=0 avoids one more
+        # params-sized pass).
+        name="adafactor" if big else "adamw",
+        grad_clip=0.0 if big else 1.0,
+        lr=3e-4, moment_dtype=jnp.bfloat16 if big else jnp.float32,
+        compute_dtype=jnp.bfloat16 if big else jnp.float32,
+        accum_steps=accum,
+        accum_dtype=jnp.bfloat16 if big else jnp.float32,
+        gcd_method="greedy", gcd_lr=1e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_train_cell(cfg: tfm.TransformerConfig, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["global_batch"]
+    S = shape.params["seq_len"]
+    ocfg = _opt_cfg_for(cfg)
+    spec_tree = tfm.param_specs(cfg)
+
+    def loss_fn(params, tokens, labels):
+        return tfm.forward_train(params, tokens, labels, cfg)
+
+    pshard = params_shardings(spec_tree, rules, mesh)
+    step = ts.make_train_step(loss_fn, ocfg, grad_shardings=pshard)
+    astate = abstract_train_state(spec_tree, cfg.param_dtype, ocfg)
+    sstate = train_state_shardings(spec_tree, rules, mesh, cfg.param_dtype, ocfg)
+    tok = SDS((B, S), jnp.int32)
+    tok_sh = _shard(mesh, ("act_batch", "act_seq"), rules, (B, S), "tokens")
+    return Cell(
+        fn=step,
+        abstract_inputs=(astate, tok, tok),
+        in_shardings=(sstate, tok_sh, tok_sh),
+        out_shardings=(sstate, _metrics_shardings(mesh)),
+        donate_argnums=(0,),
+        meta={
+            # 6N already covers fwd+bwd; full remat re-runs fwd (~8N/6N)
+            "model_flops": tfm.model_flops_per_token(cfg) * B * S,
+            "kind": "train",
+            # cost_analysis counts while bodies once: dominant nest =
+            # microbatch scan × layer scan (see roofline.analysis)
+            "trips": float(ocfg.accum_steps * cfg.scan_len),
+        },
+    )
+
+
+def _lm_cache_abstract(cfg: tfm.TransformerConfig, B: int, S: int):
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    if cfg.kv_quant is not None:
+        D = cfg.kv_quant.num_subspaces
+        z = SDS((L, B, Hkv, S, D), jnp.uint8)
+        return tfm.PQDecodeCache(k_codes=z, v_codes=z,
+                                 length=SDS((B,), jnp.int32))
+    z = SDS((L, B, Hkv, S, hd), cfg.dtype)
+    return tfm.DecodeCache(k=z, v=z, length=SDS((B,), jnp.int32))
+
+
+def _lm_cache_shardings(cfg, B, S, mesh):
+    rules = cfg.rule_table
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    e = cfg.kv_quant.num_subspaces if cfg.kv_quant is not None else hd
+    spec = _shard(mesh, ("layers", "act_batch", None, "act_kv_seq", None),
+                  rules, (L, B, Hkv, S, e), "kv_cache")
+    length = _repl(mesh)
+    if cfg.kv_quant is not None:
+        return tfm.PQDecodeCache(k_codes=spec, v_codes=spec, length=length)
+    return tfm.DecodeCache(k=spec, v=spec, length=length)
+
+
+def _lm_decode_cell(cfg: tfm.TransformerConfig, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["global_batch"]
+    S = shape.params["seq_len"]
+    spec_tree = tfm.param_specs(cfg)
+    aparams = abstract_params(spec_tree, cfg.param_dtype)
+    pshard = params_shardings(spec_tree, rules, mesh)
+
+    def fn(params, token, cache):
+        return tfm.serve_decode(params, token, cache, cfg)
+
+    tok = SDS((B,), jnp.int32)
+    tok_sh = _shard(mesh, ("act_batch",), rules, (B,), "token")
+    acache = _lm_cache_abstract(cfg, B, S)
+    scache = _lm_cache_shardings(cfg, B, S, mesh)
+    logits_sh = _shard(mesh, ("act_batch", "act_vocab"), rules,
+                       (B, cfg.vocab_size), "logits")
+    # decode attention FLOPs: O(B·Hq·S·hd) per layer + projections
+    attn_flops = (2.0 * B * cfg.num_heads * S * cfg.head_dim * 2  # qk + av
+                  ) * cfg.num_layers
+    return Cell(
+        fn=fn,
+        abstract_inputs=(aparams, tok, acache),
+        in_shardings=(pshard, tok_sh, scache),
+        out_shardings=(logits_sh, scache),
+        donate_argnums=(2,),
+        meta={"model_flops": tfm.model_flops_per_token(cfg) / 3.0 * B
+              + attn_flops,
+              "kind": "decode", "trips": float(cfg.scan_len)},
+    )
+
+
+def _lm_prefill_cell(cfg: tfm.TransformerConfig, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["global_batch"]
+    S = shape.params["seq_len"]
+    spec_tree = tfm.param_specs(cfg)
+    aparams = abstract_params(spec_tree, cfg.param_dtype)
+    pshard = params_shardings(spec_tree, rules, mesh)
+
+    def fn(params, tokens):
+        return tfm.serve_prefill(params, tokens, cfg, max_len=S)
+
+    tok = SDS((B, S), jnp.int32)
+    tok_sh = _shard(mesh, ("act_batch", "act_seq"), rules, (B, S), "tokens")
+    scache = _lm_cache_shardings(cfg, B, S, mesh)
+    logits_sh = _shard(mesh, ("act_batch", "act_vocab"), rules,
+                       (B, cfg.vocab_size), "logits")
+    # causal attention flops: 2 matmuls × B·Hq·S²/2·hd × 2 ops
+    attn = 2.0 * B * cfg.num_heads * (S * S / 2) * cfg.head_dim * 2 * cfg.num_layers
+    return Cell(
+        fn=fn,
+        abstract_inputs=(aparams, tok),
+        in_shardings=(pshard, tok_sh),
+        out_shardings=((logits_sh, scache)),
+        donate_argnums=(),
+        meta={"model_flops": tfm.model_flops_per_token(cfg) / 3.0 * B * S + attn,
+              "kind": "prefill", "trips": float(cfg.scan_len)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_full_cell(cfg: gnn.GraphSAGEConfig, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    n_dev = math.prod(mesh.shape.values())
+    N = _pad_to(shape.params["n_nodes"], 2 * n_dev)
+    E = _pad_to(shape.params["n_edges"], 2 * n_dev)
+    F = shape.params["d_feat"]
+    ocfg = _opt_cfg_for(cfg)
+    spec_tree = gnn.param_specs(cfg)
+
+    def loss_fn(params, feats, src, dst, labels, mask):
+        return gnn.loss_full_batch(params, feats, src, dst, labels, mask, cfg)
+
+    step = ts.make_train_step(
+        loss_fn, ocfg, grad_shardings=params_shardings(spec_tree, rules, mesh))
+    astate = abstract_train_state(spec_tree, cfg.param_dtype, ocfg)
+    sstate = train_state_shardings(spec_tree, rules, mesh, cfg.param_dtype, ocfg)
+    inputs = (
+        SDS((N, F), jnp.float32), SDS((E,), jnp.int32), SDS((E,), jnp.int32),
+        SDS((N,), jnp.int32), SDS((N,), jnp.bool_),
+    )
+    shards = (
+        _shard(mesh, ("act_nodes", "act_feat"), rules, (N, F), "feats"),
+        _shard(mesh, ("act_edges",), rules, (E,), "src"),
+        _shard(mesh, ("act_edges",), rules, (E,), "dst"),
+        _shard(mesh, ("act_nodes",), rules, (N,), "labels"),
+        _shard(mesh, ("act_nodes",), rules, (N,), "mask"),
+    )
+    # SAGE flops: 2 layers × N × (2 matmuls d_in·d_h) × 3 (fwd+bwd)
+    flops = 3.0 * 2.0 * N * (F * cfg.d_hidden + cfg.d_hidden**2) * 2
+    return Cell(
+        fn=step, abstract_inputs=(astate, *inputs),
+        in_shardings=(sstate, *shards),
+        out_shardings=(sstate, _metrics_shardings(mesh)),
+        donate_argnums=(0,),
+        meta={"model_flops": flops, "kind": "train"},
+    )
+
+
+def _gnn_minibatch_cell(cfg, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["batch_nodes"]
+    f1, f2 = shape.params["fanout"]
+    F = shape.params["d_feat"]
+    ocfg = _opt_cfg_for(cfg)
+    spec_tree = gnn.param_specs(cfg)
+
+    def loss_fn(params, h0, h1, h2, labels):
+        return gnn.loss_minibatch(params, [h0, h1, h2], labels, cfg)
+
+    step = ts.make_train_step(
+        loss_fn, ocfg, grad_shardings=params_shardings(spec_tree, rules, mesh))
+    astate = abstract_train_state(spec_tree, cfg.param_dtype, ocfg)
+    sstate = train_state_shardings(spec_tree, rules, mesh, cfg.param_dtype, ocfg)
+    inputs = (
+        SDS((B, F), jnp.float32), SDS((B, f1, F), jnp.float32),
+        SDS((B, f1, f2, F), jnp.float32), SDS((B,), jnp.int32),
+    )
+    bsh = lambda shp: _shard(mesh, ("act_nodes",) + (None,) * (len(shp) - 1),
+                             rules, shp, "block")
+    shards = tuple(bsh(i.shape) for i in inputs)
+    flops = 3.0 * 2.0 * B * (1 + f1) * (F * cfg.d_hidden + cfg.d_hidden**2) * 2
+    return Cell(
+        fn=step, abstract_inputs=(astate, *inputs),
+        in_shardings=(sstate, *shards),
+        out_shardings=(sstate, _metrics_shardings(mesh)),
+        donate_argnums=(0,),
+        meta={"model_flops": flops, "kind": "train"},
+    )
+
+
+def _gnn_graph_batch_cell(cfg, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    G = shape.params["batch"]
+    n, e = shape.params["n_nodes"], shape.params["n_edges"]
+    F = shape.params["d_feat"]
+    N, E = G * n, G * e
+    ocfg = _opt_cfg_for(cfg)
+    spec_tree = gnn.param_specs(cfg)
+
+    def loss_fn(params, feats, src, dst, gids, labels):
+        return gnn.loss_graph_batch(params, feats, src, dst, gids, labels, G, cfg)
+
+    step = ts.make_train_step(
+        loss_fn, ocfg, grad_shardings=params_shardings(spec_tree, rules, mesh))
+    astate = abstract_train_state(spec_tree, cfg.param_dtype, ocfg)
+    sstate = train_state_shardings(spec_tree, rules, mesh, cfg.param_dtype, ocfg)
+    inputs = (
+        SDS((N, F), jnp.float32), SDS((E,), jnp.int32), SDS((E,), jnp.int32),
+        SDS((N,), jnp.int32), SDS((G,), jnp.int32),
+    )
+    shards = (
+        _shard(mesh, ("act_nodes", "act_feat"), rules, (N, F), "feats"),
+        _shard(mesh, ("act_edges",), rules, (E,), "src"),
+        _shard(mesh, ("act_edges",), rules, (E,), "dst"),
+        _shard(mesh, ("act_nodes",), rules, (N,), "gids"),
+        _shard(mesh, ("act_nodes",), rules, (G,), "labels"),
+    )
+    flops = 3.0 * 2.0 * N * (F * cfg.d_hidden + cfg.d_hidden**2) * 2
+    return Cell(
+        fn=step, abstract_inputs=(astate, *inputs),
+        in_shardings=(sstate, *shards),
+        out_shardings=(sstate, _metrics_shardings(mesh)),
+        donate_argnums=(0,),
+        meta={"model_flops": flops, "kind": "train"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_inputs(cfg, B, mesh, rules):
+    """(abstract inputs, shardings, loss_fn) for one arch's training batch."""
+    bsh = lambda shp, nm: _shard(
+        mesh, ("act_batch",) + (None,) * (len(shp) - 1), rules, shp, nm)
+    if isinstance(cfg, recsys.WideDeepConfig):
+        inputs = (SDS((B, cfg.n_sparse), jnp.int32), SDS((B,), jnp.float32))
+        shards = (bsh((B, cfg.n_sparse), "ids"), bsh((B,), "labels"))
+
+        def loss_fn(params, ids, labels):
+            return recsys.widedeep_loss(params, ids, labels, cfg)
+
+        init = recsys.widedeep_init
+        specs = recsys.widedeep_specs(cfg)
+    elif isinstance(cfg, recsys.TwoTowerConfig):
+        inputs = (SDS((B, cfg.hist_len), jnp.int32), SDS((B,), jnp.int32))
+        shards = (bsh((B, cfg.hist_len), "hist"), bsh((B,), "pos"))
+
+        def loss_fn(params, hist, pos):
+            return recsys.twotower_loss(params, hist, pos, cfg)
+
+        init = recsys.twotower_init
+        specs = recsys.twotower_specs(cfg)
+        if cfg.index is not None:
+            from repro.core import index_layer as il
+            from repro.models.param import ParamSpec
+            n, sub = cfg.index.dim, cfg.index.dim // cfg.index.num_subspaces
+            specs["index"] = il.IndexLayerParams(
+                R=ParamSpec((n, n), ("rot_in", "rot_out"), init="eye"),
+                codebooks=ParamSpec(
+                    (cfg.index.num_subspaces, cfg.index.num_codewords, sub),
+                    ("pq_dim", "pq_code", "pq_sub"), scale=0.01),
+            )
+    elif isinstance(cfg, recsys.MINDConfig):
+        inputs = (SDS((B, cfg.hist_len), jnp.int32), SDS((B,), jnp.int32))
+        shards = (bsh((B, cfg.hist_len), "hist"), bsh((B,), "pos"))
+
+        def loss_fn(params, hist, pos):
+            return recsys.mind_loss(params, hist, pos, cfg)
+
+        init = recsys.mind_init
+        specs = recsys.mind_specs(cfg)
+    elif isinstance(cfg, recsys.DINConfig):
+        inputs = (SDS((B, cfg.hist_len), jnp.int32), SDS((B,), jnp.int32),
+                  SDS((B,), jnp.float32))
+        shards = (bsh((B, cfg.hist_len), "hist"), bsh((B,), "target"),
+                  bsh((B,), "labels"))
+
+        def loss_fn(params, hist, target, labels):
+            return recsys.din_loss(params, hist, target, labels, cfg)
+
+        init = recsys.din_init
+        specs = recsys.din_specs(cfg)
+    else:
+        raise TypeError(type(cfg))
+    return inputs, shards, loss_fn, specs
+
+
+def _recsys_flops(cfg, B: int) -> float:
+    if isinstance(cfg, recsys.WideDeepConfig):
+        dims = (cfg.n_sparse * cfg.embed_dim, *cfg.mlp_dims, 1)
+        return B * 2.0 * sum(a * b for a, b in zip(dims, dims[1:]))
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        dims = (cfg.embed_dim, *cfg.tower_dims)
+        return 2 * B * 2.0 * sum(a * b for a, b in zip(dims, dims[1:]))
+    if isinstance(cfg, recsys.MINDConfig):
+        e = cfg.embed_dim
+        return B * 2.0 * (cfg.hist_len * e * e
+                          + cfg.capsule_iters * cfg.hist_len * cfg.n_interests * e
+                          + cfg.n_interests * 8 * e * e)
+    if isinstance(cfg, recsys.DINConfig):
+        e = cfg.embed_dim
+        a = (4 * e, *cfg.attn_dims, 1)
+        h = (2 * e, *cfg.mlp_dims, 1)
+        return B * 2.0 * (cfg.hist_len * sum(x * y for x, y in zip(a, a[1:]))
+                          + sum(x * y for x, y in zip(h, h[1:])))
+    raise TypeError(type(cfg))
+
+
+def _recsys_train_cell(cfg, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["batch"]
+    ocfg = _opt_cfg_for(cfg)
+    inputs, shards, loss_fn, specs = _recsys_batch_inputs(cfg, B, mesh, rules)
+    step = ts.make_train_step(
+        loss_fn, ocfg, grad_shardings=params_shardings(specs, rules, mesh))
+    astate = abstract_train_state(specs, cfg.param_dtype, ocfg)
+    sstate = train_state_shardings(specs, rules, mesh, cfg.param_dtype, ocfg)
+    return Cell(
+        fn=step, abstract_inputs=(astate, *inputs),
+        in_shardings=(sstate, *shards),
+        out_shardings=(sstate, _metrics_shardings(mesh)),
+        donate_argnums=(0,),
+        meta={"model_flops": 3.0 * _recsys_flops(cfg, B), "kind": "train"},
+    )
+
+
+def _recsys_serve_cell(cfg, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    B = shape.params["batch"]
+    inputs, shards, _loss, specs = _recsys_batch_inputs(cfg, B, mesh, rules)
+    aparams = abstract_params(specs, cfg.param_dtype)
+    pshard = params_shardings(specs, rules, mesh)
+    out_sh = _shard(mesh, ("act_batch",), rules, (B,), "scores")
+
+    if isinstance(cfg, recsys.WideDeepConfig):
+        def fn(params, ids, _labels):
+            return recsys.widedeep_forward(params, ids, cfg)
+    elif isinstance(cfg, recsys.TwoTowerConfig):
+        def fn(params, hist, item):
+            u = recsys.user_tower(params, hist, cfg)
+            v, _ = recsys.item_tower(params, item, cfg, apply_index=True)
+            return jnp.sum(u * v, axis=-1)
+    elif isinstance(cfg, recsys.MINDConfig):
+        def fn(params, hist, item):
+            u = recsys.mind_interests(params, hist, cfg)
+            from repro.models import embedding
+            v = embedding.lookup(params["item_table"], item).astype(u.dtype)
+            return jnp.max(jnp.einsum("bie,be->bi", u, v), axis=-1)
+    elif isinstance(cfg, recsys.DINConfig):
+        def fn(params, hist, target, _labels):
+            return recsys.din_forward(params, hist, target, cfg)
+    else:
+        raise TypeError(type(cfg))
+
+    return Cell(
+        fn=fn, abstract_inputs=(aparams, *inputs),
+        in_shardings=(pshard, *shards),
+        out_shardings=out_sh,
+        donate_argnums=(),
+        meta={"model_flops": _recsys_flops(cfg, B), "kind": "serve"},
+    )
+
+
+def _recsys_retrieval_cell(cfg, shape: cbase.Shape, mesh) -> Cell:
+    rules = cfg.rule_table
+    N = shape.params["n_candidates"]
+    _inputs, _shards, _loss, specs = _recsys_batch_inputs(cfg, 8, mesh, rules)
+    aparams = abstract_params(specs, cfg.param_dtype)
+    pshard = params_shardings(specs, rules, mesh)
+    cand_sh1 = _shard(mesh, ("act_cand",), rules, (N,), "cands")
+
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        D = cfg.index.num_subspaces
+        # Paper serving path: ADC over PQ codes of the 1M-item corpus.
+        def fn(params, hist, codes):
+            return recsys.twotower_retrieve_adc(params, hist, codes, cfg)
+
+        inputs = (SDS((1, cfg.hist_len), jnp.int32), SDS((N, D), jnp.int32))
+        shards = (_repl(mesh),
+                  _shard(mesh, ("act_cand", None), rules, (N, D), "codes"))
+        out_sh = _shard(mesh, (None, "act_cand"), rules, (1, N), "scores")
+        flops = N * D * 2.0  # LUT gather-adds
+    elif isinstance(cfg, recsys.MINDConfig):
+        def fn(params, hist, cand_vecs):
+            return recsys.mind_retrieve(params, hist, cand_vecs, cfg)
+
+        inputs = (SDS((1, cfg.hist_len), jnp.int32),
+                  SDS((N, cfg.embed_dim), jnp.float32))
+        shards = (_repl(mesh),
+                  _shard(mesh, ("act_cand", None), rules,
+                         (N, cfg.embed_dim), "cand_vecs"))
+        out_sh = _shard(mesh, (None, "act_cand"), rules, (1, N), "scores")
+        flops = N * cfg.embed_dim * cfg.n_interests * 2.0
+    elif isinstance(cfg, recsys.DINConfig):
+        def fn(params, hist, cands):
+            return recsys.din_score_candidates(params, hist, cands, cfg,
+                                               chunk=31250)
+
+        inputs = (SDS((cfg.hist_len,), jnp.int32), SDS((N,), jnp.int32))
+        shards = (_repl(mesh), cand_sh1)
+        out_sh = cand_sh1
+        flops = _recsys_flops(cfg, N)
+    elif isinstance(cfg, recsys.WideDeepConfig):
+        def fn(params, ids):
+            return recsys.widedeep_forward(params, ids, cfg)
+
+        inputs = (SDS((N, cfg.n_sparse), jnp.int32),)
+        shards = (_shard(mesh, ("act_cand", None), rules,
+                         (N, cfg.n_sparse), "ids"),)
+        out_sh = cand_sh1
+        flops = _recsys_flops(cfg, N)
+    else:
+        raise TypeError(type(cfg))
+
+    return Cell(
+        fn=fn, abstract_inputs=(aparams, *inputs),
+        in_shardings=(pshard, *shards),
+        out_shardings=out_sh,
+        donate_argnums=(),
+        meta={"model_flops": flops, "kind": "retrieval"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    cfg = arch.config_for_shape(shape_name)
+
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(cfg, shape, mesh)
+        if shape.kind == "decode":
+            return _lm_decode_cell(cfg, shape, mesh)
+    elif arch.family == "gnn":
+        if shape.kind == "gnn_full":
+            return _gnn_full_cell(cfg, shape, mesh)
+        if shape.kind == "gnn_minibatch":
+            return _gnn_minibatch_cell(cfg, shape, mesh)
+        if shape.kind == "gnn_graph_batch":
+            return _gnn_graph_batch_cell(cfg, shape, mesh)
+    elif arch.family == "recsys":
+        if shape.kind == "recsys_train":
+            return _recsys_train_cell(cfg, shape, mesh)
+        if shape.kind == "recsys_serve":
+            return _recsys_serve_cell(cfg, shape, mesh)
+        if shape.kind == "recsys_retrieval":
+            return _recsys_retrieval_cell(cfg, shape, mesh)
+    raise ValueError(f"no builder for {arch_id}/{shape_name} ({shape.kind})")

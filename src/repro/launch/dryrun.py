@@ -1,0 +1,148 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+)
+
+# ^ MUST be the very first lines, before any jax import — jax locks the
+# device count on first init. REPRO_XLA_FLAGS exists only so tests can run a
+# reduced-device dry-run in a subprocess.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) cell this lowers + compiles the real
+step function (train_step including optimizer+GCD, or the serve path) against
+the production mesh — 16×16 single-pod and 2×16×16 multi-pod — and records:
+
+  * memory_analysis()            (proves the cell fits 16 GiB/chip)
+  * cost_analysis()              (per-device FLOPs / bytes for §Roofline)
+  * parsed collective bytes      (the §Roofline third term)
+  * sharding-rule warnings       (e.g. "20 heads % 16 → replicated")
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    import jax
+
+    from repro import configs
+    from repro.launch import cells as cells_lib
+    from repro.launch import mesh as mesh_lib
+    from repro.roofline import analysis
+    from repro.sharding import rules as sh
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    try:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh_lib.num_chips(mesh)
+        sh.pop_warnings()
+        cell = cells_lib.build_cell(arch_id, shape_name, mesh)
+        rec["sharding_warnings"] = sorted(set(sh.pop_warnings()))
+        with mesh:
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.abstract_inputs)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        report = analysis.analyze(
+            compiled, lowered,
+            model_flops_total=cell.meta.get("model_flops"),
+            n_chips=n_chips,
+            loop_trips=cell.meta.get("trips", 1.0),
+        )
+        mem = compiled.memory_analysis()
+        rec.update(
+            ok=True,
+            kind=cell.meta.get("kind"),
+            n_chips=n_chips,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            report=report,
+            fits_hbm=report["memory"]["peak_bytes"] <= mesh_lib.CHIP_HBM_BYTES,
+        )
+        if verbose:
+            print(f"[{arch_id} × {shape_name} × {mesh_name}] OK "
+                  f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+            print(f"  memory_analysis: {mem}")
+            print(f"  peak/device = {report['memory']['peak_bytes']/2**30:.2f} GiB "
+                  f"(fits 16 GiB: {rec['fits_hbm']})")
+            print(f"  cost_analysis: flops/dev={report['flops_per_device']:.3e} "
+                  f"bytes/dev={report['bytes_per_device']:.3e} "
+                  f"coll/dev={report['collective_bytes']:.3e}")
+            print(f"  roofline: compute={report['compute_s']:.2e}s "
+                  f"memory={report['memory_s']:.2e}s "
+                  f"collective={report['collective_s']:.2e}s "
+                  f"→ {report['dominant']}-bound "
+                  f"(fraction {report['roofline_fraction']:.3f})")
+    except Exception as e:  # noqa: BLE001 — failures ARE the result here
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{arch_id} × {shape_name} × {mesh_name}] FAIL: {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        safe = f"{arch_id}__{shape_name}__{mesh_name}".replace("/", "_")
+        with open(os.path.join(out_dir, safe + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--all", action="store_true", help="run every grid cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro import configs
+
+    if args.all:
+        cells = configs.grid_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            safe = f"{arch_id}__{shape_name}__{mesh_name}".replace("/", "_")
+            path = os.path.join(args.out, safe + ".json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        n_skip += 1
+                        continue
+            rec = run_cell(arch_id, shape_name, mp, out_dir=args.out)
+            n_ok += int(rec["ok"])
+            n_fail += int(not rec["ok"])
+    print(f"\ndry-run done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo substrate: transformers (dense/MoE/GQA), GNNs, recsys models.
+
+All models follow the same conventions:
+  * parameters are plain pytrees built from ``param.ParamSpec`` trees, with a
+    parallel tree of logical sharding axes (see sharding.rules);
+  * forward functions are pure and jit/pjit friendly (lax control flow only);
+  * every family exposes ``init_params``, a training forward returning a
+    scalar loss, and (where the family serves) prefill/decode/score paths.
+"""

@@ -1,0 +1,156 @@
+"""GraphSAGE (Hamilton et al. 2017) substrate.
+
+Message passing is built on ``jax.ops.segment_sum``/``segment_max`` over an
+edge-index (src → dst) scatter — JAX has no sparse SpMM beyond BCOO, so this
+IS the system's GNN kernel layer (kernel_taxonomy §GNN, SpMM regime).
+
+Two execution modes:
+  * ``full_batch_forward`` — whole-graph propagation from an edge list
+    (full_graph_sm / ogb_products cells);
+  * ``minibatch_forward`` — seed nodes + dense fanout neighbor arrays from
+    the real CSR sampler in data/graph.py (minibatch_lg cell), GraphSAGE's
+    original training mode.
+
+The paper's index layer attaches to the output node embeddings (GraphSAGE's
+unsupervised use feeds ANN retrieval) — see examples/gnn_index.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param
+from repro.models.param import ParamSpec
+from repro.sharding import rules as sh
+
+
+class GraphSAGEConfig(NamedTuple):
+    name: str
+    d_in: int
+    d_hidden: int = 128
+    num_layers: int = 2
+    num_classes: int = 41
+    aggregator: str = "mean"          # mean | max
+    sample_sizes: tuple[int, ...] = (25, 10)
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    rules: str = "gnn"
+
+    @property
+    def rule_table(self):
+        return sh.RULE_REGISTRY[self.rules]
+
+
+def param_specs(cfg: GraphSAGEConfig):
+    specs = {}
+    d_prev = cfg.d_in
+    for l in range(cfg.num_layers):
+        specs[f"layer{l}"] = {
+            "w_self": ParamSpec((d_prev, cfg.d_hidden), ("w_in", "w_out")),
+            "w_neigh": ParamSpec((d_prev, cfg.d_hidden), ("w_in", "w_out")),
+            "b": ParamSpec((cfg.d_hidden,), ("w_out",), init="zeros"),
+        }
+        d_prev = cfg.d_hidden
+    specs["classifier"] = ParamSpec((cfg.d_hidden, cfg.num_classes), ("w_in", None))
+    return specs
+
+
+def init_params(key: jax.Array, cfg: GraphSAGEConfig):
+    return param.init_params(key, param_specs(cfg), cfg.param_dtype)
+
+
+def _aggregate_edges(h: jax.Array, src: jax.Array, dst: jax.Array,
+                     num_nodes: int, aggregator: str) -> jax.Array:
+    """Scatter messages h[src] into dst buckets. h (N, d) -> (N, d)."""
+    msgs = jnp.take(h, src, axis=0)
+    if aggregator == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+        deg = jax.ops.segment_sum(
+            jnp.ones_like(dst, h.dtype), dst, num_segments=num_nodes
+        )
+        return s / jnp.maximum(deg, 1.0)[:, None]
+    if aggregator == "max":
+        return jax.ops.segment_max(msgs, dst, num_segments=num_nodes)
+    raise ValueError(aggregator)
+
+
+def _sage_layer(lp, h_self: jax.Array, h_neigh: jax.Array) -> jax.Array:
+    out = h_self @ lp["w_self"].astype(h_self.dtype)
+    out = out + h_neigh @ lp["w_neigh"].astype(h_neigh.dtype)
+    out = jax.nn.relu(out + lp["b"].astype(out.dtype))
+    # L2-normalize as in the paper (Algorithm 1, line 7)
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+def full_batch_forward(params, feats: jax.Array, src: jax.Array,
+                       dst: jax.Array, cfg: GraphSAGEConfig) -> jax.Array:
+    """feats (N, F), edge endpoints (E,) each -> logits (N, C)."""
+    rt = cfg.rule_table
+    N = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for l in range(cfg.num_layers):
+        h_n = _aggregate_edges(h, src, dst, N, cfg.aggregator)
+        h = _sage_layer(params[f"layer{l}"], h, h_n)
+        h = sh.constrain(h, ("act_nodes", "act_hidden"), rt)
+    return h @ params["classifier"].astype(h.dtype)
+
+
+def node_embeddings_minibatch(params, feats_by_hop, cfg: GraphSAGEConfig):
+    """Minibatch forward from dense fanout arrays (GraphSAGE Algorithm 2).
+
+    ``feats_by_hop``: list of (B, f1, ..., f_h, F) feature arrays, hop 0 =
+    seeds (B, F), hop 1 = (B, f1, F), ... produced by data.graph.sample_blocks.
+    Returns (B, d_hidden) embeddings of the seed nodes.
+    """
+    agg = jnp.mean if cfg.aggregator == "mean" else (
+        lambda x, axis: jnp.max(x, axis=axis))
+    h = [f.astype(cfg.dtype) for f in feats_by_hop]
+    for l in range(cfg.num_layers):
+        nxt = []
+        for hop in range(len(h) - 1):
+            h_neigh = agg(h[hop + 1], axis=-2)
+            nxt.append(_sage_layer(params[f"layer{l}"], h[hop], h_neigh))
+        h = nxt
+    return h[0]
+
+
+def minibatch_forward(params, feats_by_hop, cfg: GraphSAGEConfig) -> jax.Array:
+    return node_embeddings_minibatch(params, feats_by_hop, cfg) @ params[
+        "classifier"
+    ].astype(cfg.dtype)
+
+
+def loss_full_batch(params, feats, src, dst, labels, mask, cfg) -> jax.Array:
+    """Masked node-classification cross-entropy (full-graph training)."""
+    logits = full_batch_forward(params, feats, src, dst, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_minibatch(params, feats_by_hop, labels, cfg) -> jax.Array:
+    logits = minibatch_forward(params, feats_by_hop, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def loss_graph_batch(params, feats, src, dst, graph_ids, labels, num_graphs,
+                     cfg: GraphSAGEConfig) -> jax.Array:
+    """Graph-level classification on a disjoint union of small graphs (the
+    'molecule' cell): propagate on the union, mean-pool nodes per graph via
+    segment_sum, classify each graph."""
+    N = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for l in range(cfg.num_layers):
+        h_n = _aggregate_edges(h, src, dst, N, cfg.aggregator)
+        h = _sage_layer(params[f"layer{l}"], h, h_n)
+    pooled = jax.ops.segment_sum(h, graph_ids, num_segments=num_graphs)
+    cnt = jax.ops.segment_sum(jnp.ones((N,), h.dtype), graph_ids,
+                              num_segments=num_graphs)
+    pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+    logits = (pooled @ params["classifier"].astype(h.dtype)).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -1,0 +1,65 @@
+"""Declarative parameter specs with logical sharding axes.
+
+A model declares its parameters as a pytree of ``ParamSpec``; from that one
+tree we derive (a) initialized arrays, (b) the logical-axis tree consumed by
+sharding.rules, (c) ShapeDtypeStructs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | eye
+    scale: float | None = None  # None → 1/sqrt(fan_in)
+    dtype: Any = None           # None → model param_dtype
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key, spec: ParamSpec, default_dtype):
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "eye":
+        assert len(spec.shape) >= 2 and spec.shape[-1] == spec.shape[-2]
+        eye = jnp.eye(spec.shape[-1], dtype=dtype)
+        return jnp.broadcast_to(eye, spec.shape)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.normal(key, spec.shape, dtype=jnp.float32).astype(dtype)
+
+
+def init_params(key: jax.Array, spec_tree, param_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s, param_dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_tree(spec_tree):
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree, param_dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

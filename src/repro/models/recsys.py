@@ -1,0 +1,375 @@
+"""RecSys model zoo: Wide&Deep, Two-Tower retrieval, MIND, DIN.
+
+These four assigned architectures share the embedding substrate in
+``models/embedding.py`` (huge row-sharded tables, EmbeddingBag) and differ in
+their interaction op:
+
+  wide-deep    concat + deep MLP ∥ wide linear          (ranking, BCE)
+  two-tower    dot(user MLP, item MLP), in-batch softmax (retrieval — the
+               paper's own setting; index layer on the item tower)
+  mind         capsule dynamic routing → 4 interests, label-aware attention
+  din          target attention over user history → MLP  (ranking, BCE)
+
+Retrieval-scoring cells (1 query × 10⁶ candidates) run both the dense-matmul
+baseline and the paper's ADC path over PQ codes.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import index_layer as il
+from repro.core import pq
+from repro.models import embedding, param
+from repro.models.param import ParamSpec
+from repro.sharding import rules as sh
+
+
+def _mlp_specs(dims: tuple[int, ...], prefix: str = "mlp"):
+    specs = {}
+    for i in range(len(dims) - 1):
+        specs[f"{prefix}{i}_w"] = ParamSpec((dims[i], dims[i + 1]), ("w_in", "w_hidden"))
+        specs[f"{prefix}{i}_b"] = ParamSpec((dims[i + 1],), ("w_hidden",), init="zeros")
+    return specs
+
+
+def _mlp_apply(params, x, dims: tuple[int, ...], prefix: str = "mlp",
+               final_act: bool = False):
+    n = len(dims) - 1
+    for i in range(n):
+        x = x @ params[f"{prefix}{i}_w"].astype(x.dtype) + params[f"{prefix}{i}_b"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ===========================================================================
+# Wide & Deep
+# ===========================================================================
+
+class WideDeepConfig(NamedTuple):
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 32
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    psum_lookup: bool = False        # shard_map masked-psum lookup instead of
+    #                                  the XLA all-gather gather (§Perf)
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    rules: str = "recsys"
+
+    @property
+    def rule_table(self):
+        return sh.RULE_REGISTRY[self.rules]
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+
+def widedeep_specs(cfg: WideDeepConfig):
+    d_in = cfg.n_sparse * cfg.embed_dim
+    dims = (d_in, *cfg.mlp_dims, 1)
+    return {
+        # one fused table; field f owns rows [f·V, (f+1)·V)
+        "table": ParamSpec((cfg.total_vocab, cfg.embed_dim), ("vocab_rows", "w_embed_dim"), scale=0.01),
+        "wide": ParamSpec((cfg.total_vocab, 1), ("vocab_rows", None), scale=0.01),
+        **_mlp_specs(dims),
+    }
+
+
+def widedeep_init(key, cfg: WideDeepConfig):
+    return param.init_params(key, widedeep_specs(cfg), cfg.param_dtype)
+
+
+def widedeep_forward(params, sparse_ids: jax.Array, cfg: WideDeepConfig) -> jax.Array:
+    """sparse_ids (B, n_sparse) field-local ids -> logits (B,)."""
+    rt = cfg.rule_table
+    B, F = sparse_ids.shape
+    offsets = (jnp.arange(F) * cfg.vocab_per_field)[None, :]
+    gids = sparse_ids + offsets
+    if cfg.psum_lookup:
+        mesh = sh._current_mesh()
+        lookup = lambda t, i: embedding.sharded_lookup(t, i, mesh, "model")
+    else:
+        lookup = embedding.lookup
+    emb = lookup(params["table"], gids)                      # (B, F, e)
+    emb = sh.constrain(emb, ("act_batch", "fields", None), rt)
+    deep_in = emb.reshape(B, F * cfg.embed_dim).astype(cfg.dtype)
+    d_in = F * cfg.embed_dim
+    deep = _mlp_apply(params, deep_in, (d_in, *cfg.mlp_dims, 1))[:, 0]
+    wide = jnp.sum(lookup(params["wide"], gids)[..., 0], axis=-1)
+    return deep + wide.astype(deep.dtype)
+
+
+def widedeep_loss(params, sparse_ids, labels, cfg: WideDeepConfig) -> jax.Array:
+    logits = widedeep_forward(params, sparse_ids, cfg).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ===========================================================================
+# Two-tower retrieval (the paper's own setting)
+# ===========================================================================
+
+class TwoTowerConfig(NamedTuple):
+    name: str = "two-tower-retrieval"
+    item_vocab: int = 10_000_000
+    embed_dim: int = 256
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    hist_len: int = 50
+    scoring: str = "cosine"           # cosine | dot
+    hinge_margin: float = 0.1
+    index: il.IndexLayerConfig | None = None  # paper's index layer on item tower
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    rules: str = "recsys"
+
+    @property
+    def rule_table(self):
+        return sh.RULE_REGISTRY[self.rules]
+
+    @property
+    def out_dim(self) -> int:
+        return self.tower_dims[-1]
+
+
+def twotower_specs(cfg: TwoTowerConfig):
+    e = cfg.embed_dim
+    specs = {
+        "item_table": ParamSpec((cfg.item_vocab, e), ("vocab_rows", "w_embed_dim"), scale=0.01),
+        **_mlp_specs((e, *cfg.tower_dims), prefix="user"),
+        **_mlp_specs((e, *cfg.tower_dims), prefix="item"),
+    }
+    return specs
+
+
+def twotower_init(key, cfg: TwoTowerConfig):
+    params = param.init_params(key, twotower_specs(cfg), cfg.param_dtype)
+    if cfg.index is not None:
+        params["index"] = il.init(jax.random.fold_in(key, 1), cfg.index,
+                                  dtype=cfg.param_dtype)
+    return params
+
+
+def user_tower(params, hist_ids: jax.Array, cfg: TwoTowerConfig) -> jax.Array:
+    """hist_ids (B, L) (−1 padded) -> (B, out)."""
+    pooled = embedding.bag_lookup(params["item_table"], hist_ids, combiner="mean")
+    u = _mlp_apply(params, pooled.astype(cfg.dtype), (cfg.embed_dim, *cfg.tower_dims), prefix="user")
+    return u
+
+
+def item_tower(params, item_ids: jax.Array, cfg: TwoTowerConfig,
+               apply_index: bool = False):
+    """item_ids (B,) -> (B, out)[, distortion]."""
+    emb = embedding.lookup(params["item_table"], item_ids)
+    v = _mlp_apply(params, emb.astype(cfg.dtype), (cfg.embed_dim, *cfg.tower_dims), prefix="item")
+    if apply_index and "index" in params:
+        v, dist = il.apply(params["index"], v)
+        return v, dist
+    return v, jnp.float32(0.0)
+
+
+def _score(u, v, scoring: str):
+    if scoring == "cosine":
+        u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+        v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+    return u @ v.T
+
+
+def twotower_loss(params, hist_ids, pos_item_ids, cfg: TwoTowerConfig,
+                  use_index: bool = True) -> jax.Array:
+    """In-batch hinge loss (paper §3.2: cosine scoring, margin 0.1) +
+    distortion term when the index layer is attached (Eq. 1)."""
+    rt = cfg.rule_table
+    u = user_tower(params, hist_ids, cfg)
+    v, dist = item_tower(params, pos_item_ids, cfg, apply_index=use_index)
+    u = sh.constrain(u, ("act_batch", None), rt)
+    v = sh.constrain(v, ("act_batch", None), rt)
+    scores = _score(u, v, cfg.scoring).astype(jnp.float32)  # (B, B)
+    B = scores.shape[0]
+    # (B, B) at B=65536 is 17 GB — shard rows over data, cols over model.
+    scores = sh.constrain(scores, ("act_batch", "act_hidden"), rt)
+    pos = jnp.diagonal(scores)
+    hinge = jnp.maximum(0.0, cfg.hinge_margin + scores - pos[:, None])
+    # mask the diagonal via iota compare (jnp.eye(65536) would materialize
+    # 17 GB; B*(B-1) as a python int overflows int32 at this batch size)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    hinge = jnp.where(ii == jj, 0.0, hinge)
+    loss = jnp.sum(hinge) * (1.0 / (float(B) * (B - 1.0)))
+    if use_index and "index" in params:
+        loss = loss + cfg.index.distortion_weight * dist
+    return loss
+
+
+def twotower_retrieve_dense(params, hist_ids, cand_vecs, cfg: TwoTowerConfig):
+    """Dense baseline: (1|B, L) history vs (N, out) candidate tower outputs."""
+    u = user_tower(params, hist_ids, cfg)
+    return _score(u, cand_vecs, cfg.scoring)
+
+
+def twotower_retrieve_adc(params, hist_ids, cand_codes, cfg: TwoTowerConfig):
+    """Paper serving path: ADC over PQ codes of the candidate corpus."""
+    u = user_tower(params, hist_ids, cfg)
+    if cfg.scoring == "cosine":
+        u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+    return il.adc_scores(params["index"], u, cand_codes)
+
+
+# ===========================================================================
+# MIND — multi-interest capsule routing
+# ===========================================================================
+
+class MINDConfig(NamedTuple):
+    name: str = "mind"
+    item_vocab: int = 2_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    rules: str = "recsys"
+
+    @property
+    def rule_table(self):
+        return sh.RULE_REGISTRY[self.rules]
+
+
+def mind_specs(cfg: MINDConfig):
+    e = cfg.embed_dim
+    return {
+        "item_table": ParamSpec((cfg.item_vocab, e), ("vocab_rows", "w_embed_dim"), scale=0.01),
+        "bilinear": ParamSpec((e, e), ("w_in", "w_hidden")),  # S matrix (B2I routing)
+        **_mlp_specs((e, 4 * e, e), prefix="interest"),       # per-interest transform
+    }
+
+
+def mind_init(key, cfg: MINDConfig):
+    return param.init_params(key, mind_specs(cfg), cfg.param_dtype)
+
+
+def _squash(s: jax.Array) -> jax.Array:
+    n2 = jnp.sum(jnp.square(s), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * s / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist_ids: jax.Array, cfg: MINDConfig) -> jax.Array:
+    """Dynamic routing (B2I): hist (B, L) -> interests (B, I, e)."""
+    B, L = hist_ids.shape
+    I = cfg.n_interests
+    valid = (hist_ids >= 0)
+    e = embedding.lookup(params["item_table"], jnp.maximum(hist_ids, 0))
+    e = jnp.where(valid[..., None], e, 0.0).astype(cfg.dtype)   # (B, L, e)
+    eS = e @ params["bilinear"].astype(e.dtype)                 # behavior→interest space
+    b = jnp.zeros((B, L, I), jnp.float32)                       # routing logits
+
+    def routing_iter(b, _):
+        w = jax.nn.softmax(b, axis=-1)                          # over interests
+        w = jnp.where(valid[..., None], w, 0.0)
+        s = jnp.einsum("bli,ble->bie", w, eS.astype(jnp.float32))
+        u = _squash(s)                                          # (B, I, e)
+        b_new = b + jnp.einsum("ble,bie->bli", eS.astype(jnp.float32), u)
+        return b_new, u
+
+    b, us = jax.lax.scan(routing_iter, b, None, length=cfg.capsule_iters)
+    u = us[-1]
+    u = _mlp_apply(params, u.astype(cfg.dtype), (cfg.embed_dim, 4 * cfg.embed_dim, cfg.embed_dim), prefix="interest")
+    return u  # (B, I, e)
+
+
+def mind_loss(params, hist_ids, pos_item_ids, cfg: MINDConfig) -> jax.Array:
+    """Label-aware attention + in-batch sampled softmax."""
+    u = mind_interests(params, hist_ids, cfg)                  # (B, I, e)
+    v = embedding.lookup(params["item_table"], pos_item_ids).astype(cfg.dtype)  # (B, e)
+    att = jnp.einsum("bie,ce->bic", u, v).astype(jnp.float32)  # (B, I, B)
+    # label-aware: weight interests by (softmax over I of pow(score, 2))
+    scores = jnp.max(att, axis=1)                              # (B, B) max over interests
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    return -jnp.mean(jnp.diagonal(logp))
+
+
+def mind_retrieve(params, hist_ids, cand_vecs, cfg: MINDConfig) -> jax.Array:
+    """(B, L) × (N, e) -> (B, N): max over interests of dot scores."""
+    u = mind_interests(params, hist_ids, cfg)
+    return jnp.max(jnp.einsum("bie,ne->bin", u, cand_vecs.astype(u.dtype)), axis=1)
+
+
+# ===========================================================================
+# DIN — deep interest network (target attention)
+# ===========================================================================
+
+class DINConfig(NamedTuple):
+    name: str = "din"
+    item_vocab: int = 1_000_000
+    embed_dim: int = 18
+    hist_len: int = 100
+    attn_dims: tuple[int, ...] = (80, 40)
+    mlp_dims: tuple[int, ...] = (200, 80)
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    rules: str = "recsys"
+
+    @property
+    def rule_table(self):
+        return sh.RULE_REGISTRY[self.rules]
+
+
+def din_specs(cfg: DINConfig):
+    e = cfg.embed_dim
+    return {
+        "item_table": ParamSpec((cfg.item_vocab, e), ("vocab_rows", "w_embed_dim"), scale=0.01),
+        **_mlp_specs((4 * e, *cfg.attn_dims, 1), prefix="attn"),
+        **_mlp_specs((2 * e, *cfg.mlp_dims, 1), prefix="head"),
+    }
+
+
+def din_init(key, cfg: DINConfig):
+    return param.init_params(key, din_specs(cfg), cfg.param_dtype)
+
+
+def din_forward(params, hist_ids: jax.Array, target_ids: jax.Array,
+                cfg: DINConfig) -> jax.Array:
+    """hist (B, L), target (B,) -> logits (B,). Target attention: the
+    attention MLP sees [h, t, h−t, h⊙t] per history item (DIN eq. 3)."""
+    e = cfg.embed_dim
+    valid = hist_ids >= 0
+    h = embedding.lookup(params["item_table"], jnp.maximum(hist_ids, 0)).astype(cfg.dtype)
+    h = jnp.where(valid[..., None], h, 0.0)                    # (B, L, e)
+    t = embedding.lookup(params["item_table"], target_ids).astype(cfg.dtype)  # (B, e)
+    tt = jnp.broadcast_to(t[:, None], h.shape)
+    attn_in = jnp.concatenate([h, tt, h - tt, h * tt], axis=-1)  # (B, L, 4e)
+    w = _mlp_apply(params, attn_in, (4 * e, *cfg.attn_dims, 1), prefix="attn")[..., 0]
+    w = jnp.where(valid, w, -1e30)
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1).astype(cfg.dtype)
+    pooled = jnp.einsum("bl,ble->be", w, h)
+    head_in = jnp.concatenate([pooled, t], axis=-1)
+    return _mlp_apply(params, head_in, (2 * e, *cfg.mlp_dims, 1), prefix="head")[:, 0]
+
+
+def din_loss(params, hist_ids, target_ids, labels, cfg: DINConfig) -> jax.Array:
+    logits = din_forward(params, hist_ids, target_ids, cfg).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def din_score_candidates(params, hist_ids: jax.Array, cand_ids: jax.Array,
+                         cfg: DINConfig, chunk: int = 8192) -> jax.Array:
+    """Bulk target-attention scoring of N candidates for ONE user:
+    hist (L,), cand (N,) -> (N,). Chunked over candidates (no N×L blowup
+    beyond chunk×L)."""
+    N = cand_ids.shape[0]
+    nc = N // chunk
+    hist_b = jnp.broadcast_to(hist_ids[None], (chunk, hist_ids.shape[0]))
+
+    def one(chunk_ids):
+        return din_forward(params, hist_b, chunk_ids, cfg)
+
+    out = jax.lax.map(one, cand_ids[: nc * chunk].reshape(nc, chunk))
+    return out.reshape(-1)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer (AdamW + GCD manifold routing), train state,
+sharded checkpointing, error-feedback gradient compression."""

@@ -1,0 +1,104 @@
+"""Distribution tests that need multiple devices: run in a subprocess with
+8 fake CPU devices so the main pytest process keeps its single-device view
+(the dry-run spec requires XLA_FLAGS never be set globally)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=420,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+HEADER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+""")
+
+
+def test_sharded_embedding_lookup_matches_dense():
+    res = _run(HEADER + textwrap.dedent("""
+        from repro.models import embedding
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        V, dim = 64, 8
+        table = jax.random.normal(jax.random.PRNGKey(0), (V, dim))
+        ids = jax.random.randint(jax.random.PRNGKey(1), (10,), 0, V)
+        want = np.asarray(embedding.lookup(table, ids))
+        got = np.asarray(embedding.sharded_lookup(table, ids, mesh, "model"))
+        print(json.dumps({"ok": bool(np.allclose(got, want, atol=1e-5))}))
+    """))
+    assert res["ok"]
+
+
+def test_mini_dryrun_cell_compiles_on_8_devices():
+    """The full dry-run pattern at 8 fake devices: lower + compile a train
+    cell and parse roofline terms."""
+    res = _run(HEADER + textwrap.dedent("""
+        import repro.launch.mesh as mesh_lib
+        mesh_lib.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+            (2,2,2) if multi_pod else (2,4),
+            ("pod","data","model") if multi_pod else ("data","model"),
+            axis_types=(jax.sharding.AxisType.Auto,)*(3 if multi_pod else 2))
+        from repro.launch.dryrun import run_cell
+        rec = run_cell("graphsage-reddit", "molecule", False, verbose=False)
+        rec2 = run_cell("graphsage-reddit", "molecule", True, verbose=False)
+        print(json.dumps({
+            "ok": bool(rec["ok"] and rec2["ok"]),
+            "err": (rec.get("error") or "") + (rec2.get("error") or ""),
+            "has_terms": "compute_s" in rec.get("report", {}),
+        }))
+    """))
+    assert res["ok"], res.get("err")
+    assert res["has_terms"]
+
+
+def test_ef_psum_int8_under_shard_map():
+    res = _run(HEADER + textwrap.dedent("""
+        from jax.sharding import PartitionSpec as P
+        from repro.training import grad_compress as gc
+        mesh = jax.make_mesh((8,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        f = gc.make_compressed_crosspod_psum(mesh, "pod")
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))  # per-pod grads
+        err = jnp.zeros((8, 64))
+        summed, err2 = f(g, err)
+        want = np.asarray(jnp.sum(g, axis=0))
+        got = np.asarray(summed)
+        rel = float(np.abs(got - want).max() / (np.abs(want).max() + 1e-9))
+        print(json.dumps({"rel": rel, "err_shape": list(err2.shape)}))
+    """))
+    assert res["rel"] < 0.15  # int8 single-shot error; EF cleans it over steps
+    assert res["err_shape"] == [8, 64]
+
+
+def test_production_mesh_shapes():
+    res = _run(HEADER + textwrap.dedent("""
+        # make_mesh with 512 logical devices over 8 physical is not possible;
+        # verify the mesh FUNCTION contract on the debug mesh instead and the
+        # axis names on the real one via spec inspection.
+        from repro.launch import mesh as mesh_lib
+        import inspect
+        src = inspect.getsource(mesh_lib.make_production_mesh)
+        print(json.dumps({
+            "single": "(16, 16)" in src, "multi": "(2, 16, 16)" in src,
+            "axes": '"pod", "data", "model"' in src or "('pod', 'data', 'model')" in src,
+        }))
+    """))
+    assert res["single"] and res["multi"] and res["axes"]

@@ -1,0 +1,96 @@
+"""Givens-rotation math: invariants + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import givens, matching
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _random_matching_np(rng, n):
+    perm = rng.permutation(n)
+    return jnp.asarray(perm[: n // 2]), jnp.asarray(perm[n // 2: 2 * (n // 2)])
+
+
+@given(n=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 2**16))
+def test_pair_rotation_preserves_orthogonality(n, seed):
+    rng = np.random.RandomState(seed)
+    R = givens.random_rotation(jax.random.PRNGKey(seed), n)
+    pi, pj = _random_matching_np(rng, n)
+    theta = jnp.asarray(rng.randn(n // 2))
+    R2 = givens.apply_pair_rotations(R, pi, pj, theta)
+    assert float(givens.orthogonality_error(R2)) < 1e-4
+
+
+@given(n=st.sampled_from([4, 8, 16]), m=st.integers(1, 9),
+       seed=st.integers(0, 2**16))
+def test_pair_apply_equals_dense_matmul(n, m, seed):
+    rng = np.random.RandomState(seed)
+    X = jnp.asarray(rng.randn(m, n).astype(np.float32))
+    pi, pj = _random_matching_np(rng, n)
+    theta = jnp.asarray(rng.randn(n // 2).astype(np.float32))
+    Rot = givens.rotation_from_pairs(pi, pj, theta, n)
+    np.testing.assert_allclose(
+        np.asarray(givens.apply_pair_rotations(X, pi, pj, theta)),
+        np.asarray(X @ Rot), atol=1e-5)
+    # det(Rot) == +1: product of commuting plane rotations is in SO(n)
+    assert np.isclose(float(jnp.linalg.det(Rot)), 1.0, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_transposed_apply_is_inverse(seed):
+    n = 12
+    rng = np.random.RandomState(seed)
+    X = jnp.asarray(rng.randn(5, n).astype(np.float32))
+    pi, pj = _random_matching_np(rng, n)
+    theta = jnp.asarray(rng.randn(n // 2).astype(np.float32))
+    Y = givens.apply_pair_rotations(X, pi, pj, theta)
+    X2 = givens.apply_pair_rotations_transposed(Y, pi, pj, theta)
+    np.testing.assert_allclose(np.asarray(X2), np.asarray(X), atol=1e-5)
+
+
+def test_directional_derivative_matches_finite_difference():
+    n, m = 16, 32
+    key = jax.random.PRNGKey(0)
+    R = givens.random_rotation(key, n)
+    X = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+    w = jax.random.normal(jax.random.PRNGKey(2), (n,))
+
+    def loss(Rm):
+        return jnp.sum(jnp.tanh(X @ Rm) @ w)
+
+    G = jax.grad(loss)(R)
+    A = givens.directional_derivs(G, R)
+    eps = 1e-4
+    for (i, j) in [(0, 1), (2, 7), (10, 15)]:
+        Rp = givens.apply_pair_rotations(
+            R, jnp.array([i]), jnp.array([j]), jnp.array([eps]))
+        Rm_ = givens.apply_pair_rotations(
+            R, jnp.array([i]), jnp.array([j]), jnp.array([-eps]))
+        fd = (loss(Rp) - loss(Rm_)) / (2 * eps)
+        assert np.isclose(float(fd), float(A[i, j]), rtol=2e-2, atol=1e-3)
+
+
+def test_directional_derivs_antisymmetric():
+    key = jax.random.PRNGKey(3)
+    G = jax.random.normal(key, (24, 24))
+    R = givens.random_rotation(jax.random.PRNGKey(4), 24)
+    A = givens.directional_derivs(G, R)
+    np.testing.assert_allclose(np.asarray(A), -np.asarray(A).T, atol=1e-5)
+
+
+def test_project_to_so_n():
+    key = jax.random.PRNGKey(5)
+    M = jax.random.normal(key, (10, 10))
+    R = givens.project_to_so_n(M)
+    assert float(givens.orthogonality_error(R)) < 1e-5
+    assert np.isclose(float(jnp.linalg.det(R)), 1.0, atol=1e-4)

@@ -1,0 +1,97 @@
+"""Pallas kernels: shape/dtype sweeps + hypothesis, allclose vs ref.py
+oracles. interpret=True on CPU per the deliverable contract."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import givens
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (64, 32), (100, 64), (257, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_givens_rotate_sweep(m, n, dtype):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    X = jax.random.normal(key, (m, n)).astype(dtype)
+    perm = np.random.RandomState(0).permutation(n)
+    pi = jnp.asarray(perm[: n // 2])
+    pj = jnp.asarray(perm[n // 2: 2 * (n // 2)])
+    theta = jax.random.normal(jax.random.fold_in(key, 1), (n // 2,))
+    got = ops.apply_pair_rotations(X, pi, pj, theta)
+    want = givens.apply_pair_rotations(X, pi, pj, theta)
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("n", [32, 128, 384, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gcd_score_sweep(n, dtype):
+    key = jax.random.PRNGKey(n)
+    G = jax.random.normal(key, (n, n)).astype(dtype)
+    R = jax.random.normal(jax.random.fold_in(key, 1), (n, n)).astype(dtype)
+    got = np.asarray(ops.gcd_score(G, R))
+    want = np.asarray(ref.gcd_score_ref(G.astype(jnp.float32),
+                                        R.astype(jnp.float32)))
+    tol = 1e-3 * n if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(got, want, atol=tol, rtol=1e-2)
+    np.testing.assert_allclose(got, -got.T, atol=1e-5)  # antisymmetric
+
+
+@pytest.mark.parametrize("m,D,K,sub", [(17, 2, 4, 8), (300, 8, 16, 8),
+                                       (1024, 4, 256, 16)])
+def test_pq_assign_sweep(m, D, K, sub):
+    key = jax.random.PRNGKey(m)
+    X = jax.random.normal(key, (m, D * sub))
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (D, K, sub))
+    got = np.asarray(ops.pq_assign(X, cb))
+    want = np.asarray(ref.pq_assign_ref(X, cb))
+    assert np.array_equal(got, want)
+
+
+@given(N=st.integers(10, 600), D=st.sampled_from([2, 8]),
+       K=st.sampled_from([4, 16]), b=st.integers(1, 5))
+@settings(deadline=None, max_examples=12)
+def test_adc_lookup_property(N, D, K, b):
+    key = jax.random.PRNGKey(N)
+    lut = jax.random.normal(key, (b, D, K))
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (N, D), 0, K)
+    got = np.asarray(ops.adc_lookup(lut, codes))
+    want = np.asarray(ref.adc_lookup_ref(lut, codes))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@given(L=st.integers(1, 200), V=st.integers(10, 500),
+       dim=st.sampled_from([8, 16]), B=st.integers(1, 20),
+       weighted=st.booleans())
+@settings(deadline=None, max_examples=12)
+def test_embedding_bag_property(L, V, dim, B, weighted):
+    rng = np.random.RandomState(L * 7 + V)
+    table = jnp.asarray(rng.randn(V, dim).astype(np.float32))
+    idx = jnp.asarray(rng.randint(-1, V, size=L).astype(np.int32))
+    bags = jnp.asarray(np.sort(rng.randint(0, B, size=L)).astype(np.int32))
+    w = jnp.asarray(rng.rand(L).astype(np.float32)) if weighted else None
+    got = np.asarray(ops.embedding_bag(table, idx, bags, B, w))
+    mask = np.asarray(idx) >= 0
+    w_ref = np.where(mask, np.asarray(w) if w is not None else 1.0, 0.0)
+    want = np.asarray(ref.embedding_bag_ref(
+        table, jnp.maximum(idx, 0), bags, B, jnp.asarray(w_ref)))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_kernel_wrappers_jit_under_transforms():
+    """Kernels must compose with jit+grad where gradients are defined."""
+    X = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    pi = jnp.arange(8)
+    pj = jnp.arange(8, 16)
+    theta = 0.1 * jnp.ones((8,))
+
+    # givens rotate is linear in X: grad = rotated cotangent
+    def f(x):
+        return jnp.sum(ops.apply_pair_rotations(x, pi, pj, theta) ** 2)
+
+    g = jax.jit(jax.grad(f))(X)
+    assert bool(jnp.all(jnp.isfinite(g)))

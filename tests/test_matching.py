@@ -1,0 +1,93 @@
+"""GCD pair-selection: greedy vs exact oracle, disjointness properties."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import matching
+
+
+def _rand_antisym(rng, n):
+    A = rng.randn(n, n)
+    return A - A.T
+
+
+@given(n=st.sampled_from([4, 6, 8, 10, 12]), seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=20)
+def test_greedy_is_disjoint_and_complete(n, seed):
+    A = _rand_antisym(np.random.RandomState(seed), n)
+    pi, pj = matching.greedy_matching(jnp.asarray(A))
+    ids = np.concatenate([np.asarray(pi), np.asarray(pj)])
+    assert len(set(ids.tolist())) == n  # perfect matching, disjoint
+    assert np.all(np.asarray(pi) != np.asarray(pj))
+
+
+@given(n=st.sampled_from([4, 6, 8, 10]), seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=15)
+def test_greedy_le_twoopt_le_exact(n, seed):
+    A = _rand_antisym(np.random.RandomState(seed), n)
+    gpi, gpj = matching.greedy_matching(jnp.asarray(A))
+    spi, spj = matching.steepest_matching(jnp.asarray(A))
+    _, _, exact_w = matching.exact_matching_dp(A)
+    gw = float(matching.matching_weight(A, gpi, gpj))
+    sw = float(matching.matching_weight(A, spi, spj))
+    assert gw <= sw + 1e-6          # 2-opt only improves
+    assert sw <= exact_w + 1e-6     # exact is optimal
+    # greedy achieves >= 1/2 of optimal (classic greedy matching bound)
+    assert gw >= 0.5 * exact_w - 1e-6
+
+
+@given(n=st.sampled_from([6, 8, 12, 16]), seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=15)
+def test_random_matching_is_perfect(n, seed):
+    pi, pj = matching.random_matching(jax.random.PRNGKey(seed), n)
+    ids = np.concatenate([np.asarray(pi), np.asarray(pj)])
+    assert len(set(ids.tolist())) == n
+
+
+def test_greedy_takes_best_edge_first():
+    n = 8
+    A = np.zeros((n, n))
+    A[2, 5] = 100.0
+    A[5, 2] = -100.0
+    A += 0.01 * _rand_antisym(np.random.RandomState(0), n)
+    pi, pj = matching.greedy_matching(jnp.asarray(A))
+    pairs = set(map(tuple, np.stack([np.asarray(pi), np.asarray(pj)], 1).tolist()))
+    assert (2, 5) in pairs or (5, 2) in pairs
+
+
+def test_overlapping_topk_picks_global_top():
+    n = 6
+    A = _rand_antisym(np.random.RandomState(1), n)
+    pi, pj = matching.overlapping_topk(jnp.asarray(A), k=3)
+    w = np.abs(A)
+    iu = np.triu_indices(n, 1)
+    top3 = sorted(w[iu], reverse=True)[:3]
+    got = sorted(float(w[i, j]) for i, j in zip(np.asarray(pi), np.asarray(pj)))
+    np.testing.assert_allclose(sorted(top3), got, rtol=1e-6)
+
+
+@given(n=st.sampled_from([4, 8, 16, 32, 64]), seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=20)
+def test_greedy_fast_exactly_matches_greedy(n, seed):
+    """greedy_matching_fast is an EXACT reimplementation (same pairs, not
+    just same weight) — the §Perf speedup must not change semantics."""
+    A = _rand_antisym(np.random.RandomState(seed), n)
+    p1 = matching.greedy_matching(jnp.asarray(A))
+    p2 = matching.greedy_matching_fast(jnp.asarray(A))
+    pairs1 = set(map(tuple, np.stack([np.asarray(x) for x in p1], 1).tolist()))
+    pairs2 = set(map(tuple, np.stack([np.asarray(x) for x in p2], 1).tolist()))
+    assert pairs1 == pairs2
+
+
+def test_two_opt_monotone_improvement():
+    rng = np.random.RandomState(7)
+    A = jnp.asarray(_rand_antisym(rng, 16))
+    pi, pj = matching.random_matching(jax.random.PRNGKey(0), 16)
+    w0 = float(matching.matching_weight(A, pi, pj))
+    pi2, pj2 = matching.two_opt_refine(A, pi, pj, sweeps=8)
+    w1 = float(matching.matching_weight(A, pi2, pj2))
+    assert w1 >= w0 - 1e-6
+    ids = np.concatenate([np.asarray(pi2), np.asarray(pj2)])
+    assert len(set(ids.tolist())) == 16  # still a perfect matching

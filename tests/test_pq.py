@@ -1,0 +1,85 @@
+"""Product quantization: k-means, STE, ADC exactness, hypothesis invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import pq
+
+
+def test_kmeans_distortion_monotone():
+    X = jax.random.normal(jax.random.PRNGKey(0), (512, 32))
+    cfg = pq.PQConfig(4, 16)
+    _cb, trace = pq.kmeans(jax.random.PRNGKey(1), X, cfg, iters=10)
+    t = np.asarray(trace)
+    assert np.all(np.diff(t) <= 1e-5), "Lloyd iterations must not increase distortion"
+
+
+@given(D=st.sampled_from([2, 4, 8]), K=st.sampled_from([4, 16]),
+       seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=15)
+def test_assign_decode_roundtrip_invariants(D, K, seed):
+    n = D * 8
+    X = jax.random.normal(jax.random.PRNGKey(seed), (64, n))
+    cb = pq.kmeans_init(jax.random.PRNGKey(seed + 1), X, pq.PQConfig(D, K))
+    codes = pq.assign(X, cb)
+    assert codes.shape == (64, D)
+    assert int(codes.min()) >= 0 and int(codes.max()) < K
+    q = pq.decode(codes, cb)
+    assert q.shape == X.shape
+    # assignment is nearest: reassigning the reconstruction is a fixpoint
+    codes2 = pq.assign(q, cb)
+    assert np.array_equal(np.asarray(codes), np.asarray(codes2))
+
+
+def test_quantize_is_projection():
+    """φ(φ(x)) == φ(x): quantization is idempotent."""
+    X = jax.random.normal(jax.random.PRNGKey(2), (128, 16))
+    cb, _ = pq.kmeans(jax.random.PRNGKey(3), X, pq.PQConfig(4, 8), iters=5)
+    q = pq.quantize(X, cb)
+    np.testing.assert_allclose(np.asarray(pq.quantize(q, cb)), np.asarray(q),
+                               atol=1e-6)
+
+
+def test_ste_gradient_is_identity_wrt_x():
+    X = jax.random.normal(jax.random.PRNGKey(4), (32, 16))
+    cb, _ = pq.kmeans(jax.random.PRNGKey(5), X, pq.PQConfig(4, 8), iters=3)
+    w = jax.random.normal(jax.random.PRNGKey(6), (16,))
+    g = jax.grad(lambda x: jnp.sum(pq.quantize_ste(x, cb) @ w))(X)
+    # straight-through: dL/dx == broadcast of w
+    np.testing.assert_allclose(np.asarray(g), np.tile(w, (32, 1)), atol=1e-5)
+
+
+def test_distortion_grad_trains_codebooks():
+    X = jax.random.normal(jax.random.PRNGKey(7), (256, 16))
+    cb = 0.01 * jax.random.normal(jax.random.PRNGKey(8), (4, 8, 4))
+    d0 = float(pq.distortion(X, cb))
+    for _ in range(50):
+        g = jax.grad(lambda c: pq.distortion(X, c))(cb)
+        cb = cb - 0.05 * g
+    assert float(pq.distortion(X, cb)) < d0 * 0.8
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_adc_equals_exact_inner_product(seed):
+    n, D, K = 32, 4, 16
+    X = jax.random.normal(jax.random.PRNGKey(seed), (100, n))
+    cb, _ = pq.kmeans(jax.random.PRNGKey(seed + 1), X, pq.PQConfig(D, K), iters=3)
+    codes = pq.assign(X, cb)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 2), (3, n))
+    lut = pq.adc_lut(q, cb)
+    s_adc = pq.adc_score(lut, codes)
+    s_exact = q @ pq.decode(codes, cb).T
+    np.testing.assert_allclose(np.asarray(s_adc), np.asarray(s_exact),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ema_update_moves_codebooks_toward_data():
+    X = jnp.ones((64, 8)) * 3.0
+    cb = jnp.zeros((2, 4, 4))
+    codes = pq.assign(X, cb)
+    cb2 = pq.codebook_ema_update(cb, X, codes, decay=0.5)
+    # the assigned codeword moved halfway toward 3.0
+    assert float(jnp.max(cb2)) > 1.0

@@ -1,0 +1,144 @@
+"""Optimizer + train-state + checkpoint + grad-compression tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import givens
+from repro.data import synthetic
+from repro.models import transformer as tfm
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compress as gc
+from repro.training import optimizer as opt
+from repro.training import train_state as ts
+
+
+def _tiny_cfg(**kw):
+    return tfm.TransformerConfig(
+        name="t", num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+        head_dim=8, d_ff=64, vocab_size=97, dtype=jnp.float32,
+        param_dtype=jnp.float32, q_chunk=8, xent_chunk=16, **kw)
+
+
+def test_adam_matches_reference_on_quadratic():
+    cfg = opt.OptimizerConfig(lr=0.1, beta1=0.9, beta2=0.999, grad_clip=0.0,
+                              warmup_steps=0, schedule="constant")
+    params = {"w": jnp.ones((4,)) * 2.0}
+    state = opt.init(params, cfg)
+    # reference adam in numpy
+    w = np.ones(4) * 2.0
+    m = np.zeros(4)
+    v = np.zeros(4)
+    for t in range(1, 6):
+        g = 2 * (w - 1.0)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g**2
+        w = w - 0.1 * (m / (1 - 0.9**t)) / (np.sqrt(v / (1 - 0.999**t)) + 1e-8)
+        grads = {"w": jnp.asarray(2 * (np.asarray(params["w"]) - 1.0))}
+        params, state = opt.update(grads, state, params, cfg, jax.random.PRNGKey(t))
+    np.testing.assert_allclose(np.asarray(params["w"]), w, rtol=1e-5)
+
+
+def test_manifold_leaves_get_gcd_not_adam():
+    cfg = opt.OptimizerConfig(lr=0.1, gcd_method="greedy", gcd_lr=0.05)
+    params = {"R": jnp.eye(8), "w": jnp.zeros((8,))}
+    state = opt.init(params, cfg)
+    G = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    grads = {"R": G, "w": jnp.ones((8,))}
+    new_params, _ = opt.update(grads, state, params, cfg, jax.random.PRNGKey(1))
+    # R stays exactly orthogonal (GCD), w moved by adam
+    assert float(givens.orthogonality_error(new_params["R"])) < 1e-5
+    assert not np.allclose(np.asarray(new_params["R"]), np.eye(8))
+    assert not np.allclose(np.asarray(new_params["w"]), 0.0)
+
+
+def test_frozen_method_keeps_rotation():
+    cfg = opt.OptimizerConfig(gcd_method="frozen")
+    params = {"R": jnp.eye(6)}
+    state = opt.init(params, cfg)
+    grads = {"R": jax.random.normal(jax.random.PRNGKey(0), (6, 6))}
+    new_params, _ = opt.update(grads, state, params, cfg, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(new_params["R"]), np.eye(6))
+
+
+def test_adafactor_state_is_factored_and_converges():
+    cfg = opt.OptimizerConfig(name="adafactor", lr=0.3, grad_clip=0.0,
+                              warmup_steps=0, schedule="constant")
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16))}
+    state = opt.init(params, cfg)
+    assert state.mu["w"].shape == (8,)
+    assert state.nu["w"].shape == (16,)
+    target = jnp.ones((8, 16))
+    for t in range(60):
+        g = 2 * (params["w"] - target)
+        params, state = opt.update({"w": g}, state, params, cfg,
+                                   jax.random.PRNGKey(t))
+    assert float(jnp.abs(params["w"] - target).mean()) < 0.15
+
+
+def test_accum_steps_equivalent_loss_and_grads():
+    cfg = _tiny_cfg()
+    p = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    tok, lab = synthetic.lm_batch(jax.random.PRNGKey(1), 8, 16, 97)
+    outs = {}
+    for A in (1, 2, 4):
+        ocfg = opt.OptimizerConfig(accum_steps=A, lr=0.0, gcd_method="frozen",
+                                   grad_clip=0.0)
+        step = jax.jit(ts.make_train_step(
+            lambda pp, t, l: tfm.forward_train(pp, t, l, cfg), ocfg))
+        st = ts.init_state(jax.random.PRNGKey(2), p, ocfg)
+        _, m = step(st, tok, lab)
+        outs[A] = (float(m["loss"]), float(m["grad_norm"]))
+    for A in (2, 4):
+        assert np.isclose(outs[A][0], outs[1][0], rtol=1e-5)
+        assert np.isclose(outs[A][1], outs[1][1], rtol=1e-4)
+
+
+def test_checkpoint_atomicity_and_keep_n():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": np.arange(10), "b": {"c": np.ones((3, 3))}}
+        for s in (1, 2, 3, 4):
+            ckpt.save(d, s, tree, keep_n=2)
+        assert ckpt.latest_step(d) == 4
+        dirs = sorted(os.listdir(d))
+        assert len(dirs) == 2  # keep_n respected
+        # a partial (manifest-less) dir must be ignored
+        os.makedirs(os.path.join(d, "step_0000000099"))
+        assert ckpt.latest_step(d) == 4
+        restored, man = ckpt.restore_latest(d, tree)
+        np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+        assert man["step"] == 4
+
+
+def test_train_launcher_resume_exact():
+    """Kill/restart mid-run resumes bit-exact (fault-tolerance contract)."""
+    from repro.launch import train as train_mod
+    with tempfile.TemporaryDirectory() as d:
+        # run 6 steps straight
+        state_a, hist_a = train_mod.train(
+            "two-tower-retrieval", steps=6, batch=8, ckpt_dir=None,
+            seed=3, log_every=100)
+        # same 6-step job, crash after 3, then resume
+        train_mod.train("two-tower-retrieval", steps=6, batch=8, ckpt_dir=d,
+                        seed=3, ckpt_every=100, log_every=100, stop_after=3)
+        state_b, hist_b = train_mod.train(
+            "two-tower-retrieval", steps=6, batch=8, ckpt_dir=d, seed=3,
+            ckpt_every=100, log_every=100)
+        assert np.isclose(hist_a[-1], hist_b[-1], rtol=1e-4), (hist_a, hist_b)
+
+
+def test_ef_compression_unbiased_over_time():
+    rng = np.random.RandomState(0)
+    g_true = jnp.asarray(rng.randn(256).astype(np.float32))
+    err = jnp.zeros_like(g_true)
+    acc_q = np.zeros(256)
+    acc_t = np.zeros(256)
+    for i in range(100):
+        q, scale, err = gc.ef_quantize(g_true, err, axis_size=2)
+        acc_q += np.asarray(q, np.float32) * float(scale) * 2
+        acc_t += np.asarray(g_true)
+    # error feedback: the long-run average matches full precision
+    np.testing.assert_allclose(acc_q / 100, acc_t / 100, atol=1e-2)
