@@ -1,11 +1,17 @@
-"""ANN serving example: build a PQ index with a GCD-learned rotation and
-serve batched maximum-inner-product queries via ADC.
+"""ANN serving example: GCD-learned rotation deployed as a live IVF-PQ index.
 
-The serving path is exactly the paper's T(X) = φ(XR)Rᵀ deployed as an index:
-  * offline: learn (R, codebooks) with GCD, encode the corpus to uint8 codes
-    (32× compression at D=8 on 64-dim vectors vs f32);
-  * online: per query batch, one LUT build (b·D·K dots) + ADC scan over the
-    corpus (the Pallas adc_lookup kernel's job on TPU).
+The serving path is the paper's T(X) = φ(XR)Rᵀ deployed at production shape
+(repro.index):
+  * offline: learn (R, codebooks) with GCD, then build an IVF-PQ index —
+    k-means coarse lists over XR plus residual PQ codes in a block-aligned
+    CSR layout (~16× compression at D=16 uint8 codes on 64-dim f32 vectors,
+    before list padding);
+  * online: per query batch, probe the top-``nprobe`` lists and scan only
+    those (the Pallas ivf_adc kernel's job on TPU) — ~10–100× less scan
+    work than the flat ADC path at matched recall;
+  * continuously: after each GCD training step, ``refresh_rotation``
+    absorbs the rotation delta into centroids+codebooks in O(n²) — the
+    index stays servable between training steps with no corpus re-encode.
 
 Run:  PYTHONPATH=src python examples/serve_ann.py
 """
@@ -15,14 +21,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import opq, pq
+from repro.core import givens, opq, pq
 from repro.data import synthetic
-from repro.kernels import ops
+from repro.index import ivf, maintain, search
+from repro.metrics import recall_at_k
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    N, dim, D, K = 100_000, 64, 16, 256
+    N, dim, D, K, L = 100_000, 64, 16, 256, 256
     corpus = synthetic.sift_like(key, N, dim)
     queries = synthetic.sift_like(jax.random.PRNGKey(1), 256, dim)
 
@@ -31,37 +38,53 @@ def main():
     R, cb, trace = opq.alternating_minimization(
         jax.random.PRNGKey(2), corpus[:8192], pq.PQConfig(D, K), iters=15,
         rotation_solver="gcd_greedy", inner_steps=5, lr=2e-3)
-    print(f"index learned in {time.time()-t0:.1f}s "
+    print(f"rotation learned in {time.time()-t0:.1f}s "
           f"(distortion {float(trace[0]):.3f} → {float(trace[-1]):.3f})")
 
-    codes = pq.assign(corpus @ R, cb).astype(jnp.uint8)
-    print(f"codes: {codes.shape} uint8 ({codes.size/2**20:.0f} MiB — "
-          f"{corpus.size*4/codes.size:.0f}× compression)")
-
-    # --- serve a query batch
-    @jax.jit
-    def serve(q_batch):
-        lut = pq.adc_lut(q_batch @ R, cb)          # (b, D, K)
-        scores = ops.adc_lookup(lut, codes.astype(jnp.int32), use_kernel=False)
-        return jax.lax.top_k(scores, 10)
-
-    scores, top10 = serve(queries)
-    jax.block_until_ready(top10)
+    # --- build the IVF-PQ index on the learned rotation
+    cfg = ivf.IVFPQConfig(num_lists=L, pq=pq.PQConfig(D, K), block_size=128)
     t0 = time.time()
-    for _ in range(3):
-        jax.block_until_ready(serve(queries))
-    dt = (time.time() - t0) / 3
-    print(f"served 256 queries × {N} items in {dt*1e3:.1f} ms "
-          f"({256*N/dt/1e9:.2f} G score/s on CPU)")
+    index = ivf.build(jax.random.PRNGKey(3), corpus, R, cfg, train_size=16384)
+    code_mib = index.codes.shape[0] * D / 2**20  # uint8-equivalent payload
+    print(f"index built in {time.time()-t0:.1f}s: {L} lists, "
+          f"cap {index.capacity} rows, codes ≈{code_mib:.0f} MiB "
+          f"({corpus.size*4/(index.capacity*D):.0f}× compression)")
 
-    # recall@10 vs exact search
-    exact = jnp.argsort(-(queries @ corpus.T), axis=1)[:, :10]
-    rec = np.mean([
-        len(set(np.asarray(top10[i]).tolist())
-            & set(np.asarray(exact[i]).tolist())) / 10
-        for i in range(256)
-    ])
-    print(f"recall@10 vs exact MIPS: {rec:.3f}")
+    # --- serve query batches at a few nprobe settings
+    exact = np.asarray(jnp.argsort(-(queries @ corpus.T), axis=1)[:, :10])
+    max_blocks = index.max_list_blocks()  # hoisted: keep host sync out of loop
+    for nprobe in (8, 32):
+        res = search.search_fixed(index, queries, nprobe=nprobe, k=10,
+                                  max_blocks=max_blocks, use_kernel=False)
+        jax.block_until_ready(res.scores)
+        t0 = time.time()
+        for _ in range(3):
+            jax.block_until_ready(
+                search.search_fixed(index, queries, nprobe=nprobe, k=10,
+                                    max_blocks=max_blocks,
+                                    use_kernel=False).scores)
+        dt = (time.time() - t0) / 3
+        print(f"nprobe={nprobe:3d}: served 256 queries in {dt*1e3:.1f} ms "
+              f"({256/dt:.0f} qps), scanned {float(jnp.mean(res.scanned)):.0f}"
+              f"/{index.capacity} rows/query, "
+              f"recall@10 vs exact {recall_at_k(np.asarray(res.ids), exact):.3f}")
+
+    # --- keep serving across a GCD training step: refresh, don't rebuild
+    def distortion_loss(Rm):
+        return pq.distortion(corpus[:8192] @ Rm, index.codebooks)
+
+    G = jax.grad(distortion_loss)(index.R)
+    jax.block_until_ready(maintain.subspace_gcd_step(index, G, 2e-3)[0].R)
+    t0 = time.time()  # timed second call: refresh cost, not jit compile
+    index2, (pi, pj, theta) = maintain.subspace_gcd_step(index, G, 2e-3)
+    jax.block_until_ready(index2.R)
+    print(f"refresh_rotation after GCD step: {time.time()-t0:.3f}s, "
+          f"orthogonality drift {float(givens.orthogonality_error(index2.R)):.2e}, "
+          f"code mismatch vs full re-encode "
+          f"{float(maintain.refresh_mismatch(index2, corpus))*100:.2f}%")
+    res = search.search(index2, queries, nprobe=32, k=10, use_kernel=False)
+    print(f"post-refresh recall@10 vs exact: "
+          f"{recall_at_k(np.asarray(res.ids), exact):.3f}")
 
 
 if __name__ == "__main__":

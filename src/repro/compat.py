@@ -1,0 +1,35 @@
+"""Version-compat shims over JAX APIs that moved between release lines.
+
+The repo targets both the installed 0.4.x line and current JAX:
+
+  * ``shard_map``: ``jax.experimental.shard_map.shard_map(check_rep=...)``
+    on 0.4.x became top-level ``jax.shard_map(check_vma=...)``.
+  * mesh construction with ``axis_types`` lives in
+    ``launch.mesh.make_mesh_compat`` (kept there because the launch layer
+    owns mesh policy; it is the same guard pattern as here).
+
+Every call site goes through these wrappers instead of feature-testing
+inline.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` across JAX generations.
+
+    ``check_vma`` follows the new-API name; it is translated to the old
+    ``check_rep`` kwarg on 0.4.x. ``None`` leaves the library default.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

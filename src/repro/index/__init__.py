@@ -1,0 +1,24 @@
+"""repro.index — IVF-PQ serving layer over the GCD rotation machinery.
+
+Turns the paper's T(X) = φ(XR)Rᵀ into a production-shaped ANN index:
+
+  ivf       build: coarse k-means over rotated vectors + residual PQ,
+            packed into a block-aligned CSR pytree (IVFPQIndex)
+  search    batched query engine: probe top-nprobe lists, per-query LUTs,
+            fused Pallas selected-block ADC scan (kernels/ivf_adc.py)
+  maintain  incremental add/remove and refresh_rotation — absorb a GCD
+            training step into a live index without re-encoding the corpus
+
+Quick start::
+
+    from repro.index import ivf, search, maintain
+    cfg = ivf.IVFPQConfig(num_lists=256, pq=PQConfig(16, 256))
+    index = ivf.build(key, X, R, cfg)
+    res = search.search(index, Q, nprobe=16, k=10)   # res.scores, res.ids
+    index = maintain.refresh_rotation(index, pi, pj, theta)  # after a GCD step
+
+See README.md §Index serving for the layout and the recall/nprobe trade-off.
+"""
+from repro.index import ivf, maintain, search  # noqa: F401
+from repro.index.ivf import IVFPQConfig, IVFPQIndex  # noqa: F401
+from repro.index.search import SearchResult  # noqa: F401

@@ -1,0 +1,207 @@
+"""IVF-PQ index build: coarse quantizer + residual PQ in a CSR pytree.
+
+The paper deploys T(X) = φ(XR)Rᵀ as an ANN index; a flat ADC scan touches
+every item per query. This module adds the standard production refinement
+(cf. Transformed Residual Quantization, arXiv:1512.06925): a k-means coarse
+quantizer over the *rotated* vectors partitions the corpus into ``num_lists``
+inverted lists, and PQ encodes the **residual** x·R − c(x) instead of the raw
+vector. Scores then decompose exactly as
+
+    ⟨q·R, x·R⟩ ≈ ⟨q·R, c_l⟩  +  Σ_d LUT[d, code_d]      (coarse + residual)
+
+so a query only scans the ``nprobe`` lists with the best coarse term.
+
+Memory layout (the whole index is one jit-traceable pytree):
+
+  * ``codes (cap, D)`` / ``ids (cap,)`` — all lists concatenated, CSR style.
+  * ``list_offsets (L+1,)`` — row ranges; every offset is a multiple of
+    ``block_size`` so a list is an integer number of kernel tiles and the
+    Pallas scan (kernels/ivf_adc.py) can DMA list blocks straight from HBM
+    by block index — no gathers.
+  * holes (padding rows and tombstones from ``maintain.remove``) carry
+    ``id = −1`` and are masked out at score time; one all-hole sentinel
+    block sits at the end of the array as the target for out-of-range
+    block indices of shorter-than-max lists.
+
+Rotations enter twice: ``build`` consumes the GCD-learned R, and
+``maintain.refresh_rotation`` keeps the index servable across further GCD
+steps without touching the stored codes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from typing import NamedTuple
+
+from repro.core import pq
+
+
+class IVFPQConfig(NamedTuple):
+    """Static build parameters.
+
+    ``num_lists``: coarse cells L (scan work per query ≈ nprobe/L of corpus).
+    ``pq``: residual quantizer config (D subspaces × K codewords).
+    ``block_size``: CSR alignment = Pallas tile rows; lists are padded to a
+    multiple of it.
+    """
+
+    num_lists: int
+    pq: pq.PQConfig
+    block_size: int = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFPQIndex:
+    """Servable IVF-PQ index. Array fields are pytree leaves; ``block_size``
+    is static aux data so jit specializes on the tile shape."""
+
+    R: jax.Array             # (n, n) GCD-learned rotation
+    centroids: jax.Array     # (L, n) coarse centroids, rotated space
+    codebooks: jax.Array     # (D, K, sub) residual PQ codebooks
+    codes: jax.Array         # (cap, D) residual codes, CSR by list
+    #                          (uint8 when K ≤ 256, else int32 — see pack)
+    ids: jax.Array           # (cap,) int32 item ids, −1 = hole/tombstone
+    list_offsets: jax.Array  # (L+1,) int32, multiples of block_size
+    block_size: int = 128
+
+    def tree_flatten(self):
+        children = (self.R, self.centroids, self.codebooks, self.codes,
+                    self.ids, self.list_offsets)
+        return children, self.block_size
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, block_size=aux)
+
+    # -- static shape facts ------------------------------------------------
+    @property
+    def num_lists(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Total CSR rows, including padding and the sentinel hole block."""
+        return self.codes.shape[0]
+
+    @property
+    def sentinel_block(self) -> int:
+        """Block index of the trailing all-hole block (see module doc)."""
+        return self.capacity // self.block_size - 1
+
+    def num_items(self) -> jax.Array:
+        return jnp.sum(self.ids >= 0)
+
+    def max_list_blocks(self) -> int:
+        """Longest list measured in blocks — the static probe-window size
+        for search. Host-sync on concrete offsets (pure numpy so it stays
+        usable inside an outer jit trace closing over a concrete index)."""
+        lens = np.diff(np.asarray(self.list_offsets))
+        return max(int(lens.max()) // self.block_size, 1)
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+
+def coarse_kmeans(key: jax.Array, XR: jax.Array, num_lists: int,
+                  iters: int = 10) -> jax.Array:
+    """Full-vector k-means via the PQ machinery with a single subspace:
+    PQConfig(1, L) codebooks (1, L, n) are exactly L centroids."""
+    cb, _ = pq.kmeans(key, XR, pq.PQConfig(1, num_lists), iters=iters)
+    return cb[0]
+
+
+def coarse_assign(XR: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest centroid per rotated vector: (m, n) -> (m,) int32."""
+    return pq.assign(XR, centroids[None, ...])[:, 0]
+
+
+def encode(XR: jax.Array, centroids: jax.Array,
+           codebooks: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Assign lists and residual-encode already-rotated vectors.
+
+    Returns (list_ids (m,), codes (m, D)). Pure jnp — also the "full
+    rebuild" oracle that ``maintain.refresh_rotation`` is tested against.
+    """
+    list_ids = coarse_assign(XR, centroids)
+    residuals = XR - centroids[list_ids]
+    return list_ids, pq.assign(residuals, codebooks)
+
+
+def pack(R: jax.Array, centroids: jax.Array, codebooks: jax.Array,
+         codes: jax.Array, list_ids: jax.Array,
+         ids: jax.Array, block_size: int = 128) -> IVFPQIndex:
+    """Lay encoded items out in block-aligned CSR order (host-side; numpy).
+
+    Each list is padded to a multiple of ``block_size`` with hole rows
+    (id −1, code 0) and a sentinel all-hole block is appended.
+    """
+    list_ids = np.asarray(list_ids)
+    codes = np.asarray(codes)
+    ids = np.asarray(ids, dtype=np.int32)
+    L = centroids.shape[0]
+    D = codebooks.shape[0]
+
+    counts = np.bincount(list_ids, minlength=L)
+    padded = -(-counts // block_size) * block_size  # per-list rounded up
+    offsets = np.zeros(L + 1, dtype=np.int32)
+    np.cumsum(padded, out=offsets[1:])
+    cap = int(offsets[-1]) + block_size  # + sentinel hole block
+
+    K = codebooks.shape[1]
+    code_dtype = np.uint8 if K <= 256 else np.int32
+    codes_out = np.zeros((cap, D), dtype=code_dtype)
+    ids_out = np.full((cap,), -1, dtype=np.int32)
+
+    order = np.argsort(list_ids, kind="stable")
+    sorted_lists = list_ids[order]
+    # rank of each item within its list = position − start of its run
+    run_starts = np.zeros(L, dtype=np.int64)
+    np.cumsum(counts[:-1], out=run_starts[1:])
+    ranks = np.arange(len(order)) - run_starts[sorted_lists]
+    dest = offsets[sorted_lists] + ranks
+    codes_out[dest] = codes[order]
+    ids_out[dest] = ids[order]
+
+    return IVFPQIndex(
+        R=jnp.asarray(R),
+        centroids=jnp.asarray(centroids),
+        codebooks=jnp.asarray(codebooks),
+        codes=jnp.asarray(codes_out),
+        ids=jnp.asarray(ids_out),
+        list_offsets=jnp.asarray(offsets),
+        block_size=block_size,
+    )
+
+
+def build(key: jax.Array, X: jax.Array, R: jax.Array, cfg: IVFPQConfig, *,
+          ids: jax.Array | None = None, coarse_iters: int = 10,
+          pq_iters: int = 10, train_size: int | None = None) -> IVFPQIndex:
+    """End-to-end index build from raw vectors and a learned rotation.
+
+    ``train_size`` caps the sample used for the two k-means fits (the full
+    corpus is always encoded). Host-side orchestration around jit'd pieces —
+    build is offline; serving (search/maintain) is the jit'd hot path.
+    """
+    kc, kp = jax.random.split(key)
+    XR = X @ R
+    XT = XR if train_size is None else XR[:train_size]
+    centroids = coarse_kmeans(kc, XT, cfg.num_lists, iters=coarse_iters)
+    train_lists = coarse_assign(XT, centroids)
+    codebooks, _ = pq.kmeans(
+        kp, XT - centroids[train_lists], cfg.pq, iters=pq_iters
+    )
+    list_ids, codes = encode(XR, centroids, codebooks)
+    if ids is None:
+        ids = jnp.arange(X.shape[0], dtype=jnp.int32)
+    return pack(R, centroids, codebooks, codes, list_ids, ids,
+                block_size=cfg.block_size)

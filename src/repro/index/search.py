@@ -1,0 +1,154 @@
+"""Batched IVF-PQ query engine.
+
+Per query batch (b, n):
+
+  1. rotate:       QR = Q·R  (the paper's serving transform)
+  2. probe:        coarse scores QR·Cᵀ, keep the top-``nprobe`` lists
+  3. LUT build:    one (D, K) inner-product table per query against the
+                   *residual* codebooks — b·D·K dots, shared by all probes
+  4. scan:         selected list blocks scored by the fused Pallas kernel
+                   (kernels/ivf_adc.py) or its jnp oracle; the coarse term
+                   ⟨q·R, c_l⟩ is added per block group outside the kernel
+  5. top-k:        over nprobe·max_blocks·block_size masked candidates
+
+Because every list is padded to whole ``block_size`` tiles (ivf.pack), the
+probe window of each (query, list) pair is a fixed ``max_blocks`` tiles:
+shorter lists redirect their out-of-range tiles to the index's all-hole
+sentinel block, whose ids are −1 and therefore score −inf. Scan work per
+query is nprobe·max_blocks·block_size rows versus the corpus size for the
+flat scan — the recall/work trade-off is entirely in ``nprobe``.
+
+Device sharding: under an active mesh the candidate axis is annotated with
+the ``ivf`` rule table (sharding/rules.py) so XLA splits list scanning over
+the "model" axis while the query batch stays data-parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq
+from repro.index.ivf import IVFPQIndex
+from repro.kernels import ops as kops
+from repro.sharding import rules as sh
+
+NEG_INF = -jnp.inf
+
+
+class SearchResult(NamedTuple):
+    scores: jax.Array   # (b, k) approximate inner products, descending
+    ids: jax.Array      # (b, k) item ids (−1 where fewer than k candidates)
+    scanned: jax.Array  # (b,) CSR rows scanned per query (scan-work metric)
+
+
+def probe(index: IVFPQIndex, QR: jax.Array,
+          nprobe: int) -> tuple[jax.Array, jax.Array]:
+    """Top-``nprobe`` lists per rotated query: ((b, p) lists, (b, p) coarse
+    scores ⟨q·R, c_l⟩ — the additive coarse term of the final score)."""
+    coarse = QR @ index.centroids.T  # (b, L)
+    cscores, lists = jax.lax.top_k(coarse, nprobe)
+    return lists, cscores
+
+
+def candidate_blocks(index: IVFPQIndex, lists: jax.Array,
+                     max_blocks: int) -> tuple[jax.Array, jax.Array]:
+    """Tile schedule for the probed lists.
+
+    Returns (block_idx (b, p, B) int32 tile indices into the CSR codes
+    array, valid (b, p, B) bool). Out-of-range tiles of short lists point at
+    the sentinel hole block (still masked via ids, but ``valid`` lets the
+    scan-work metric count only real tiles).
+    """
+    bs = index.block_size
+    starts = index.list_offsets[lists] // bs                      # (b, p)
+    nblocks = (index.list_offsets[lists + 1]
+               - index.list_offsets[lists]) // bs                 # (b, p)
+    k = jnp.arange(max_blocks, dtype=jnp.int32)
+    blk = starts[..., None] + k
+    valid = k < nblocks[..., None]
+    return jnp.where(valid, blk, index.sentinel_block).astype(jnp.int32), valid
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
+)
+def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
+                 max_blocks: int, use_kernel: bool = True) -> SearchResult:
+    """Jit-friendly core: ``max_blocks`` (the per-list probe window in tiles,
+    ≥ index.max_list_blocks() for exactness) is passed statically."""
+    b = Q.shape[0]
+    bs = index.block_size
+    QR = sh.constrain(Q @ index.R, ("act_batch", None), sh.IVF_RULES)
+
+    lists, cscores = probe(index, QR, nprobe)
+    lut = pq.adc_lut(QR, index.codebooks)                      # (b, D, K)
+
+    blk, valid = candidate_blocks(index, lists, max_blocks)    # (b, p, B)
+    S = b * nprobe * max_blocks
+    block_idx = blk.reshape(S)
+    block_query = jnp.repeat(
+        jnp.arange(b, dtype=jnp.int32), nprobe * max_blocks
+    )
+
+    res_scores = kops.ivf_adc(
+        lut, index.codes, block_idx, block_query,
+        block_size=bs, use_kernel=use_kernel,
+    ).reshape(b, nprobe, max_blocks, bs)
+    scores = res_scores + cscores[:, :, None, None]            # + coarse term
+
+    rows = blk[..., None] * bs + jnp.arange(bs)                # (b, p, B, bs)
+    cand_ids = index.ids[rows]
+    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
+    scores = sh.constrain(
+        scores.reshape(b, -1), ("act_batch", "ivf_cand"), sh.IVF_RULES
+    )
+
+    # k can exceed the candidate pool (small nprobe, large k): clamp the
+    # top_k and pad back out to the promised (b, k) with (−inf, −1).
+    kk = min(k, scores.shape[1])
+    top_scores, pos = jax.lax.top_k(scores, kk)
+    top_ids = jnp.take_along_axis(cand_ids.reshape(b, -1), pos, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
+    if kk < k:
+        top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),
+                             constant_values=NEG_INF)
+        top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    scanned = jnp.sum(valid.reshape(b, -1), axis=1) * bs
+    return SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+
+
+def search(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
+           use_kernel: bool = True) -> SearchResult:
+    """Batched ANN search: (b, n) queries -> top-k (scores, ids, scanned).
+
+    Convenience wrapper that reads the probe-window size off the concrete
+    index (one host sync) and dispatches to the jit'd ``search_fixed``.
+    """
+    nprobe = min(nprobe, index.num_lists)
+    return search_fixed(
+        index, Q, nprobe=nprobe, k=k,
+        max_blocks=index.max_list_blocks(), use_kernel=use_kernel,
+    )
+
+
+def flat_adc_scores(index: IVFPQIndex, Q: jax.Array, *,
+                    use_kernel: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Flat baseline over the same quantized representation: score every CSR
+    row (coarse term + residual ADC). Returns ((b, cap) scores with holes at
+    −inf, (cap,) ids) — the exactness oracle for nprobe = num_lists and the
+    scan-work baseline for the recall/QPS benchmark."""
+    QR = Q @ index.R
+    lut = pq.adc_lut(QR, index.codebooks)
+    res = kops.adc_lookup(lut, index.codes, use_kernel=use_kernel)  # (b, cap)
+    # coarse term per row: row r belongs to list l iff offsets[l] ≤ r < offsets[l+1]
+    row_list = jnp.searchsorted(
+        index.list_offsets, jnp.arange(index.capacity), side="right"
+    ) - 1
+    row_list = jnp.clip(row_list, 0, index.num_lists - 1).astype(jnp.int32)
+    coarse = QR @ index.centroids.T                                 # (b, L)
+    scores = res + coarse[:, row_list]
+    scores = jnp.where(index.ids[None, :] >= 0, scores, NEG_INF)
+    return scores, index.ids

@@ -6,7 +6,9 @@ beyond-paper extensions) exercise are:
   givens_rotate   apply n/2 disjoint Givens rotations (plane combine)
   gcd_score       A = GᵀR − RᵀG fused matmul + antisymmetrize
   pq_assign       nearest-codeword search fused with argmin epilogue
-  adc_lookup      ADC score scan via the one-hot MXU trick
+  adc_lookup      ADC score scan via the one-hot MXU trick (flat corpus)
+  ivf_adc         selected-block ADC scan for the IVF index — the tile
+                  schedule arrives via scalar prefetch (repro.index.search)
   embedding_bag   scalar-prefetch gather + bag-sum (recsys substrate)
 
 ``ops`` holds the jit'd wrappers (public API), ``ref`` the pure-jnp oracles.

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused IVF-ADC scan over selected inverted-list blocks.
+
+Extends the one-hot-matmul ADC trick of ``adc_lookup.py`` from "score every
+item" to "score exactly the blocks the coarse probe selected". The search
+layer turns (query, probed list) pairs into a flat schedule of
+``block_size``-row tiles of the CSR codes array:
+
+    block_idx[s]   — which codes tile step s scans (tile units, not rows)
+    block_query[s] — which query's LUT scores it
+
+Both ride in as **scalar-prefetch** operands (PrefetchScalarGridSpec), so the
+BlockSpec index_map can steer the automatic HBM→VMEM pipeline straight at the
+selected tiles: codes reach VMEM as sequential tile DMAs — gather-free, same
+HBM traffic as a dense scan of the *selected* rows only. In VMEM the tile is
+one-hot expanded over K and contracted against the query's (D·K) LUT row on
+the MXU, exactly like the flat kernel.
+
+Grid: one step per selected (query, block) pair; out[s] = scores of the
+``block_size`` items of that tile (holes included — the caller masks ids<0).
+One LUT row per step keeps the schedule fully general (any query mix); batch
+efficiency comes from the ~100× fewer tiles the probe selects, not from
+sharing tiles between queries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET
+
+
+def _kernel(bi_ref, bq_ref, codes_ref, lut_ref, out_ref, *, K: int):
+    del bi_ref, bq_ref  # consumed by the index_maps
+    codes = codes_ref[...].astype(jnp.int32)         # (bn, D)
+    lut = lut_ref[...].astype(jnp.float32)           # (1, D, K)
+    bn, D = codes.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, D, K), 2)
+    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        onehot.reshape(bn, D * K),
+        lut.reshape(1, D * K),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, 1)
+    out_ref[...] = scores.reshape(1, bn).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def ivf_adc(
+    lut: jax.Array,
+    codes: jax.Array,
+    block_idx: jax.Array,
+    block_query: jax.Array,
+    *,
+    block_size: int = 128,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """lut (b, D, K) float, codes (cap, D) int (cap % block_size == 0),
+    block_idx / block_query (S,) int32  ->  scores (S, block_size) float32."""
+    b, D, K = lut.shape
+    S = block_idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((block_size, D), lambda i, bi, bq: (bi[i], 0)),
+            pl.BlockSpec((1, D, K), lambda i, bi, bq: (bq[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size), lambda i, bi, bq: (i, 0)),
+    )
+    # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
+    # VMEM — the kernel widens per tile; widening here would materialize a
+    # 4× int32 copy of the whole corpus per call.
+    return pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, block_size), jnp.float32),
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), block_query.astype(jnp.int32), codes, lut)

@@ -17,6 +17,7 @@ from repro.kernels import adc_lookup as _adc
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import gcd_score as _score
 from repro.kernels import givens_rotate as _rot
+from repro.kernels import ivf_adc as _ivf
 from repro.kernels import pq_assign as _assign
 from repro.kernels import ref
 
@@ -99,6 +100,18 @@ def adc_lookup(lut, codes, *, use_kernel: bool = True):
     if use_kernel:
         return _adc.adc_lookup(lut, codes)
     return ref.adc_lookup_ref(lut, codes)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "use_kernel"))
+def ivf_adc(lut, codes, block_idx, block_query, *, block_size: int = 128,
+            use_kernel: bool = True):
+    """Selected-block IVF-ADC scan: (b, D, K) LUTs × (cap, D) CSR codes ×
+    (S,) block schedule -> (S, block_size) scores."""
+    if use_kernel:
+        return _ivf.ivf_adc(lut, codes, block_idx, block_query,
+                            block_size=block_size)
+    return ref.ivf_adc_ref(lut, codes, block_idx, block_query,
+                           block_size=block_size)
 
 
 @functools.partial(jax.jit, static_argnames=("num_bags", "use_kernel"))

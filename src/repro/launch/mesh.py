@@ -19,22 +19,30 @@ ICI_BW = 50e9                 # bytes/s per link
 CHIP_HBM_BYTES = 16 * 1024**3  # v5e: 16 GiB
 
 
+def make_mesh_compat(shape, axes, **kwargs):
+    """``jax.make_mesh`` across JAX API generations.
+
+    Newer JAX requires explicit ``axis_types`` (``jax.sharding.AxisType``)
+    for Auto axes; older releases (≤0.4.x) have neither the kwarg nor the
+    enum. All mesh construction in this repo funnels through here so both
+    generations work unmodified.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs.setdefault("axis_types", (axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh with the production axis names — smoke tests and
     benches run the same model code without 512 fake devices."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def num_chips(mesh) -> int:

@@ -1,0 +1,21 @@
+"""Retrieval quality metrics shared by examples, benchmarks, and tests."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray,
+                k: int | None = None) -> float:
+    """Mean fraction of each row's true top-k found in the predicted top-k.
+
+    ``pred_ids`` may contain −1 padding (repro.index returns it when fewer
+    than k candidates survive); padding never counts as a hit.
+    """
+    pred_ids = np.asarray(pred_ids)
+    true_ids = np.asarray(true_ids)
+    k = k if k is not None else true_ids.shape[1]
+    hits = []
+    for i in range(pred_ids.shape[0]):
+        pred = {p for p in pred_ids[i, :k].tolist() if p >= 0}
+        hits.append(len(pred & set(true_ids[i, :k].tolist())) / k)
+    return float(np.mean(hits))

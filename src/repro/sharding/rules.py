@@ -93,6 +93,19 @@ RECSYS_BASE_RULES: dict[str, Any] = {
 # Paper's own two-tower (dim 512): tiny — replicate weights, shard batch.
 PAPER_RULES: dict[str, Any] = dict(RECSYS_BASE_RULES)
 
+# IVF-PQ serving (repro.index): queries are data-parallel; the flattened
+# candidate axis (nprobe·blocks·block_size per query) is the big one and
+# shards over "model", which splits the selected-list scan across devices.
+# Index storage (centroids, codebooks, CSR codes/ids) is replicated by
+# default — at 2 B/row/subspace a 100M-item index is ~3 GiB, well under
+# chip HBM; a row-sharded variant would flip "ivf_cap" to "model".
+IVF_RULES: dict[str, Any] = {
+    "act_batch": ("pod", "data"),
+    "ivf_cand": "model",
+    "ivf_cap": None,
+    "ivf_lists": None,
+}
+
 # Rotation/PQ parameters are small and replicated everywhere.
 for _t in (LM_BASE_RULES, GNN_BASE_RULES, RECSYS_BASE_RULES, PAPER_RULES):
     _t.update({"rot_in": None, "rot_out": None, "pq_sub": None,
@@ -155,6 +168,7 @@ RULE_REGISTRY: dict[str, dict[str, Any]] = {
     "gnn": GNN_BASE_RULES,
     "recsys": RECSYS_BASE_RULES,
     "paper": PAPER_RULES,
+    "ivf": IVF_RULES,
 }
 
 

@@ -1,0 +1,77 @@
+"""Test-suite bootstrap: make collection survive a missing ``hypothesis``.
+
+The property-based tests (test_givens / test_pq / test_matching /
+test_kernels) import ``hypothesis`` at module scope. On minimal images the
+package is absent (it is a dev-only dependency — see requirements-dev.txt);
+without this shim pytest dies at collection with ImportError and the entire
+suite is lost. The shim installs a tiny stub module whose ``@given`` replaces
+the test with a runtime ``pytest.skip``, so:
+
+  * with hypothesis installed, the property tests run as written;
+  * without it, they are reported as skipped and every example-based test in
+    the same modules still runs.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import pytest
+
+try:
+    import hypothesis  # noqa: F401  (real package present — nothing to do)
+except ImportError:
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    def _strategy(*_a, **_k):  # placeholder for st.integers(...) etc.
+        return None
+
+    for _name in (
+        "integers", "floats", "booleans", "sampled_from", "lists", "tuples",
+        "composite", "just", "one_of", "text",
+    ):
+        setattr(st, _name, _strategy)
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+
+        return deco
+
+    class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+        def __init__(self, *_a, **_k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(_name, *_a, **_k):
+            pass
+
+        @staticmethod
+        def load_profile(_name):
+            pass
+
+    class HealthCheck:
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    def assume(_cond=True):
+        return True
+
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    hyp.assume = assume
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

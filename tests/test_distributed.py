@@ -29,14 +29,14 @@ HEADER = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     import numpy as np
+    from repro.launch.mesh import make_mesh_compat
 """)
 
 
 def test_sharded_embedding_lookup_matches_dense():
     res = _run(HEADER + textwrap.dedent("""
         from repro.models import embedding
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         V, dim = 64, 8
         table = jax.random.normal(jax.random.PRNGKey(0), (V, dim))
         ids = jax.random.randint(jax.random.PRNGKey(1), (10,), 0, V)
@@ -52,10 +52,9 @@ def test_mini_dryrun_cell_compiles_on_8_devices():
     cell and parse roofline terms."""
     res = _run(HEADER + textwrap.dedent("""
         import repro.launch.mesh as mesh_lib
-        mesh_lib.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+        mesh_lib.make_production_mesh = lambda multi_pod=False: make_mesh_compat(
             (2,2,2) if multi_pod else (2,4),
-            ("pod","data","model") if multi_pod else ("data","model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*(3 if multi_pod else 2))
+            ("pod","data","model") if multi_pod else ("data","model"))
         from repro.launch.dryrun import run_cell
         rec = run_cell("graphsage-reddit", "molecule", False, verbose=False)
         rec2 = run_cell("graphsage-reddit", "molecule", True, verbose=False)
@@ -73,8 +72,7 @@ def test_ef_psum_int8_under_shard_map():
     res = _run(HEADER + textwrap.dedent("""
         from jax.sharding import PartitionSpec as P
         from repro.training import grad_compress as gc
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((8,), ("pod",))
         f = gc.make_compressed_crosspod_psum(mesh, "pod")
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))  # per-pod grads
         err = jnp.zeros((8, 64))
