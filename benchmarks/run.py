@@ -14,7 +14,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2a,fig2bc,table1,fig4,kernels,roofline")
+                    help="comma list: fig2a,fig2bc,table1,fig4,ivf,kernels,"
+                         "roofline")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -54,6 +55,15 @@ def main() -> None:
         _out, checks = fig4_runtime.run(
             dims=(64, 128, 256) if args.fast else (64, 128, 256, 512))
         failures += [f"fig4/{k}" for k, v in checks.items() if not v]
+
+    if want("ivf"):
+        from benchmarks import ivf_recall_qps
+        _res, checks = ivf_recall_qps.run(
+            n=20_000 if args.fast else 100_000,
+            queries=64 if args.fast else 256,
+            lists=64 if args.fast else 256,
+            depths=(1, 2))
+        failures += [f"ivf/{k}" for k, v in checks.items() if not v]
 
     if want("kernels"):
         from benchmarks import kernels_micro

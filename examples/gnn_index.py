@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import opq, pq
+from repro import quant
+from repro.quant import opq
 from repro.data import graph as graph_lib
 from repro.models import gnn
 from repro.training import optimizer as opt_lib
@@ -49,15 +50,16 @@ def main():
     print(f"node embeddings: {h.shape}")
 
     # index the embeddings with GCD rotation vs frozen
-    cfg_pq = pq.PQConfig(8, 32)
+    cfg_pq = quant.PQConfig(8, 32)
     exact = jnp.argsort(-(h @ h.T), axis=1)[:, 1:11]  # true top-10 neighbors
     for solver in ("frozen", "gcd_greedy"):
-        R, cb, trace = opq.alternating_minimization(
+        R, pqz, trace = opq.fit(
             jax.random.PRNGKey(3), h, cfg_pq, iters=15,
             rotation_solver=solver, inner_steps=5, lr=2e-3)
-        codes = pq.assign(h @ R, cb)
-        lut = pq.adc_lut(h @ R, cb)
-        approx = jnp.argsort(-pq.adc_score(lut, codes), axis=1)[:, 1:11]
+        codes = pqz.encode(h @ R)
+        tables = pqz.adc_tables(h @ R)
+        scores = quant.adc_score_tables(tables, codes, use_kernel=False)
+        approx = jnp.argsort(-scores, axis=1)[:, 1:11]
         rec = np.mean([
             len(set(np.asarray(approx[i]).tolist())
                 & set(np.asarray(exact[i]).tolist())) / 10

@@ -11,14 +11,15 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core import givens, opq, pq
+from repro.core import givens
 from repro.data import synthetic
+from repro.quant import PQConfig, opq
 
 
 def main():
     key = jax.random.PRNGKey(0)
     X = synthetic.sift_like(key, num=4096, dim=64)
-    cfg = pq.PQConfig(num_subspaces=8, num_codewords=32)
+    cfg = PQConfig(num_subspaces=8, num_codewords=32)
     print(f"data: {X.shape}, PQ D={cfg.num_subspaces} K={cfg.num_codewords}")
 
     for solver, kw in [

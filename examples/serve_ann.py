@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import givens, opq, pq
+from repro.core import givens
 from repro.data import synthetic
+from repro.quant import PQConfig, opq
 from repro.index import ivf, maintain, search
 from repro.metrics import recall_at_k
 
@@ -36,13 +37,13 @@ def main():
     print(f"corpus {N}×{dim} (f32: {N*dim*4/2**20:.0f} MiB)")
     t0 = time.time()
     R, cb, trace = opq.alternating_minimization(
-        jax.random.PRNGKey(2), corpus[:8192], pq.PQConfig(D, K), iters=15,
+        jax.random.PRNGKey(2), corpus[:8192], PQConfig(D, K), iters=15,
         rotation_solver="gcd_greedy", inner_steps=5, lr=2e-3)
     print(f"rotation learned in {time.time()-t0:.1f}s "
           f"(distortion {float(trace[0]):.3f} → {float(trace[-1]):.3f})")
 
     # --- build the IVF-PQ index on the learned rotation
-    cfg = ivf.IVFPQConfig(num_lists=L, pq=pq.PQConfig(D, K), block_size=128)
+    cfg = ivf.IVFPQConfig(num_lists=L, pq=PQConfig(D, K), block_size=128)
     t0 = time.time()
     index = ivf.build(jax.random.PRNGKey(3), corpus, R, cfg, train_size=16384)
     code_mib = index.codes.shape[0] * D / 2**20  # uint8-equivalent payload
@@ -71,7 +72,7 @@ def main():
 
     # --- keep serving across a GCD training step: refresh, don't rebuild
     def distortion_loss(Rm):
-        return pq.distortion(corpus[:8192] @ Rm, index.codebooks)
+        return index.quantizer.distortion(corpus[:8192] @ Rm)
 
     G = jax.grad(distortion_loss)(index.R)
     jax.block_until_ready(maintain.subspace_gcd_step(index, G, 2e-3)[0].R)

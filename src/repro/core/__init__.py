@@ -5,10 +5,14 @@ Modules:
   matching     GCD-R / GCD-G / GCD-S pair selection (+ exact DP test oracle)
   rotation     Trainable SO(n) rotation state & update (Algorithm 2)
   cayley       Cayley-transform baseline
-  pq           Product quantization (k-means, STE, ADC)
-  opq          OPQ alternating minimization + fixed-embedding harness (Fig 2)
-  index_layer  T(X) = φ(XR)Rᵀ trainable index layer (Fig 1)
-  kv_quant     PQ-compressed KV cache (paper technique on LM attention)
+  pq           compatibility shim → repro.quant (codebook/k-means substrate)
+  opq          compatibility shim → repro.quant.opq (alternating min, Fig 2)
+  index_layer  T(X) = φ(XR)Rᵀ trainable index layer (Fig 1), φ = quant.PQ
+  kv_quant     PQ-compressed KV cache (per-head quant.PQ on LM attention)
+
+Quantization itself lives in ``repro.quant`` (Quantizer protocol, PQ/RQ/VQ,
+shared k-means); core keeps the rotation-learning math that is this paper's
+contribution.
 """
 from repro.core import (  # noqa: F401
     cayley,

@@ -5,10 +5,17 @@ Forward rotates the batch into the PQ-friendly basis, product-quantizes with
 a straight-through estimator, and rotates back, so downstream retrieval loss
 sees (a differentiable surrogate of) exactly what the serving index returns.
 
+φ is a ``repro.quant`` Quantizer (a ``quant.PQ`` view over the param
+codebooks): the forward uses ``encode_st``, the loss term uses
+``distortion``, and serving uses ``encode``/``adc_tables`` — the same
+protocol every other quantizer consumer in the repo speaks.
+
 Parameters:
   * ``rot``: RotationState — updated by GCD (never by the inner optimizer).
   * ``codebooks``: (D, K, sub) — trained by the distortion loss (plain SGD
-    path) or by streaming EMA.
+    path) or by streaming EMA. Kept as a raw array leaf so the optimizer's
+    name-based manifold routing and launch/cells ParamSpecs see a flat tree;
+    ``quantizer()`` wraps it in the protocol object on demand.
 
 The total loss (Eq. 1) is  L_ret(T(X)) + (1/m)·‖XR − φ(XR)‖².
 """
@@ -19,7 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import opq, pq
+from repro import quant
 
 
 class IndexLayerConfig(NamedTuple):
@@ -29,8 +36,8 @@ class IndexLayerConfig(NamedTuple):
     distortion_weight: float = 1.0
 
     @property
-    def pq_cfg(self) -> pq.PQConfig:
-        return pq.PQConfig(self.num_subspaces, self.num_codewords)
+    def pq_cfg(self) -> quant.PQConfig:
+        return quant.PQConfig(self.num_subspaces, self.num_codewords)
 
 
 class IndexLayerParams(NamedTuple):
@@ -41,6 +48,11 @@ class IndexLayerParams(NamedTuple):
 
     R: jax.Array
     codebooks: jax.Array
+
+
+def quantizer(params: IndexLayerParams) -> quant.PQ:
+    """The layer's φ as a protocol object (view over the codebook leaf)."""
+    return quant.PQ(params.codebooks)
 
 
 def init(key: jax.Array, cfg: IndexLayerConfig, dtype=jnp.float32) -> IndexLayerParams:
@@ -60,8 +72,9 @@ def warm_start(
 ) -> IndexLayerParams:
     """Paper §3.2 setup: run OPQ on a warm-up sample to initialize R and the
     codebooks before joint training starts."""
-    R, cb, _ = opq.opq(key, X, cfg.pq_cfg, iters=opq_iters, kmeans_iters=kmeans_iters)
-    return IndexLayerParams(R=R, codebooks=cb)
+    R, pq_obj, _ = quant.opq.fit(key, X, cfg.pq_cfg, iters=opq_iters,
+                                 kmeans_iters=kmeans_iters)
+    return IndexLayerParams(R=R, codebooks=pq_obj.codebooks)
 
 
 def apply(params: IndexLayerParams, X: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -71,23 +84,22 @@ def apply(params: IndexLayerParams, X: jax.Array) -> tuple[jax.Array, jax.Array]
     ∂/∂codebooks comes from the distortion term; ∂/∂R is consumed by the GCD
     update outside (the caller differentiates wrt ``params.R``).
     """
-    R = params.R
-    XR = X @ R
-    q = pq.quantize_ste(XR, params.codebooks)
-    out = q @ R.T
-    dist = pq.distortion(XR, params.codebooks)
+    phi = quantizer(params)
+    XR = X @ params.R
+    out = phi.encode_st(XR) @ params.R.T
+    dist = phi.distortion(XR)
     return out, dist
 
 
 def apply_no_ste(params: IndexLayerParams, X: jax.Array) -> jax.Array:
     """Serving-path forward: hard quantization, no gradient bridging."""
-    R = params.R
-    return pq.quantize(X @ R, params.codebooks) @ R.T
+    phi = quantizer(params)
+    return phi.decode(phi.encode(X @ params.R)) @ params.R.T
 
 
 def encode(params: IndexLayerParams, X: jax.Array) -> jax.Array:
     """Index-build path: item codes (m, D) for the serving index."""
-    return pq.assign(X @ params.R, params.codebooks)
+    return quantizer(params).encode(X @ params.R)
 
 
 def adc_scores(params: IndexLayerParams, queries: jax.Array,
@@ -95,7 +107,8 @@ def adc_scores(params: IndexLayerParams, queries: jax.Array,
     """Serving-path ADC scoring: (b, n) queries × (N, D) codes -> (b, N).
 
     Inner-product scores in the rotated space equal scores in the original
-    space because R is orthogonal: ⟨q, φ(xR)Rᵀ⟩ = ⟨qR, φ(xR)⟩.
+    space because R is orthogonal: ⟨q, φ(xR)Rᵀ⟩ = ⟨qR, φ(xR)⟩. Scores go
+    through the shared ADC kernel family (jnp oracle path off-TPU).
     """
-    lut = pq.adc_lut(queries @ params.R, params.codebooks)
-    return pq.adc_score(lut, codes)
+    tables = quantizer(params).adc_tables(queries @ params.R)
+    return quant.adc_score_tables(tables, codes, use_kernel=False)

@@ -3,11 +3,14 @@ embedding-index layer transplanted onto LM attention (beyond-paper feature,
 see DESIGN.md §4).
 
 Keys/values are quantized **per head vector** (head_dim-dim) with a per-layer
-rotation R ∈ SO(head_dim) and per-layer codebooks, exactly the T(X)=φ(XR)Rᵀ
-structure of the paper. Decode-time attention never dequantizes the cache
-into dense form:
+rotation R ∈ SO(head_dim) and per-layer codebooks — each of keys and values
+is a ``quant.PQ`` instance (viewed over the ``cb_k``/``cb_v`` param leaves),
+exactly the T(X)=φ(XR)Rᵀ structure of the paper. Decode-time attention never
+dequantizes the cache into dense form:
 
-  * scores:  q·k̂ᵀ = Σ_d LUT[d, code_d]         (ADC, one gather per subspace)
+  * scores:  q·k̂ᵀ = Σ_d LUT[d, code_d] — ADC through the shared kernel
+             family's grouped member (kernels/adc_batch.py; one (batch,
+             kv-head) pair per group, GQA rep queries per group)
   * output:  Σ_s w_s·v̂_s = Σ_{d,k} H[d,k]·C_v[d,k]  with the weight histogram
              H[d,k] = Σ_{s: code_s,d = k} w_s   (scatter-add + tiny matmul)
 
@@ -22,7 +25,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pq
+from repro import quant
+from repro.kernels import ops as kops
+from repro.kernels.common import INTERPRET
+
+
+def _default_use_kernel(use_kernel: bool | None) -> bool:
+    """Kernel dispatch default for the decode hot path: the Pallas member of
+    the ADC family on real TPUs, its jnp oracle elsewhere — interpret mode
+    loops the grid in Python and would cripple non-TPU decode. Pass an
+    explicit bool to override (the parity tests force both paths)."""
+    return (not INTERPRET) if use_kernel is None else use_kernel
 
 
 class KVQuantConfig(NamedTuple):
@@ -35,17 +48,30 @@ class KVQuantConfig(NamedTuple):
         return self.head_dim // self.num_subspaces
 
     @property
-    def pq_cfg(self) -> pq.PQConfig:
-        return pq.PQConfig(self.num_subspaces, self.num_codewords)
+    def pq_cfg(self) -> quant.PQConfig:
+        return quant.PQConfig(self.num_subspaces, self.num_codewords)
 
 
 class KVQuantParams(NamedTuple):
-    """Per-layer parameters (no leading layer axis; stack outside)."""
+    """Per-layer parameters (no leading layer axis; stack outside).
+
+    Raw array leaves (models/transformer ParamSpecs and the optimizer's
+    name-based manifold routing need a flat tree); ``quant_k``/``quant_v``
+    wrap the codebooks in the Quantizer protocol on demand.
+    """
 
     rot_k: jax.Array  # (hd, hd)
     rot_v: jax.Array  # (hd, hd)
     cb_k: jax.Array   # (D, K, sub)
     cb_v: jax.Array   # (D, K, sub)
+
+    @property
+    def quant_k(self) -> quant.PQ:
+        return quant.PQ(self.cb_k)
+
+    @property
+    def quant_v(self) -> quant.PQ:
+        return quant.PQ(self.cb_v)
 
 
 def init(key: jax.Array, cfg: KVQuantConfig, dtype=jnp.float32) -> KVQuantParams:
@@ -67,55 +93,63 @@ def _flatten_heads(x: jax.Array) -> tuple[jax.Array, tuple]:
 
 def encode_kv(params: KVQuantParams, k: jax.Array, v: jax.Array):
     """Quantize key/value tensors (..., hd) -> codes (..., D) uint8/int32."""
-    dt = pq.PQConfig(params.cb_k.shape[0], params.cb_k.shape[1]).code_dtype()
+    qk, qv = params.quant_k, params.quant_v
     kf, lead = _flatten_heads(k)
     vf, _ = _flatten_heads(v)
-    ck = pq.assign(kf @ params.rot_k, params.cb_k).astype(dt)
-    cv = pq.assign(vf @ params.rot_v, params.cb_v).astype(dt)
-    D = params.cb_k.shape[0]
-    return ck.reshape(*lead, D), cv.reshape(*lead, D)
+    ck = qk.encode(kf @ params.rot_k).astype(qk.code_dtype)
+    cv = qv.encode(vf @ params.rot_v).astype(qv.code_dtype)
+    return ck.reshape(*lead, qk.code_width), cv.reshape(*lead, qv.code_width)
 
 
 def decode_k(params: KVQuantParams, codes: jax.Array) -> jax.Array:
     """Codes (..., D) -> dense keys (..., hd): k̂ = decode(c)·Rᵀ."""
     lead = codes.shape[:-1]
-    flat = pq.decode(codes.reshape(-1, codes.shape[-1]).astype(jnp.int32), params.cb_k)
+    flat = params.quant_k.decode(codes.reshape(-1, codes.shape[-1]))
     return (flat @ params.rot_k.T).reshape(*lead, params.rot_k.shape[0])
 
 
 def decode_v(params: KVQuantParams, codes: jax.Array) -> jax.Array:
     lead = codes.shape[:-1]
-    flat = pq.decode(codes.reshape(-1, codes.shape[-1]).astype(jnp.int32), params.cb_v)
+    flat = params.quant_v.decode(codes.reshape(-1, codes.shape[-1]))
     return (flat @ params.rot_v.T).reshape(*lead, params.rot_v.shape[0])
 
 
-def adc_scores(params: KVQuantParams, q: jax.Array, k_codes: jax.Array) -> jax.Array:
+def adc_scores_grouped(params: KVQuantParams, q: jax.Array, k_codes: jax.Array,
+                       *, use_kernel: bool | None = None) -> jax.Array:
+    """Grouped ADC scoring — the decode hot path.
+
+    q (g, r, hd) queries vs k_codes (g, S, D): group g is one (batch,
+    kv-head) pair, r its GQA query repetition. Builds one (r, D, K) LUT per
+    group (LUT = adc_tables(qR)) and dispatches to the shared grouped kernel
+    (kernels/adc_batch.py) or its scan-accumulated jnp oracle — codes are
+    never broadcast over r, so the peak buffer stays O(g·r·S).
+    Returns (g, r, S).
+    """
+    g, r, hd = q.shape
+    lut = params.quant_k.adc_tables((q @ params.rot_k).reshape(g * r, hd))
+    lut = lut.reshape(g, r, *lut.shape[1:])  # (g, r, D, K)
+    return kops.adc_batch(lut, k_codes,
+                          use_kernel=_default_use_kernel(use_kernel))
+
+
+def adc_scores(params: KVQuantParams, q: jax.Array, k_codes: jax.Array,
+               *, use_kernel: bool | None = None) -> jax.Array:
     """q (..., hd) vs key codes (..., S, D) -> scores (..., S).
 
-    ⟨q, k̂⟩ = ⟨qR, decode(c)⟩ = Σ_d LUT[d, c_d] with LUT = split(qR)·C_kᵀ.
-    Leading axes of q and k_codes must broadcast-match (e.g. (B, H) each).
+    ⟨q, k̂⟩ = ⟨qR, decode(c)⟩ = Σ_d LUT[d, c_d] with LUT = adc_tables(qR).
+    Leading axes of q and k_codes must broadcast-match (e.g. (B, H) each);
+    each joint lead element becomes one single-query group of the grouped
+    scorer. Size-1 broadcast axes materialize a code copy here — the GQA
+    decode path calls ``adc_scores_grouped`` directly to share one code set
+    across the rep queries instead.
     """
-    D, K, _ = params.cb_k.shape
-    qr = q @ params.rot_k  # rotate query into PQ basis
-    lut = jnp.einsum("...ds,dks->...dk", pq.split(qr, D), params.cb_k)  # (..., D, K)
-    # gather: out[..., s] = sum_d lut[..., d, codes[..., s, d]], accumulated
-    # with a scan over the D subspaces so the peak gather buffer is O(S)
-    # instead of O(S·D·rep) — at S=524288 the all-D gather costs GiBs/device
-    # (the Pallas adc_lookup kernel tiles a one-hot matmul instead; this is
-    # the XLA-safe reference path).
-    codes_t = jnp.swapaxes(k_codes.astype(jnp.int32), -1, -2)  # (..., D, S)
-    lut_d = jnp.moveaxis(lut, -2, 0)      # (D, ..., K)
-    codes_d = jnp.moveaxis(codes_t, -2, 0)  # (D, ..., S)
-
-    def add_one(acc, dl):
-        l_d, c_d = dl
-        return acc + jnp.take_along_axis(l_d, c_d, axis=-1), None
-
-    S = k_codes.shape[-2]
-    lead = jnp.broadcast_shapes(lut.shape[:-2], k_codes.shape[:-2])
-    acc0 = jnp.zeros((*lead, S), lut.dtype)
-    out, _ = jax.lax.scan(add_one, acc0, (lut_d, codes_d))
-    return out
+    hd = q.shape[-1]
+    S, D = k_codes.shape[-2:]
+    lead = jnp.broadcast_shapes(q.shape[:-1], k_codes.shape[:-2])
+    qb = jnp.broadcast_to(q, (*lead, hd)).reshape(-1, 1, hd)
+    cb = jnp.broadcast_to(k_codes, (*lead, S, D)).reshape(-1, S, D)
+    out = adc_scores_grouped(params, qb, cb, use_kernel=use_kernel)
+    return out.reshape(*lead, S)
 
 
 def weighted_value_sum(params: KVQuantParams, w: jax.Array,
@@ -159,6 +193,7 @@ def adc_decode_attention(
     v_codes: jax.Array,    # (B, H_kv, S, D)
     length_mask: jax.Array | None = None,  # (B, S) bool, True = valid
     scale: float | None = None,
+    use_kernel: bool | None = None,
 ) -> jax.Array:
     """One decode step of attention entirely in the compressed domain.
 
@@ -166,12 +201,15 @@ def adc_decode_attention(
     Returns (B, H, hd).
     """
     B, H, hd = q.shape
-    H_kv = k_codes.shape[1]
+    H_kv, S, D = k_codes.shape[1:]
     rep = H // H_kv
     scale = (hd ** -0.5) if scale is None else scale
-    qg = q.reshape(B, H_kv, rep, hd)
-    # scores: (B, H_kv, rep, S)
-    scores = adc_scores(params, qg, k_codes[:, :, None]) * scale
+    # grouped scorer: one (batch, kv-head) pair per group, rep queries each —
+    # codes are NOT broadcast over the rep axis.
+    qg = q.reshape(B * H_kv, rep, hd)
+    scores = adc_scores_grouped(
+        params, qg, k_codes.reshape(B * H_kv, S, D), use_kernel=use_kernel
+    ).reshape(B, H_kv, rep, S) * scale
     if length_mask is not None:
         scores = jnp.where(length_mask[:, None, None, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
@@ -186,6 +224,6 @@ def kv_distortion(params: KVQuantParams, k: jax.Array, v: jax.Array) -> jax.Arra
     KV index; drives codebook SGD training and supplies ∇_R for GCD."""
     kf, _ = _flatten_heads(k)
     vf, _ = _flatten_heads(v)
-    dk = pq.distortion(kf @ params.rot_k, params.cb_k)
-    dv = pq.distortion(vf @ params.rot_v, params.cb_v)
+    dk = params.quant_k.distortion(kf @ params.rot_k)
+    dv = params.quant_v.distortion(vf @ params.rot_v)
     return dk + dv

@@ -1,134 +1,13 @@
-"""OPQ — Optimized Product Quantization (Ge et al. 2013) and the paper's
-fixed-embedding experiment harness (§3.1 / Fig 2).
+"""Compatibility shim — OPQ alternating minimization moved to
+``repro.quant.opq`` (rotation-aware codebook fitting lives with the other
+quantizer fits; see README.md migration table).
 
-The classic OPQ loop alternates
-  (a) k-means on the rotated data XR   → codebooks, codes
-  (b) Orthogonal Procrustes solve      → R = UVᵀ from SVD(Xᵀ·decode(codes))
-
-The paper swaps step (b) for a few Givens coordinate-descent iterations
-(GCD-R/G/S) or Cayley-SGD steps. ``alternating_minimization`` implements all
-variants behind one ``rotation_solver`` switch so Fig 2a is a single sweep.
+New code should call ``repro.quant.opq.alternating_minimization`` (arrays) or
+``repro.quant.opq.fit`` (protocol idiom, returns (R, quant.PQ, trace)).
 """
-from __future__ import annotations
-
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import cayley as cayley_mod
-from repro.core import givens, pq, rotation
-
-
-def procrustes_rotation(X: jax.Array, Y: jax.Array) -> jax.Array:
-    """argmin_{R ∈ O(n)} ‖XR − Y‖_F = UVᵀ with XᵀY = USVᵀ (Schönemann 1966)."""
-    M = X.T @ Y
-    U, _, Vt = jnp.linalg.svd(M, full_matrices=False)
-    return U @ Vt
-
-
-class OPQState(NamedTuple):
-    R: jax.Array
-    codebooks: jax.Array
-    rot_state: rotation.RotationState  # used by GCD solvers
-    cayley_params: jax.Array           # used by Cayley solver
-    key: jax.Array
-
-
-def _distortion_grad_wrt_R(X, R, codebooks):
-    """∇_R (1/m)‖XR − φ(XR)‖² with codes frozen (the inner rotation objective)."""
-
-    def loss(Rm):
-        return pq.distortion(X @ Rm, codebooks)
-
-    return jax.grad(loss)(R)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("cfg", "iters", "rotation_solver", "inner_steps", "kmeans_iters"),
+from repro.quant.opq import (  # noqa: F401
+    OPQState,
+    alternating_minimization,
+    opq,
+    procrustes_rotation,
 )
-def alternating_minimization(
-    key: jax.Array,
-    X: jax.Array,
-    cfg: pq.PQConfig,
-    iters: int = 30,
-    rotation_solver: str = "svd",  # svd | gcd_random | gcd_greedy | gcd_steepest
-    #                                | gcd_overlap_greedy | gcd_overlap_random
-    #                                | cayley | frozen
-    inner_steps: int = 5,
-    lr: float = 1e-4,
-    kmeans_iters: int = 1,
-):
-    """Fixed-embedding rotation learning (paper §3.1). Returns
-    (final R, codebooks, distortion trace of length ``iters``)."""
-    n = X.shape[-1]
-    k0, k1 = jax.random.split(key)
-    cb0, _ = pq.kmeans(k0, X @ jnp.eye(n, dtype=X.dtype), cfg, iters=kmeans_iters)
-    state = OPQState(
-        R=jnp.eye(n, dtype=X.dtype),
-        codebooks=cb0,
-        rot_state=rotation.init(n, dtype=X.dtype),
-        cayley_params=cayley_mod.init(n, dtype=X.dtype),
-        key=k1,
-    )
-
-    gcd_method = {
-        "gcd_random": "random",
-        "gcd_greedy": "greedy",
-        "gcd_steepest": "steepest",
-        "gcd_overlap_greedy": "overlap_greedy",
-        "gcd_overlap_random": "overlap_random",
-    }.get(rotation_solver)
-
-    def body(state: OPQState, _):
-        # (a) k-means refresh of codebooks on rotated data
-        XR = X @ state.R
-        cb = state.codebooks
-        for _i in range(kmeans_iters):
-            cb, _codes = pq.kmeans_update(XR, cb)
-
-        # (b) rotation update
-        key, sub = jax.random.split(state.key)
-        R, rot_state, cay = state.R, state.rot_state, state.cayley_params
-        if rotation_solver == "svd":
-            codes = pq.assign(X @ R, cb)
-            target = pq.decode(codes, cb)
-            R = procrustes_rotation(X, target)
-        elif rotation_solver == "frozen":
-            pass
-        elif gcd_method is not None:
-            rot_state = rot_state._replace(R=R)
-            for _i in range(inner_steps):
-                sub, sk = jax.random.split(sub)
-                G = _distortion_grad_wrt_R(X, rot_state.R, cb)
-                rot_state = rotation.update(
-                    rot_state, G, lr, sk, method=gcd_method
-                )
-            R = rot_state.R
-        elif rotation_solver == "cayley":
-            def loss(p):
-                return pq.distortion(X @ cayley_mod.cayley(p), cb)
-
-            for _i in range(inner_steps):
-                g = jax.grad(loss)(cay)
-                cay = cay - lr * g
-            R = cayley_mod.cayley(cay)
-        else:
-            raise ValueError(f"unknown rotation_solver {rotation_solver!r}")
-
-        dist = pq.distortion(X @ R, cb)
-        new_state = OPQState(R=R, codebooks=cb, rot_state=rot_state,
-                             cayley_params=cay, key=key)
-        return new_state, dist
-
-    state, trace = jax.lax.scan(body, state, None, length=iters)
-    return state.R, state.codebooks, trace
-
-
-def opq(key, X, cfg: pq.PQConfig, iters: int = 30, kmeans_iters: int = 1):
-    """Classic OPQ (SVD rotation solver)."""
-    return alternating_minimization(
-        key, X, cfg, iters=iters, rotation_solver="svd", kmeans_iters=kmeans_iters
-    )

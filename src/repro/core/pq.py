@@ -1,160 +1,39 @@
-"""Product quantization substrate (paper §2.1).
+"""Compatibility shim — the PQ substrate moved to ``repro.quant``.
 
-A product quantizer splits an n-dim vector into D contiguous subvectors of
-size n/D and snaps each to the nearest of K codewords. Everything here is
-pure jnp and differentiable where math allows; the non-differentiable argmin
-is bridged by the gradient straight-through estimator (Bengio et al. 2013),
-exactly as in the paper / Zhang et al. 2021.
+The functional product-quantization layer that used to live here is now the
+shared codebook/k-means substrate of the unified quantizer subsystem:
 
-Codebooks: (D, K, sub) float. Codes: (m, D) int32.
+  ===========================  =====================================
+  old (core.pq)                new (repro.quant)
+  ===========================  =====================================
+  PQConfig                     quant.base.PQConfig
+  split / merge                quant.codebook.split / merge
+  assign / decode / quantize   quant.codebook.assign / decode / quantize
+  quantize_ste                 quant.codebook.quantize_ste  (or PQ.encode_st)
+  distortion                   quant.codebook.distortion    (or PQ.distortion)
+  kmeans* / codebook_ema_*     quant.kmeans.*
+  adc_lut / adc_score          quant.codebook.adc_lut / adc_score
+  (object API)                 quant.PQ / quant.RQ / quant.VQ
+  ===========================  =====================================
+
+New code should import from ``repro.quant``; this module re-exports the old
+names so existing call sites keep working.
 """
-from __future__ import annotations
-
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-
-class PQConfig(NamedTuple):
-    num_subspaces: int  # D
-    num_codewords: int  # K
-
-    def code_dtype(self):
-        return jnp.uint8 if self.num_codewords <= 256 else jnp.int32
-
-
-def split(X: jax.Array, D: int) -> jax.Array:
-    """(..., n) -> (..., D, n/D)."""
-    *lead, n = X.shape
-    assert n % D == 0, f"n={n} not divisible by D={D}"
-    return X.reshape(*lead, D, n // D)
-
-
-def merge(Xs: jax.Array) -> jax.Array:
-    """(..., D, sub) -> (..., D*sub)."""
-    *lead, D, sub = Xs.shape
-    return Xs.reshape(*lead, D * sub)
-
-
-def assign(X: jax.Array, codebooks: jax.Array) -> jax.Array:
-    """Nearest codeword per subspace. (m, n) -> (m, D) int32.
-
-    Uses ‖x−c‖² = ‖x‖² − 2⟨x,c⟩ + ‖c‖² with the ‖x‖² term dropped (constant
-    in the argmin) — so the hot op is one einsum on the MXU.
-    """
-    D = codebooks.shape[0]
-    Xs = split(X, D)  # (m, D, sub)
-    dots = jnp.einsum("mds,dks->mdk", Xs, codebooks)
-    cn = jnp.sum(jnp.square(codebooks), axis=-1)  # (D, K)
-    d2 = cn[None, :, :] - 2.0 * dots
-    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
-
-
-def decode(codes: jax.Array, codebooks: jax.Array) -> jax.Array:
-    """(m, D) codes -> (m, n) reconstruction (differentiable wrt codebooks)."""
-    D = codebooks.shape[0]
-    gathered = codebooks[jnp.arange(D)[None, :], codes]  # (m, D, sub)
-    return merge(gathered)
-
-
-def quantize(X: jax.Array, codebooks: jax.Array) -> jax.Array:
-    """φ(X): hard quantization, no gradient bridging."""
-    return decode(assign(X, codebooks), codebooks)
-
-
-def quantize_ste(X: jax.Array, codebooks: jax.Array) -> jax.Array:
-    """φ(X) with straight-through estimator: forward = quantized value,
-    backward = identity wrt X (codebooks receive no grad through this path —
-    they are trained by the distortion loss)."""
-    q = decode(jax.lax.stop_gradient(assign(X, codebooks)), codebooks)
-    return X + jax.lax.stop_gradient(q - X)
-
-
-def distortion(X: jax.Array, codebooks: jax.Array,
-               codes: jax.Array | None = None) -> jax.Array:
-    """(1/m)‖X − φ(X)‖²_F — the paper's quantization-distortion metric/loss.
-
-    Differentiable wrt both X and codebooks (assignment is stop-gradiented).
-    """
-    if codes is None:
-        codes = jax.lax.stop_gradient(assign(X, codebooks))
-    q = decode(codes, codebooks)
-    return jnp.mean(jnp.sum(jnp.square(X - q), axis=-1))
-
-
-def kmeans_init(key: jax.Array, X: jax.Array, cfg: PQConfig) -> jax.Array:
-    """Init codebooks by sampling K distinct rows per subspace."""
-    m = X.shape[0]
-    Xs = split(X, cfg.num_subspaces)  # (m, D, sub)
-    idx = jax.random.choice(key, m, shape=(cfg.num_codewords,), replace=False)
-    return jnp.transpose(Xs[idx], (1, 0, 2))  # (D, K, sub)
-
-
-def kmeans_update(X: jax.Array, codebooks: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """One Lloyd iteration over all D subspaces. Returns (codebooks, codes).
-
-    Empty clusters keep their previous centroid.
-    """
-    D, K, _ = codebooks.shape
-    codes = assign(X, codebooks)  # (m, D)
-    Xs = split(X, D)  # (m, D, sub)
-
-    def per_subspace(xd, cd):
-        sums = jax.ops.segment_sum(xd, cd, num_segments=K)  # (K, sub)
-        cnt = jax.ops.segment_sum(jnp.ones_like(cd, jnp.float32), cd, num_segments=K)
-        return sums, cnt
-
-    sums, cnt = jax.vmap(per_subspace, in_axes=(1, 1))(Xs, codes)  # (D, K, sub), (D, K)
-    new = jnp.where(cnt[..., None] > 0, sums / jnp.maximum(cnt[..., None], 1.0), codebooks)
-    return new, codes
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "iters"))
-def kmeans(key: jax.Array, X: jax.Array, cfg: PQConfig, iters: int = 10):
-    """Full k-means per subspace; returns (codebooks, distortion_trace)."""
-    cb0 = kmeans_init(key, X, cfg)
-
-    def body(cb, _):
-        cb, codes = kmeans_update(X, cb)
-        return cb, distortion(X, cb, codes)
-
-    cb, trace = jax.lax.scan(body, cb0, None, length=iters)
-    return cb, trace
-
-
-def codebook_ema_update(codebooks: jax.Array, X: jax.Array, codes: jax.Array,
-                        decay: float = 0.99) -> jax.Array:
-    """Streaming EMA codebook update (VQ-VAE style) — an alternative to
-    gradient training of codebooks inside the end-to-end loop."""
-    D, K, _ = codebooks.shape
-    Xs = split(X, D)
-
-    def per_subspace(xd, cd):
-        sums = jax.ops.segment_sum(xd, cd, num_segments=K)
-        cnt = jax.ops.segment_sum(jnp.ones_like(cd, jnp.float32), cd, num_segments=K)
-        return sums, cnt
-
-    sums, cnt = jax.vmap(per_subspace, in_axes=(1, 1))(Xs, codes)
-    batch_mean = sums / jnp.maximum(cnt[..., None], 1.0)
-    upd = decay * codebooks + (1.0 - decay) * batch_mean
-    return jnp.where(cnt[..., None] > 0, upd, codebooks)
-
-
-def adc_lut(q: jax.Array, codebooks: jax.Array) -> jax.Array:
-    """Asymmetric-distance lookup table for a query batch.
-
-    For inner-product / cosine retrieval the score of item with codes c is
-    Σ_d LUT[d, c_d] with LUT[d, k] = ⟨q_d, C[d, k]⟩.  (b, n) -> (b, D, K).
-    """
-    D = codebooks.shape[0]
-    qs = split(q, D)  # (b, D, sub)
-    return jnp.einsum("bds,dks->bdk", qs, codebooks)
-
-
-def adc_score(lut: jax.Array, codes: jax.Array) -> jax.Array:
-    """Sum LUT entries over subspaces: (b, D, K) × (N, D) -> (b, N)."""
-    D = lut.shape[1]
-    gathered = lut[:, jnp.arange(D)[None, :], codes]  # (b, N, D)
-    return jnp.sum(gathered, axis=-1)
+from repro.quant.base import PQConfig  # noqa: F401
+from repro.quant.codebook import (  # noqa: F401
+    adc_lut,
+    adc_score,
+    assign,
+    decode,
+    distortion,
+    merge,
+    quantize,
+    quantize_ste,
+    split,
+)
+from repro.quant.kmeans import (  # noqa: F401
+    codebook_ema_update,
+    kmeans,
+    kmeans_init,
+    kmeans_update,
+)

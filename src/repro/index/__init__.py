@@ -1,18 +1,23 @@
-"""repro.index — IVF-PQ serving layer over the GCD rotation machinery.
+"""repro.index — IVF serving layer over the GCD rotation machinery.
 
-Turns the paper's T(X) = φ(XR)Rᵀ into a production-shaped ANN index:
+Turns the paper's T(X) = φ(XR)Rᵀ into a production-shaped ANN index, with
+φ drawn from the unified quantizer subsystem (repro.quant):
 
-  ivf       build: coarse k-means over rotated vectors + residual PQ,
-            packed into a block-aligned CSR pytree (IVFPQIndex)
-  search    batched query engine: probe top-nprobe lists, per-query LUTs,
-            fused Pallas selected-block ADC scan (kernels/ivf_adc.py)
+  ivf       build: quant.VQ coarse quantizer over rotated vectors +
+            residual quant.PQ (depth 1) or quant.RQ (depth M), packed into
+            a block-aligned CSR pytree (IVFPQIndex)
+  search    batched query engine: probe top-nprobe lists, per-query
+            Quantizer.adc_tables LUTs, fused Pallas selected-block ADC scan
+            (kernels/ivf_adc.py — depth rides in the LUT column dim)
   maintain  incremental add/remove and refresh_rotation — absorb a GCD
             training step into a live index without re-encoding the corpus
+            (scheme-agnostic via Quantizer.rotate)
 
 Quick start::
 
+    from repro import quant
     from repro.index import ivf, search, maintain
-    cfg = ivf.IVFPQConfig(num_lists=256, pq=PQConfig(16, 256))
+    cfg = ivf.IVFPQConfig(num_lists=256, pq=quant.PQConfig(16, 256), depth=2)
     index = ivf.build(key, X, R, cfg)
     res = search.search(index, Q, nprobe=16, k=10)   # res.scores, res.ids
     index = maintain.refresh_rotation(index, pi, pj, theta)  # after a GCD step

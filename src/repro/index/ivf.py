@@ -1,19 +1,24 @@
-"""IVF-PQ index build: coarse quantizer + residual PQ in a CSR pytree.
+"""IVF index build: coarse quantizer + residual PQ/RQ in a CSR pytree.
 
 The paper deploys T(X) = φ(XR)Rᵀ as an ANN index; a flat ADC scan touches
 every item per query. This module adds the standard production refinement
-(cf. Transformed Residual Quantization, arXiv:1512.06925): a k-means coarse
-quantizer over the *rotated* vectors partitions the corpus into ``num_lists``
-inverted lists, and PQ encodes the **residual** x·R − c(x) instead of the raw
-vector. Scores then decompose exactly as
+(cf. Transformed Residual Quantization, arXiv:1512.06925): a ``quant.VQ``
+coarse quantizer over the *rotated* vectors partitions the corpus into
+``num_lists`` inverted lists, and a residual quantizer (``quant.PQ`` at
+depth 1, ``quant.RQ`` above) encodes the **residual** x·R − c(x) instead of
+the raw vector. Scores then decompose exactly as
 
     ⟨q·R, x·R⟩ ≈ ⟨q·R, c_l⟩  +  Σ_d LUT[d, code_d]      (coarse + residual)
 
-so a query only scans the ``nprobe`` lists with the best coarse term.
+so a query only scans the ``nprobe`` lists with the best coarse term. Both
+quantizers are protocol objects from ``repro.quant``: the index is agnostic
+to the residual scheme — codes are ``code_width`` integer columns and LUTs
+are (b, code_width, K), whatever the depth.
 
 Memory layout (the whole index is one jit-traceable pytree):
 
-  * ``codes (cap, D)`` / ``ids (cap,)`` — all lists concatenated, CSR style.
+  * ``codes (cap, Dp)`` / ``ids (cap,)`` — all lists concatenated, CSR style
+    (Dp = quantizer.code_width: D for PQ, M·D for depth-M RQ).
   * ``list_offsets (L+1,)`` — row ranges; every offset is a multiple of
     ``block_size`` so a list is an integer number of kernel tiles and the
     Pallas scan (kernels/ivf_adc.py) can DMA list blocks straight from HBM
@@ -36,40 +41,43 @@ import jax.numpy as jnp
 import numpy as np
 from typing import NamedTuple
 
-from repro.core import pq
+from repro import quant
 
 
 class IVFPQConfig(NamedTuple):
     """Static build parameters.
 
     ``num_lists``: coarse cells L (scan work per query ≈ nprobe/L of corpus).
-    ``pq``: residual quantizer config (D subspaces × K codewords).
+    ``pq``: residual quantizer per-level config (D subspaces × K codewords).
+    ``depth``: residual levels M — 1 builds a ``quant.PQ``, >1 a ``quant.RQ``
+    (M·D code bytes/item for strictly lower distortion).
     ``block_size``: CSR alignment = Pallas tile rows; lists are padded to a
     multiple of it.
     """
 
     num_lists: int
-    pq: pq.PQConfig
+    pq: quant.PQConfig
     block_size: int = 128
+    depth: int = 1
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class IVFPQIndex:
-    """Servable IVF-PQ index. Array fields are pytree leaves; ``block_size``
-    is static aux data so jit specializes on the tile shape."""
+    """Servable IVF index. Array/quantizer fields are pytree children;
+    ``block_size`` is static aux data so jit specializes on the tile shape."""
 
-    R: jax.Array             # (n, n) GCD-learned rotation
-    centroids: jax.Array     # (L, n) coarse centroids, rotated space
-    codebooks: jax.Array     # (D, K, sub) residual PQ codebooks
-    codes: jax.Array         # (cap, D) residual codes, CSR by list
-    #                          (uint8 when K ≤ 256, else int32 — see pack)
-    ids: jax.Array           # (cap,) int32 item ids, −1 = hole/tombstone
-    list_offsets: jax.Array  # (L+1,) int32, multiples of block_size
+    R: jax.Array              # (n, n) GCD-learned rotation
+    coarse: quant.VQ          # coarse quantizer (L centroids, rotated space)
+    quantizer: quant.Quantizer  # residual quantizer (quant.PQ or quant.RQ)
+    codes: jax.Array          # (cap, Dp) residual codes, CSR by list
+    #                           (uint8 when K ≤ 256, else int32 — see pack)
+    ids: jax.Array            # (cap,) int32 item ids, −1 = hole/tombstone
+    list_offsets: jax.Array   # (L+1,) int32, multiples of block_size
     block_size: int = 128
 
     def tree_flatten(self):
-        children = (self.R, self.centroids, self.codebooks, self.codes,
+        children = (self.R, self.coarse, self.quantizer, self.codes,
                     self.ids, self.list_offsets)
         return children, self.block_size
 
@@ -77,14 +85,25 @@ class IVFPQIndex:
     def tree_unflatten(cls, aux, children):
         return cls(*children, block_size=aux)
 
+    # -- compatibility views ----------------------------------------------
+    @property
+    def centroids(self) -> jax.Array:
+        """(L, n) coarse centroids (the old pre-quant array field)."""
+        return self.coarse.centroids
+
+    @property
+    def codebooks(self) -> jax.Array:
+        """Residual codebooks: (D, K, sub) for PQ, (M, D, K, sub) for RQ."""
+        return self.quantizer.codebooks
+
     # -- static shape facts ------------------------------------------------
     @property
     def num_lists(self) -> int:
-        return self.centroids.shape[0]
+        return self.coarse.num_centroids
 
     @property
     def dim(self) -> int:
-        return self.centroids.shape[1]
+        return self.coarse.dim
 
     @property
     def capacity(self) -> int:
@@ -112,32 +131,19 @@ class IVFPQIndex:
 # ---------------------------------------------------------------------------
 
 
-def coarse_kmeans(key: jax.Array, XR: jax.Array, num_lists: int,
-                  iters: int = 10) -> jax.Array:
-    """Full-vector k-means via the PQ machinery with a single subspace:
-    PQConfig(1, L) codebooks (1, L, n) are exactly L centroids."""
-    cb, _ = pq.kmeans(key, XR, pq.PQConfig(1, num_lists), iters=iters)
-    return cb[0]
-
-
-def coarse_assign(XR: jax.Array, centroids: jax.Array) -> jax.Array:
-    """Nearest centroid per rotated vector: (m, n) -> (m,) int32."""
-    return pq.assign(XR, centroids[None, ...])[:, 0]
-
-
-def encode(XR: jax.Array, centroids: jax.Array,
-           codebooks: jax.Array) -> tuple[jax.Array, jax.Array]:
+def encode(XR: jax.Array, coarse: quant.VQ,
+           quantizer: quant.Quantizer) -> tuple[jax.Array, jax.Array]:
     """Assign lists and residual-encode already-rotated vectors.
 
-    Returns (list_ids (m,), codes (m, D)). Pure jnp — also the "full
+    Returns (list_ids (m,), codes (m, Dp)). Pure jnp — also the "full
     rebuild" oracle that ``maintain.refresh_rotation`` is tested against.
     """
-    list_ids = coarse_assign(XR, centroids)
-    residuals = XR - centroids[list_ids]
-    return list_ids, pq.assign(residuals, codebooks)
+    list_ids = coarse.assign(XR)
+    residuals = XR - coarse.centroids[list_ids]
+    return list_ids, quantizer.encode(residuals)
 
 
-def pack(R: jax.Array, centroids: jax.Array, codebooks: jax.Array,
+def pack(R: jax.Array, coarse: quant.VQ, quantizer: quant.Quantizer,
          codes: jax.Array, list_ids: jax.Array,
          ids: jax.Array, block_size: int = 128) -> IVFPQIndex:
     """Lay encoded items out in block-aligned CSR order (host-side; numpy).
@@ -148,8 +154,8 @@ def pack(R: jax.Array, centroids: jax.Array, codebooks: jax.Array,
     list_ids = np.asarray(list_ids)
     codes = np.asarray(codes)
     ids = np.asarray(ids, dtype=np.int32)
-    L = centroids.shape[0]
-    D = codebooks.shape[0]
+    L = coarse.num_centroids
+    Dp = codes.shape[1]
 
     counts = np.bincount(list_ids, minlength=L)
     padded = -(-counts // block_size) * block_size  # per-list rounded up
@@ -157,9 +163,7 @@ def pack(R: jax.Array, centroids: jax.Array, codebooks: jax.Array,
     np.cumsum(padded, out=offsets[1:])
     cap = int(offsets[-1]) + block_size  # + sentinel hole block
 
-    K = codebooks.shape[1]
-    code_dtype = np.uint8 if K <= 256 else np.int32
-    codes_out = np.zeros((cap, D), dtype=code_dtype)
+    codes_out = np.zeros((cap, Dp), dtype=np.dtype(quantizer.code_dtype))
     ids_out = np.full((cap,), -1, dtype=np.int32)
 
     order = np.argsort(list_ids, kind="stable")
@@ -174,8 +178,8 @@ def pack(R: jax.Array, centroids: jax.Array, codebooks: jax.Array,
 
     return IVFPQIndex(
         R=jnp.asarray(R),
-        centroids=jnp.asarray(centroids),
-        codebooks=jnp.asarray(codebooks),
+        coarse=jax.tree.map(jnp.asarray, coarse),
+        quantizer=jax.tree.map(jnp.asarray, quantizer),
         codes=jnp.asarray(codes_out),
         ids=jnp.asarray(ids_out),
         list_offsets=jnp.asarray(offsets),
@@ -188,20 +192,21 @@ def build(key: jax.Array, X: jax.Array, R: jax.Array, cfg: IVFPQConfig, *,
           pq_iters: int = 10, train_size: int | None = None) -> IVFPQIndex:
     """End-to-end index build from raw vectors and a learned rotation.
 
-    ``train_size`` caps the sample used for the two k-means fits (the full
+    ``train_size`` caps the sample used for the k-means fits (the full
     corpus is always encoded). Host-side orchestration around jit'd pieces —
     build is offline; serving (search/maintain) is the jit'd hot path.
     """
     kc, kp = jax.random.split(key)
     XR = X @ R
     XT = XR if train_size is None else XR[:train_size]
-    centroids = coarse_kmeans(kc, XT, cfg.num_lists, iters=coarse_iters)
-    train_lists = coarse_assign(XT, centroids)
-    codebooks, _ = pq.kmeans(
-        kp, XT - centroids[train_lists], cfg.pq, iters=pq_iters
+    coarse = quant.VQ.fit(kc, XT, cfg.num_lists, iters=coarse_iters)
+    train_lists = coarse.assign(XT)
+    quantizer, _ = quant.fit_quantizer(
+        kp, XT - coarse.centroids[train_lists], cfg.pq,
+        depth=cfg.depth, iters=pq_iters,
     )
-    list_ids, codes = encode(XR, centroids, codebooks)
+    list_ids, codes = encode(XR, coarse, quantizer)
     if ids is None:
         ids = jnp.arange(X.shape[0], dtype=jnp.int32)
-    return pack(R, centroids, codebooks, codes, list_ids, ids,
+    return pack(R, coarse, quantizer, codes, list_ids, ids,
                 block_size=cfg.block_size)

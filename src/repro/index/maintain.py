@@ -8,17 +8,21 @@ stores transforms by right-multiplication in the rotated space:
     x·R' = (x·R)·Δ      centroids' = centroids·Δ      residuals' = residuals·Δ
 
 and because rotations preserve distances, the coarse list assignment is
-EXACTLY invariant — no item migrates between lists. The residual PQ
-codebooks live per-subspace, so the part of Δ whose pairs fall inside one
-subspace rotates the codewords exactly (codes unchanged, zero error); pairs
-that straddle two subspaces cannot be absorbed into a product codebook and
-are dropped to zeroth order — for GCD's small per-step angles (θ = −λ·A/√2)
-this perturbs codes only for items near Voronoi boundaries. Net effect:
-``refresh_rotation`` is O(n²) on the rotation + O(L·n + D·K·n) on
-centroids/codebooks — independent of corpus size — versus the O(N·n·K) full
-re-encode, and matches the rebuild's codes on ≥99% of items per step (the
-acceptance test in tests/test_ivf.py; exact when the matching is restricted
-to within-subspace pairs).
+EXACTLY invariant — no item migrates between lists. The residual
+quantizer's codebooks live per-subspace, so the part of Δ whose pairs fall
+inside one subspace rotates the codewords exactly (codes unchanged, zero
+error); pairs that straddle two subspaces cannot be absorbed into a product
+codebook and are dropped to zeroth order — for GCD's small per-step angles
+(θ = −λ·A/√2) this perturbs codes only for items near Voronoi boundaries.
+The refresh is scheme-agnostic: it calls ``Quantizer.rotate`` (and
+``VQ.rotate`` for the coarse centroids), so any quantizer exposing
+codebooks — PQ, depth-M RQ, future schemes — refreshes the same way
+(within-subspace rotations commute with the residual recursion, so one call
+refreshes every RQ level). Net effect: ``refresh_rotation`` is O(n²) on the
+rotation + O(L·n + M·D·K·n) on centroids/codebooks — independent of corpus
+size — versus the O(N·n·K) full re-encode, and matches the rebuild's codes
+on ≥99% of items per step (the acceptance test in tests/test_ivf.py; exact
+when the matching is restricted to within-subspace pairs).
 
 ``add`` fills the hole rows that CSR block padding leaves inside each target
 list (O(new items) in the common case) and falls back to a full repack only
@@ -53,7 +57,7 @@ def add(index: IVFPQIndex, X_new: jax.Array, new_ids: jax.Array) -> IVFPQIndex:
     first; if any list runs out, the whole index is repacked with fresh
     block padding (host-side, like ``ivf.build``)."""
     XR = X_new @ index.R
-    list_ids, codes_new = ivf.encode(XR, index.centroids, index.codebooks)
+    list_ids, codes_new = ivf.encode(XR, index.coarse, index.quantizer)
 
     list_ids_np = np.asarray(list_ids)
     codes_np = np.asarray(codes_new)
@@ -85,7 +89,7 @@ def add(index: IVFPQIndex, X_new: jax.Array, new_ids: jax.Array) -> IVFPQIndex:
     row_list = np.searchsorted(offsets, np.arange(len(ids_np)), side="right") - 1
     ov = np.asarray(overflow)
     return ivf.pack(
-        index.R, index.centroids, index.codebooks,
+        index.R, index.coarse, index.quantizer,
         np.concatenate([all_codes_np[live], codes_np[ov]]),
         np.concatenate([row_list[live], list_ids_np[ov]]),
         np.concatenate([ids_np[live], new_ids_np[ov]]),
@@ -100,25 +104,23 @@ def refresh_rotation(index: IVFPQIndex, pi: jax.Array, pj: jax.Array,
     index without touching the stored codes (see module docstring).
 
     Pairs must be disjoint (a GCD matching). Cross-subspace pairs are
-    applied to R and the centroids exactly, and dropped (θ→0) for the
-    product codebooks.
+    applied to R and the coarse centroids exactly, and dropped (θ→0) for
+    the residual quantizer's product codebooks. Scheme-agnostic: any
+    ``quant`` object implementing ``rotate`` (PQ, RQ, ...) refreshes here.
     """
-    D, K, sub = index.codebooks.shape
+    sub = index.quantizer.sub
     R_new = givens.apply_pair_rotations(index.R, pi, pj, theta)
-    centroids_new = givens.apply_pair_rotations(index.centroids, pi, pj, theta)
+    coarse_new = index.coarse.rotate(pi, pj, theta)
 
-    # Codebooks in full-dim layout: codeword slot k column d·sub+t holds
-    # codebooks[d, k, t]. Within-subspace pairs only mix columns inside one
-    # subspace slice, so one pair-rotation call refreshes all D codebooks;
+    # Within-subspace pairs only mix columns inside one subspace slice, so
+    # Quantizer.rotate absorbs them exactly (all levels at once for RQ);
     # zeroing θ for cross-subspace pairs makes those rotations the identity.
     within = (pi // sub) == (pj // sub)
     theta_w = jnp.where(within, theta, 0.0)
-    cw = jnp.transpose(index.codebooks, (1, 0, 2)).reshape(K, D * sub)
-    cw = givens.apply_pair_rotations(cw, pi, pj, theta_w)
-    codebooks_new = jnp.transpose(cw.reshape(K, D, sub), (1, 0, 2))
+    quantizer_new = index.quantizer.rotate(pi, pj, theta_w)
 
     return dataclasses.replace(
-        index, R=R_new, centroids=centroids_new, codebooks=codebooks_new
+        index, R=R_new, coarse=coarse_new, quantizer=quantizer_new
     )
 
 
@@ -140,7 +142,7 @@ def subspace_gcd_step(index: IVFPQIndex, G: jax.Array, lr: float | jax.Array):
     Returns (refreshed index, (pi, pj, theta)) — apply the same triple to
     the trainer's rotation state to stay in sync.
     """
-    D, _, sub = index.codebooks.shape
+    sub = index.quantizer.sub
     A = givens.directional_derivs(
         G.astype(jnp.float32), index.R.astype(jnp.float32)
     )
@@ -158,7 +160,7 @@ def refresh_mismatch(refreshed: IVFPQIndex, X: jax.Array) -> jax.Array:
     (Stored codes are carried over by refresh_rotation, so this is exactly
     the refresh-vs-rebuild disagreement.)"""
     XR = X @ refreshed.R
-    _, codes_rebuild = ivf.encode(XR, refreshed.centroids, refreshed.codebooks)
+    _, codes_rebuild = ivf.encode(XR, refreshed.coarse, refreshed.quantizer)
     live = refreshed.ids >= 0
     stored = refreshed.codes
     rebuilt = codes_rebuild[jnp.maximum(refreshed.ids, 0)]

@@ -4,8 +4,11 @@ Per query batch (b, n):
 
   1. rotate:       QR = Q·R  (the paper's serving transform)
   2. probe:        coarse scores QR·Cᵀ, keep the top-``nprobe`` lists
-  3. LUT build:    one (D, K) inner-product table per query against the
-                   *residual* codebooks — b·D·K dots, shared by all probes
+  3. LUT build:    ``index.quantizer.adc_tables(QR)`` — one
+                   (code_width, K) table per query against the *residual*
+                   quantizer, shared by all probes. Residual depth is
+                   already flattened into code_width, so PQ and RQ feed
+                   the same kernel.
   4. scan:         selected list blocks scored by the fused Pallas kernel
                    (kernels/ivf_adc.py) or its jnp oracle; the coarse term
                    ⟨q·R, c_l⟩ is added per block group outside the kernel
@@ -30,7 +33,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pq
 from repro.index.ivf import IVFPQIndex
 from repro.kernels import ops as kops
 from repro.sharding import rules as sh
@@ -84,7 +86,7 @@ def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
     QR = sh.constrain(Q @ index.R, ("act_batch", None), sh.IVF_RULES)
 
     lists, cscores = probe(index, QR, nprobe)
-    lut = pq.adc_lut(QR, index.codebooks)                      # (b, D, K)
+    lut = index.quantizer.adc_tables(QR)                       # (b, Dp, K)
 
     blk, valid = candidate_blocks(index, lists, max_blocks)    # (b, p, B)
     S = b * nprobe * max_blocks
@@ -141,7 +143,7 @@ def flat_adc_scores(index: IVFPQIndex, Q: jax.Array, *,
     −inf, (cap,) ids) — the exactness oracle for nprobe = num_lists and the
     scan-work baseline for the recall/QPS benchmark."""
     QR = Q @ index.R
-    lut = pq.adc_lut(QR, index.codebooks)
+    lut = index.quantizer.adc_tables(QR)
     res = kops.adc_lookup(lut, index.codes, use_kernel=use_kernel)  # (b, cap)
     # coarse term per row: row r belongs to list l iff offsets[l] ≤ r < offsets[l+1]
     row_list = jnp.searchsorted(

@@ -6,10 +6,17 @@ beyond-paper extensions) exercise are:
   givens_rotate   apply n/2 disjoint Givens rotations (plane combine)
   gcd_score       A = GᵀR − RᵀG fused matmul + antisymmetrize
   pq_assign       nearest-codeword search fused with argmin epilogue
-  adc_lookup      ADC score scan via the one-hot MXU trick (flat corpus)
+  adc_lookup      flat ADC scan over the whole corpus
   ivf_adc         selected-block ADC scan for the IVF index — the tile
                   schedule arrives via scalar prefetch (repro.index.search)
+  adc_batch       grouped ADC scan — per-group codes × per-group LUTs
+                  (KV-cache decode scoring, core.kv_quant)
   embedding_bag   scalar-prefetch gather + bag-sum (recsys substrate)
+
+The three ADC kernels are one family: each scores VMEM code tiles against
+per-query LUTs with the shared one-hot-MXU body (``adc_common``), and all
+are parameterized by residual depth through the LUT/code column dimension
+(Dp = M·D for a depth-M residual quantizer — see repro.quant).
 
 ``ops`` holds the jit'd wrappers (public API), ``ref`` the pure-jnp oracles.
 All kernels validate on CPU with interpret=True.

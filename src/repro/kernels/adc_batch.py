@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: grouped ADC scan — the KV-cache member of the family.
+
+Decode-time attention scores every query head against its *own* code
+sequence: group g (one (batch, kv-head) pair) holds S coded vectors and r
+query LUTs (the GQA repetition factor). This is the flat scan of
+adc_lookup.py with one extra grid axis steering both the code tile and the
+LUT block at the same group, sharing the one-hot-MXU tile body
+(adc_common.adc_tile_scores).
+
+Grid (g, S/bn): step (gi, i) scores tile i of group gi's codes against that
+group's r LUTs. Residual depth rides in the Dp column dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adc_common import adc_tile_scores
+from repro.kernels.common import INTERPRET, cdiv
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    scores = adc_tile_scores(codes_ref[0], lut_ref[0])  # (bn, r)
+    out_ref[...] = scores.T[None].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def adc_batch(
+    lut: jax.Array,
+    codes: jax.Array,
+    *,
+    block_s: int = 1024,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """lut (g, r, Dp, K) float, codes (g, S, Dp) integer
+    ->  scores (g, r, S) float32."""
+    g, r, Dp, K = lut.shape
+    S = codes.shape[1]
+    bs = min(block_s, S)
+    grid = (g, cdiv(S, bs))
+    # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
+    # VMEM — the shared tile body widens per tile; widening here would
+    # materialize a 4× int32 copy of the whole code cache per decode step.
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, Dp), lambda gi, i: (gi, i, 0)),
+            pl.BlockSpec((1, r, Dp, K), lambda gi, i: (gi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, bs), lambda gi, i: (gi, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((g, r, S), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)

@@ -1,0 +1,39 @@
+"""Shared tile body of the ADC kernel family.
+
+Every ADC scan in the system — the flat corpus scan (adc_lookup.py), the
+IVF selected-block scan (ivf_adc.py), and the grouped KV-cache scorer
+(adc_batch.py) — scores a VMEM tile of PQ/RQ codes against per-query lookup
+tables with the same **one-hot matmul trick** (DESIGN.md §2): gathers are
+lane-hostile on TPU, so the (bn, Dp·K) one-hot expansion of the code tile is
+contracted against the reshaped LUT on the MXU. The one-hot tile lives only
+in VMEM and is rebuilt per grid step.
+
+The family is parameterized by residual depth purely through the column
+dimension: a depth-M residual quantizer presents ``Dp = M·D`` code columns
+and a (b, M·D, K) LUT (quant.rq flattens the level axis), so multi-level
+schemes reuse these kernels unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_tile_scores(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Score one code tile against a LUT batch inside a kernel body.
+
+    codes (bn, Dp) integer, lut (b, Dp, K) float -> (bn, b) float32 with
+    out[n, q] = Σ_d lut[q, d, codes[n, d]].
+    """
+    codes = codes.astype(jnp.int32)
+    lut = lut.astype(jnp.float32)
+    b, Dp, K = lut.shape
+    bn = codes.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, Dp, K), 2)
+    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
+    return jax.lax.dot_general(
+        onehot.reshape(bn, Dp * K),
+        lut.reshape(b, Dp * K),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, b)

@@ -1,11 +1,10 @@
-"""Pallas TPU kernel: ADC (asymmetric distance computation) score scan.
+"""Pallas TPU kernel: flat ADC (asymmetric distance computation) score scan.
 
-Scores a query batch against N PQ-coded items: out[b, n] = Σ_d LUT[b, d, c_nd].
-CPU/GPU implementations use SIMD gathers (André et al. 2015); gathers are
-lane-hostile on TPU, so this kernel uses the **one-hot matmul trick**
-(DESIGN.md §2): a (bn, D·K) one-hot expansion of the code tile is contracted
-against the reshaped LUT on the MXU. The one-hot tile lives only in VMEM and
-is rebuilt per grid step — HBM traffic stays at O(N·D + N·b).
+Scores a query batch against N PQ/RQ-coded items:
+out[b, n] = Σ_d LUT[b, d, c_nd]. CPU/GPU implementations use SIMD gathers
+(André et al. 2015); this kernel scores each item tile with the shared
+one-hot-MXU body (adc_common.adc_tile_scores) — HBM traffic stays at
+O(N·Dp + N·b). Residual depth rides in the Dp column dimension.
 
 Grid (N/bn,): each step scores one item tile against all b queries.
 """
@@ -17,23 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.adc_common import adc_tile_scores
 from repro.kernels.common import INTERPRET, cdiv
 
 
-def _kernel(codes_ref, lut_ref, out_ref, *, K: int):
-    codes = codes_ref[...].astype(jnp.int32)        # (bn, D)
-    lut = lut_ref[...].astype(jnp.float32)          # (b, D, K)
-    b, D, _ = lut.shape
-    bn = codes.shape[0]
-    # one-hot over the K axis: (bn, D, K)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, D, K), 2)
-    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
-    scores = jax.lax.dot_general(
-        onehot.reshape(bn, D * K),
-        lut.reshape(b, D * K),
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (bn, b)
+def _kernel(codes_ref, lut_ref, out_ref):
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...])  # (bn, b)
     out_ref[...] = scores.astype(out_ref.dtype)
 
 
@@ -45,20 +33,23 @@ def adc_lookup(
     block_n: int = 1024,
     interpret: bool = INTERPRET,
 ) -> jax.Array:
-    """lut (b, D, K) float, codes (N, D) integer  ->  scores (b, N) float32."""
-    b, D, K = lut.shape
+    """lut (b, Dp, K) float, codes (N, Dp) integer  ->  scores (b, N) float32."""
+    b, Dp, K = lut.shape
     N = codes.shape[0]
     bn = min(block_n, N)
     grid = (cdiv(N, bn),)
+    # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
+    # VMEM — the shared tile body widens per tile; widening here would
+    # materialize a 4× int32 copy of the whole corpus per call.
     out = pl.pallas_call(
-        functools.partial(_kernel, K=K),
+        _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, D), lambda i: (i, 0)),
-            pl.BlockSpec((b, D, K), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bn, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((b, Dp, K), lambda i: (0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bn, b), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, b), jnp.float32),
         interpret=interpret,
-    )(codes.astype(jnp.int32), lut)
+    )(codes, lut)
     return out.T

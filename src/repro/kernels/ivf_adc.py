@@ -30,22 +30,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.adc_common import adc_tile_scores
 from repro.kernels.common import INTERPRET
 
 
-def _kernel(bi_ref, bq_ref, codes_ref, lut_ref, out_ref, *, K: int):
+def _kernel(bi_ref, bq_ref, codes_ref, lut_ref, out_ref):
     del bi_ref, bq_ref  # consumed by the index_maps
-    codes = codes_ref[...].astype(jnp.int32)         # (bn, D)
-    lut = lut_ref[...].astype(jnp.float32)           # (1, D, K)
-    bn, D = codes.shape
-    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, D, K), 2)
-    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
-    scores = jax.lax.dot_general(
-        onehot.reshape(bn, D * K),
-        lut.reshape(1, D * K),
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (bn, 1)
+    bn = codes_ref.shape[0]
+    # shared family body with b = 1 (this step's query LUT): (bn, 1)
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...])
     out_ref[...] = scores.reshape(1, bn).astype(out_ref.dtype)
 
 
@@ -59,16 +52,18 @@ def ivf_adc(
     block_size: int = 128,
     interpret: bool = INTERPRET,
 ) -> jax.Array:
-    """lut (b, D, K) float, codes (cap, D) int (cap % block_size == 0),
-    block_idx / block_query (S,) int32  ->  scores (S, block_size) float32."""
-    b, D, K = lut.shape
+    """lut (b, Dp, K) float, codes (cap, Dp) int (cap % block_size == 0),
+    block_idx / block_query (S,) int32  ->  scores (S, block_size) float32.
+
+    Residual depth rides in the Dp column dimension (Dp = M·D for RQ)."""
+    b, Dp, K = lut.shape
     S = block_idx.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(S,),
         in_specs=[
-            pl.BlockSpec((block_size, D), lambda i, bi, bq: (bi[i], 0)),
-            pl.BlockSpec((1, D, K), lambda i, bi, bq: (bq[i], 0, 0)),
+            pl.BlockSpec((block_size, Dp), lambda i, bi, bq: (bi[i], 0)),
+            pl.BlockSpec((1, Dp, K), lambda i, bi, bq: (bq[i], 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_size), lambda i, bi, bq: (i, 0)),
     )
@@ -76,7 +71,7 @@ def ivf_adc(
     # VMEM — the kernel widens per tile; widening here would materialize a
     # 4× int32 copy of the whole corpus per call.
     return pl.pallas_call(
-        functools.partial(_kernel, K=K),
+        _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S, block_size), jnp.float32),
         interpret=interpret,

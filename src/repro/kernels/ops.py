@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import adc_batch as _adcb
 from repro.kernels import adc_lookup as _adc
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import gcd_score as _score
@@ -96,10 +97,21 @@ def pq_assign(X, codebooks, *, use_kernel: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def adc_lookup(lut, codes, *, use_kernel: bool = True):
-    """ADC scores (b, D, K) × (N, D) -> (b, N)."""
+    """Flat ADC scores (b, Dp, K) × (N, Dp) -> (b, N). Residual depth is the
+    Dp column dimension (Dp = M·D for a depth-M RQ)."""
     if use_kernel:
         return _adc.adc_lookup(lut, codes)
     return ref.adc_lookup_ref(lut, codes)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def adc_batch(lut, codes, *, use_kernel: bool = True):
+    """Grouped ADC scores (g, r, Dp, K) × (g, S, Dp) -> (g, r, S) — the
+    KV-cache decode scorer (group = one (batch, kv-head) pair, r = GQA
+    repetition)."""
+    if use_kernel:
+        return _adcb.adc_batch(lut, codes)
+    return ref.adc_batch_ref(lut, codes)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "use_kernel"))

@@ -44,6 +44,30 @@ def adc_lookup_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
     return jnp.sum(g, axis=-1)
 
 
+def adc_batch_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Grouped ADC score sum (KV-cache scoring). lut (g, r, Dp, K),
+    codes (g, S, Dp) -> (g, r, S) with
+    out[g, r, s] = Σ_d lut[g, r, d, codes[g, s, d]].
+
+    Accumulated with a scan over the Dp columns so the peak gather buffer is
+    O(g·r·S) instead of O(g·r·S·Dp) — at S=524288 decode shapes the all-Dp
+    gather costs GiBs/device (the Pallas adc_batch kernel tiles a one-hot
+    matmul instead; this is the XLA-safe reference path).
+    """
+    g, r, Dp, K = lut.shape
+    S = codes.shape[1]
+    lut_d = jnp.moveaxis(lut.astype(jnp.float32), -2, 0)    # (Dp, g, r, K)
+    codes_d = jnp.moveaxis(codes.astype(jnp.int32), -1, 0)  # (Dp, g, S)
+
+    def add_one(acc, dl):
+        l_d, c_d = dl  # (g, r, K), (g, S)
+        return acc + jnp.take_along_axis(l_d, c_d[:, None, :], axis=-1), None
+
+    acc0 = jnp.zeros((g, r, S), jnp.float32)
+    out, _ = jax.lax.scan(add_one, acc0, (lut_d, codes_d))
+    return out
+
+
 def ivf_adc_ref(lut: jax.Array, codes: jax.Array, block_idx: jax.Array,
                 block_query: jax.Array, *, block_size: int = 128) -> jax.Array:
     """Selected-block ADC scan. lut (b, D, K), codes (cap, D),

@@ -1,0 +1,40 @@
+"""repro.quant — the unified quantizer subsystem.
+
+Every quantization scheme in the repo (flat PQ, multi-level residual RQ, the
+IVF coarse VQ, OPQ's rotation-aware fit, the per-head KV-cache PQ) serves
+through one ``Quantizer`` protocol and one codebook/k-means substrate, and
+scores through one shared Pallas ADC kernel family (repro.kernels):
+
+  base      the Quantizer protocol + PQConfig
+  codebook  per-subspace codebook primitives: assign/decode/STE/distortion,
+            ADC tables, Givens codebook rotation (refresh_rotation's engine)
+  kmeans    shared Lloyd's iterations, EMA updates, full-vector vq_kmeans
+  pq        PQ    — single-level product quantizer (code_width = D)
+  rq        RQ    — depth-M residual quantizer     (code_width = M·D)
+  vq        VQ    — full-vector coarse quantizer    (code_width = 1)
+  opq       OPQ alternating minimization (SVD / GCD / Cayley solvers)
+
+Consumers: core.index_layer (training-path T(X) = φ(XR)Rᵀ via ``encode_st``),
+core.kv_quant (per-head PQ on attention KV), index.* (VQ coarse + PQ/RQ
+residual quantizer per IVF index), benchmarks/ivf_recall_qps.py (PQ-vs-RQ
+recall/compression frontier). ``core.pq`` and ``core.opq`` remain as
+compatibility shims onto this package — see README.md for the migration
+table.
+"""
+from repro.quant import base, codebook, kmeans, opq  # noqa: F401
+from repro.quant.base import PQConfig, Quantizer  # noqa: F401
+from repro.quant.codebook import (  # noqa: F401
+    adc_score_tables,
+    rotate_codebooks,
+)
+from repro.quant.pq import PQ  # noqa: F401
+from repro.quant.rq import RQ  # noqa: F401
+from repro.quant.vq import VQ  # noqa: F401
+
+
+def fit_quantizer(key, X, cfg: PQConfig, *, depth: int = 1, iters: int = 10):
+    """Fit the residual family by depth: PQ at depth 1, RQ above. Returns
+    (quantizer, distortion trace)."""
+    if depth <= 1:
+        return PQ.fit(key, X, cfg, iters=iters)
+    return RQ.fit(key, X, cfg, depth, iters=iters)

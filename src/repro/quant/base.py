@@ -1,0 +1,77 @@
+"""The `Quantizer` protocol — the one interface every quantization scheme in
+this repo serves through (paper §2.1's pluggable φ).
+
+The paper's transform T(X) = φ(XR)Rᵀ treats the quantizer φ as a component;
+before this subsystem existed the repo had four divergent copies of
+codebook/encode/ADC logic. Everything now speaks this protocol:
+
+  * ``fit``        (classmethod) train codebooks from data
+  * ``encode``     (m, n) -> (m, code_width) integer codes
+  * ``decode``     codes -> (m, n) reconstruction (differentiable wrt codebooks)
+  * ``encode_st``  straight-through φ: forward = decode(encode(X)),
+                   backward = identity wrt X (Bengio et al. 2013)
+  * ``adc_tables`` (b, n) queries -> (b, code_width, K) inner-product LUTs;
+                   scores are Σ_c LUT[c, code_c] — the shape every kernel in
+                   the shared ADC family (kernels/adc_common.py) consumes
+  * ``distortion`` (1/m)‖X − φ(X)‖²_F — the paper's Eq.(1) second term
+  * ``rotate``     absorb a product of disjoint Givens plane rotations into
+                   the codebooks (what makes index.maintain.refresh_rotation
+                   scheme-agnostic)
+
+``code_width`` is the number of integer columns per item: D for PQ, M·D for
+a depth-M residual quantizer. Multi-level schemes flatten their level axis
+into ``code_width`` so the downstream ADC kernels are parameterized by
+residual depth purely through that dimension — one kernel family serves PQ,
+RQ, and the KV cache alike.
+
+Implementations (PQ, RQ, VQ) are frozen-dataclass pytrees, so a Quantizer
+can ride inside jit-traced structures (e.g. index.ivf.IVFPQIndex) and be
+differentiated through (codebook leaves).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+class PQConfig(NamedTuple):
+    """Per-level product-quantizer shape: D subspaces × K codewords."""
+
+    num_subspaces: int  # D
+    num_codewords: int  # K
+
+    def code_dtype(self):
+        return jnp.uint8 if self.num_codewords <= 256 else jnp.int32
+
+
+@runtime_checkable
+class Quantizer(Protocol):
+    """Structural interface — see module docstring for the contract."""
+
+    @property
+    def dim(self) -> int: ...               # input vector dimensionality n
+
+    @property
+    def code_width(self) -> int: ...        # integer columns per item
+
+    @property
+    def num_codewords(self) -> int: ...     # K (LUT last-dim)
+
+    @property
+    def code_dtype(self): ...               # storage dtype for codes
+
+    def encode(self, X: jax.Array) -> jax.Array: ...
+
+    def decode(self, codes: jax.Array) -> jax.Array: ...
+
+    def encode_st(self, X: jax.Array) -> jax.Array: ...
+
+    def adc_tables(self, Q: jax.Array) -> jax.Array: ...
+
+    def distortion(self, X: jax.Array,
+                   codes: jax.Array | None = None) -> jax.Array: ...
+
+    def rotate(self, pi: jax.Array, pj: jax.Array,
+               theta: jax.Array) -> "Quantizer": ...

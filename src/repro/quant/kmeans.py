@@ -1,0 +1,84 @@
+"""Shared k-means machinery (extracted from core/pq.py and index/ivf.py).
+
+One Lloyd's-iteration implementation serves every codebook fit in the repo:
+per-subspace PQ codebooks, each level of a residual quantizer, and —
+via ``vq_kmeans`` (a single-subspace special case) — the IVF coarse
+quantizer's full-vector centroids. Streaming EMA updates (VQ-VAE style) live
+here too as the alternative to gradient training of codebooks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.base import PQConfig
+from repro.quant.codebook import assign, distortion, split
+
+
+def kmeans_init(key: jax.Array, X: jax.Array, cfg: PQConfig) -> jax.Array:
+    """Init codebooks by sampling K distinct rows per subspace."""
+    m = X.shape[0]
+    Xs = split(X, cfg.num_subspaces)  # (m, D, sub)
+    idx = jax.random.choice(key, m, shape=(cfg.num_codewords,), replace=False)
+    return jnp.transpose(Xs[idx], (1, 0, 2))  # (D, K, sub)
+
+
+def kmeans_update(X: jax.Array, codebooks: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One Lloyd iteration over all D subspaces. Returns (codebooks, codes).
+
+    Empty clusters keep their previous centroid.
+    """
+    D, K, _ = codebooks.shape
+    codes = assign(X, codebooks)  # (m, D)
+    Xs = split(X, D)  # (m, D, sub)
+
+    def per_subspace(xd, cd):
+        sums = jax.ops.segment_sum(xd, cd, num_segments=K)  # (K, sub)
+        cnt = jax.ops.segment_sum(jnp.ones_like(cd, jnp.float32), cd, num_segments=K)
+        return sums, cnt
+
+    sums, cnt = jax.vmap(per_subspace, in_axes=(1, 1))(Xs, codes)  # (D, K, sub), (D, K)
+    new = jnp.where(cnt[..., None] > 0, sums / jnp.maximum(cnt[..., None], 1.0), codebooks)
+    return new, codes
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "iters"))
+def kmeans(key: jax.Array, X: jax.Array, cfg: PQConfig, iters: int = 10):
+    """Full k-means per subspace; returns (codebooks, distortion_trace)."""
+    cb0 = kmeans_init(key, X, cfg)
+
+    def body(cb, _):
+        cb, codes = kmeans_update(X, cb)
+        return cb, distortion(X, cb, codes)
+
+    cb, trace = jax.lax.scan(body, cb0, None, length=iters)
+    return cb, trace
+
+
+def vq_kmeans(key: jax.Array, X: jax.Array, num_centroids: int,
+              iters: int = 10) -> jax.Array:
+    """Full-vector k-means via the PQ machinery with a single subspace:
+    PQConfig(1, L) codebooks (1, L, n) are exactly L centroids. Returns
+    (L, n) centroids — the IVF coarse-quantizer fit."""
+    cb, _ = kmeans(key, X, PQConfig(1, num_centroids), iters=iters)
+    return cb[0]
+
+
+def codebook_ema_update(codebooks: jax.Array, X: jax.Array, codes: jax.Array,
+                        decay: float = 0.99) -> jax.Array:
+    """Streaming EMA codebook update (VQ-VAE style) — an alternative to
+    gradient training of codebooks inside the end-to-end loop."""
+    D, K, _ = codebooks.shape
+    Xs = split(X, D)
+
+    def per_subspace(xd, cd):
+        sums = jax.ops.segment_sum(xd, cd, num_segments=K)
+        cnt = jax.ops.segment_sum(jnp.ones_like(cd, jnp.float32), cd, num_segments=K)
+        return sums, cnt
+
+    sums, cnt = jax.vmap(per_subspace, in_axes=(1, 1))(Xs, codes)
+    batch_mean = sums / jnp.maximum(cnt[..., None], 1.0)
+    upd = decay * codebooks + (1.0 - decay) * batch_mean
+    return jnp.where(cnt[..., None] > 0, upd, codebooks)

@@ -1,0 +1,97 @@
+"""PQ — single-level product quantizer behind the ``Quantizer`` protocol.
+
+A thin, jit-traceable pytree wrapper over the codebook substrate
+(quant/codebook.py): splits an n-dim vector into D contiguous subvectors and
+snaps each to the nearest of K codewords. ``code_width == D``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import codebook as cb
+from repro.quant import kmeans as km
+from repro.quant.base import PQConfig
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class PQ:
+    """Product quantizer. Single pytree leaf: ``codebooks (D, K, sub)``."""
+
+    codebooks: jax.Array  # (D, K, sub)
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("codebooks"), self.codebooks),), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- static shape facts ------------------------------------------------
+    @property
+    def num_subspaces(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def num_codewords(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def sub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.codebooks.shape[0] * self.codebooks.shape[2]
+
+    @property
+    def code_width(self) -> int:
+        return self.num_subspaces
+
+    @property
+    def code_dtype(self):
+        return jnp.uint8 if self.num_codewords <= 256 else jnp.int32
+
+    @property
+    def config(self) -> PQConfig:
+        return PQConfig(self.num_subspaces, self.num_codewords)
+
+    # -- fitting -----------------------------------------------------------
+    @classmethod
+    def fit(cls, key: jax.Array, X: jax.Array, cfg: PQConfig,
+            iters: int = 10) -> tuple["PQ", jax.Array]:
+        """k-means per subspace; returns (PQ, distortion trace (iters,))."""
+        codebooks, trace = km.kmeans(key, X, cfg, iters=iters)
+        return cls(codebooks), trace
+
+    def ema_update(self, X: jax.Array, codes: jax.Array,
+                   decay: float = 0.99) -> "PQ":
+        return PQ(km.codebook_ema_update(self.codebooks, X, codes, decay=decay))
+
+    # -- Quantizer protocol ------------------------------------------------
+    def encode(self, X: jax.Array) -> jax.Array:
+        return cb.assign(X, self.codebooks)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        return cb.decode(codes.astype(jnp.int32), self.codebooks)
+
+    def encode_st(self, X: jax.Array) -> jax.Array:
+        return cb.quantize_ste(X, self.codebooks)
+
+    def adc_tables(self, Q: jax.Array) -> jax.Array:
+        return cb.adc_lut(Q, self.codebooks)  # (b, D, K)
+
+    def distortion(self, X: jax.Array,
+                   codes: jax.Array | None = None) -> jax.Array:
+        if codes is not None:
+            codes = codes.astype(jnp.int32)
+        return cb.distortion(X, self.codebooks, codes)
+
+    def rotate(self, pi: jax.Array, pj: jax.Array,
+               theta: jax.Array) -> "PQ":
+        """Rotated-space refresh; caller zeroes θ on cross-subspace pairs."""
+        return PQ(cb.rotate_codebooks(self.codebooks, pi, pj, theta))

@@ -1,0 +1,140 @@
+"""RQ — depth-M residual product quantizer (Transformed Residual
+Quantization, Yuan & Liu 2015) behind the ``Quantizer`` protocol.
+
+Level 0 product-quantizes the vector; each further level quantizes the
+residual left by the levels before it. Reconstruction is the *sum* of the
+level decodes, so for inner-product retrieval the ADC score stays a single
+LUT sum over ``code_width = M·D`` columns:
+
+    ⟨q, x̂⟩ = Σ_l ⟨q, decode_l(c_l)⟩ = Σ_{l,d} LUT[l·D+d, c_{l,d}]
+
+i.e. an RQ looks to the shared ADC kernel family exactly like a PQ with M·D
+subspaces — residual depth is a *shape parameter*, not a new kernel. At
+equal K this trades M× code bytes for strictly lower distortion (each level
+is fit on the previous level's error), tracing the recall/compression
+frontier that benchmarks/ivf_recall_qps.py sweeps.
+
+Codes are stored level-major: column l·D + d holds level l, subspace d.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import codebook as cb
+from repro.quant import kmeans as km
+from repro.quant.base import PQConfig
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class RQ:
+    """Residual quantizer. Single pytree leaf: ``codebooks (M, D, K, sub)``."""
+
+    codebooks: jax.Array  # (M, D, K, sub)
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("codebooks"), self.codebooks),), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- static shape facts ------------------------------------------------
+    @property
+    def num_levels(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def num_subspaces(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def num_codewords(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def sub(self) -> int:
+        return self.codebooks.shape[3]
+
+    @property
+    def dim(self) -> int:
+        return self.num_subspaces * self.sub
+
+    @property
+    def code_width(self) -> int:
+        return self.num_levels * self.num_subspaces
+
+    @property
+    def code_dtype(self):
+        return jnp.uint8 if self.num_codewords <= 256 else jnp.int32
+
+    @property
+    def config(self) -> PQConfig:
+        return PQConfig(self.num_subspaces, self.num_codewords)
+
+    # -- fitting -----------------------------------------------------------
+    @classmethod
+    def fit(cls, key: jax.Array, X: jax.Array, cfg: PQConfig, depth: int,
+            iters: int = 10) -> tuple["RQ", jax.Array]:
+        """Greedy level-by-level fit: k-means each level on the residual the
+        previous levels leave. Returns (RQ, (depth, iters) distortion trace
+        — per-level traces are of the *residual* that level sees)."""
+        res = X
+        cbs, traces = [], []
+        for lvl in range(depth):
+            level_cb, tr = km.kmeans(jax.random.fold_in(key, lvl), res, cfg,
+                                     iters=iters)
+            res = res - cb.quantize(res, level_cb)
+            cbs.append(level_cb)
+            traces.append(tr)
+        return cls(jnp.stack(cbs)), jnp.stack(traces)
+
+    # -- Quantizer protocol ------------------------------------------------
+    def encode(self, X: jax.Array) -> jax.Array:
+        """(m, n) -> (m, M·D) int32, level-major (greedy residual encode)."""
+        res = X
+        cols = []
+        for lvl in range(self.num_levels):
+            codes_l = cb.assign(res, self.codebooks[lvl])
+            res = res - cb.decode(codes_l, self.codebooks[lvl])
+            cols.append(codes_l)
+        return jnp.concatenate(cols, axis=-1)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        """(m, M·D) -> (m, n): sum of per-level reconstructions."""
+        D = self.num_subspaces
+        codes = codes.astype(jnp.int32)
+        out = cb.decode(codes[..., :D], self.codebooks[0])
+        for lvl in range(1, self.num_levels):
+            out = out + cb.decode(codes[..., lvl * D:(lvl + 1) * D],
+                                  self.codebooks[lvl])
+        return out
+
+    def encode_st(self, X: jax.Array) -> jax.Array:
+        q = self.decode(jax.lax.stop_gradient(self.encode(X)))
+        return X + jax.lax.stop_gradient(q - X)
+
+    def adc_tables(self, Q: jax.Array) -> jax.Array:
+        """(b, n) -> (b, M·D, K): per-level LUTs flattened level-major so the
+        shared kernels see one wide PQ."""
+        luts = [cb.adc_lut(Q, self.codebooks[lvl])
+                for lvl in range(self.num_levels)]
+        return jnp.concatenate(luts, axis=1)
+
+    def distortion(self, X: jax.Array,
+                   codes: jax.Array | None = None) -> jax.Array:
+        if codes is None:
+            codes = jax.lax.stop_gradient(self.encode(X))
+        q = self.decode(codes)
+        return jnp.mean(jnp.sum(jnp.square(X - q), axis=-1))
+
+    def rotate(self, pi: jax.Array, pj: jax.Array,
+               theta: jax.Array) -> "RQ":
+        """Within-subspace plane rotations commute with the residual
+        recursion (residuals rotate with the data), so one call refreshes
+        every level. Caller zeroes θ on cross-subspace pairs."""
+        return RQ(cb.rotate_codebooks(self.codebooks, pi, pj, theta))

@@ -1,0 +1,93 @@
+"""VQ — full-vector (single-subspace) quantizer: the IVF coarse quantizer.
+
+A vector quantizer is a PQ with D = 1, so ``code_width == 1`` and the ADC
+table degenerates to the plain centroid inner products Q·Cᵀ — exactly the
+coarse term of the IVF score decomposition. Kept as its own protocol
+implementation so index code reads ``index.coarse`` / ``index.quantizer``
+symmetrically and ``refresh_rotation`` can rotate both the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import codebook as cb
+from repro.quant import kmeans as km
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class VQ:
+    """Vector quantizer. Single pytree leaf: ``centroids (L, n)``."""
+
+    centroids: jax.Array  # (L, n)
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("centroids"), self.centroids),), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- static shape facts ------------------------------------------------
+    @property
+    def num_centroids(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def num_codewords(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def code_width(self) -> int:
+        return 1
+
+    @property
+    def code_dtype(self):
+        return jnp.uint8 if self.num_centroids <= 256 else jnp.int32
+
+    # -- fitting -----------------------------------------------------------
+    @classmethod
+    def fit(cls, key: jax.Array, X: jax.Array, num_centroids: int,
+            iters: int = 10) -> "VQ":
+        return cls(km.vq_kmeans(key, X, num_centroids, iters=iters))
+
+    # -- Quantizer protocol ------------------------------------------------
+    def assign(self, X: jax.Array) -> jax.Array:
+        """Nearest centroid: (m, n) -> (m,) int32 — the IVF list id."""
+        return cb.assign(X, self.centroids[None, ...])[:, 0]
+
+    def encode(self, X: jax.Array) -> jax.Array:
+        return self.assign(X)[:, None]  # (m, 1)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        return self.centroids[codes.astype(jnp.int32)[..., 0]]
+
+    def encode_st(self, X: jax.Array) -> jax.Array:
+        q = self.decode(jax.lax.stop_gradient(self.encode(X)))
+        return X + jax.lax.stop_gradient(q - X)
+
+    def adc_tables(self, Q: jax.Array) -> jax.Array:
+        return (Q @ self.centroids.T)[:, None, :]  # (b, 1, L)
+
+    def distortion(self, X: jax.Array,
+                   codes: jax.Array | None = None) -> jax.Array:
+        if codes is None:
+            codes = jax.lax.stop_gradient(self.encode(X))
+        q = self.decode(codes)
+        return jnp.mean(jnp.sum(jnp.square(X - q), axis=-1))
+
+    def rotate(self, pi: jax.Array, pj: jax.Array,
+               theta: jax.Array) -> "VQ":
+        """Centroids live in the rotated space; any disjoint plane product
+        applies exactly (no subspace structure to respect)."""
+        from repro.core import givens  # function-level: avoid import cycle
+
+        return VQ(givens.apply_pair_rotations(self.centroids, pi, pj, theta))

@@ -6,6 +6,11 @@ into a jit-able ``(state, batch) → (state, metrics)`` step that:
   * routes updates through training.optimizer (AdamW + GCD manifold),
   * advances the RNG deterministically from the step counter.
 
+End-to-end losses that train *through* a quantized index compose with
+``eq1_loss`` below: the paper's Eq.(1) built from any ``repro.quant``
+Quantizer via its straight-through ``encode_st`` (this is the route
+core.index_layer.apply takes inside recsys.twotower_loss too).
+
 The same step function is what launch/dryrun.py lowers for the training
 cells, so the compiled artifact includes the full optimizer and the GCD
 update — the roofline sees the real system, not just the forward pass.
@@ -19,6 +24,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.training import optimizer as opt_lib
+
+
+def eq1_loss(quantizer, R: jax.Array, X: jax.Array,
+             task_loss: Callable[[jax.Array], jax.Array],
+             distortion_weight: float = 1.0) -> jax.Array:
+    """Paper Eq.(1):  L_task(T(X)) + w·(1/m)‖XR − φ(XR)‖²  with
+    T(X) = φ(XR)Rᵀ and φ any ``repro.quant`` Quantizer.
+
+    The non-differentiable φ is bridged by ``Quantizer.encode_st`` (forward
+    = quantized value, backward = identity wrt X), so ∂/∂X reaches the
+    towers, ∂/∂codebooks comes from the distortion term, and ∂/∂R feeds the
+    GCD manifold update in training.optimizer.
+    """
+    XR = X @ R
+    tx = quantizer.encode_st(XR) @ R.T
+    return task_loss(tx) + distortion_weight * quantizer.distortion(XR)
 
 
 class TrainState(NamedTuple):

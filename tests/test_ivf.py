@@ -46,7 +46,7 @@ def test_pack_csr_invariants(index_and_data):
     assert sorted(live.tolist()) == list(range(N))  # every item exactly once
     # every live row's code matches a fresh encode of its vector
     XR = X @ index.R
-    list_ids, codes = ivf.encode(XR, index.centroids, index.codebooks)
+    list_ids, codes = ivf.encode(XR, index.coarse, index.quantizer)
     rows = np.nonzero(ids >= 0)[0]
     np.testing.assert_array_equal(
         np.asarray(index.codes)[rows].astype(np.int32),
@@ -170,7 +170,7 @@ def test_add_fills_holes_then_repacks(index_and_data):
     assert int(idx3.num_items()) == N - 100 + 60
     # new items are findable and correctly encoded
     XR = Xn @ idx3.R
-    list_ids, codes = ivf.encode(XR, idx3.centroids, idx3.codebooks)
+    list_ids, codes = ivf.encode(XR, idx3.coarse, idx3.quantizer)
     ids_np = np.asarray(idx3.ids)
     for i in (0, 17, 59):
         rows = np.nonzero(ids_np == N + i)[0]

@@ -1,0 +1,266 @@
+"""Quantizer-conformance suite: every scheme behind the repro.quant protocol
+must satisfy the same contract (ISSUE 2).
+
+Parametrized over PQ, depth-2/3 RQ, and the residual quantizer of a built
+IVF index. Checks per scheme:
+  * encode/decode round trip: shapes, dtype bounds, distortion bounds;
+  * ADC-vs-exact score parity through the shared kernel family (jnp oracle
+    AND Pallas interpret path);
+  * straight-through gradients: identity wrt X, finite, right shape;
+  * within-subspace Givens rotation preserves codes (the refresh_rotation
+    contract);
+plus RQ-specific laws (depth monotonicity, level-major layout) and an
+end-to-end depth-2 IVF check (build → search → refresh).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.core import givens
+from repro.data import synthetic
+from repro.index import ivf, maintain, search
+from repro.training import train_state as ts
+
+DIM, D, K = 32, 4, 16
+CFG = quant.PQConfig(D, K)
+
+
+def _data(seed=0, m=512):
+    return synthetic.sift_like(jax.random.PRNGKey(seed), m, DIM)
+
+
+@pytest.fixture(scope="module")
+def quantizers():
+    """name -> (quantizer, train data X). All protocol-conformant."""
+    X = _data(0)
+    pq, _ = quant.PQ.fit(jax.random.PRNGKey(1), X, CFG, iters=8)
+    rq2, _ = quant.RQ.fit(jax.random.PRNGKey(1), X, CFG, 2, iters=8)
+    rq3, _ = quant.RQ.fit(jax.random.PRNGKey(1), X, CFG, 3, iters=8)
+    # the IVF residual quantizer, exactly as a built index carries it
+    R = givens.random_rotation(jax.random.PRNGKey(2), DIM)
+    index = ivf.build(
+        jax.random.PRNGKey(3), X, R,
+        ivf.IVFPQConfig(num_lists=8, pq=CFG, block_size=8, depth=2))
+    XR = X @ R
+    residuals = XR - index.coarse.centroids[index.coarse.assign(XR)]
+    return {
+        "pq": (pq, X),
+        "rq2": (rq2, X),
+        "rq3": (rq3, X),
+        "ivf_residual": (index.quantizer, residuals),
+    }
+
+
+NAMES = ["pq", "rq2", "rq3", "ivf_residual"]
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_encode_decode_roundtrip(quantizers, name):
+    q, X = quantizers[name]
+    codes = q.encode(X)
+    assert codes.shape == (X.shape[0], q.code_width)
+    assert int(codes.min()) >= 0 and int(codes.max()) < q.num_codewords
+    xhat = q.decode(codes)
+    assert xhat.shape == X.shape
+    # distortion beats the zero-codebook baseline and matches decode error
+    d = float(q.distortion(X))
+    zero = float(jnp.mean(jnp.sum(jnp.square(X), axis=-1)))
+    err = float(jnp.mean(jnp.sum(jnp.square(X - xhat), axis=-1)))
+    assert d < zero
+    np.testing.assert_allclose(d, err, rtol=1e-5)
+    # storage dtype round trip is lossless
+    assert np.dtype(q.code_dtype) == (np.uint8 if K <= 256 else np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(q.decode(codes.astype(q.code_dtype))), np.asarray(xhat))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_adc_matches_exact_scores(quantizers, name):
+    q, X = quantizers[name]
+    codes = q.encode(X[:200])
+    Q = _data(7, m=5)
+    tables = q.adc_tables(Q)
+    assert tables.shape == (5, q.code_width, q.num_codewords)
+    want = Q @ q.decode(codes).T
+    got_ref = quant.adc_score_tables(tables, codes, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # Pallas member of the kernel family (interpret mode off-TPU)
+    got_kernel = quant.adc_score_tables(tables, codes, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(got_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_encode_st_gradients(quantizers, name):
+    q, X = quantizers[name]
+    Xs = X[:64]
+    w = jax.random.normal(jax.random.PRNGKey(9), (DIM,))
+    # forward = hard quantization
+    np.testing.assert_allclose(np.asarray(q.encode_st(Xs)),
+                               np.asarray(q.decode(q.encode(Xs))), atol=1e-6)
+    g = jax.grad(lambda x: jnp.sum(q.encode_st(x) @ w))(Xs)
+    assert g.shape == Xs.shape
+    assert np.all(np.isfinite(np.asarray(g)))
+    # straight-through: dL/dx == broadcast of w
+    np.testing.assert_allclose(np.asarray(g), np.tile(w, (64, 1)), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_within_subspace_rotation_preserves_codes(quantizers, name):
+    """The refresh_rotation contract: a disjoint within-subspace Givens
+    product rotates codebooks so that codes of rotated data are unchanged."""
+    q, X = quantizers[name]
+    sub = q.sub
+    # one disjoint pair inside each subspace: (d·sub, d·sub+1)
+    pi = jnp.arange(D, dtype=jnp.int32) * sub
+    pj = pi + 1
+    theta = 0.05 * (1.0 + jnp.arange(D, dtype=jnp.float32))
+    delta = givens.apply_pair_rotations(jnp.eye(DIM), pi, pj, theta)
+    q_rot = q.rotate(pi, pj, theta)
+    codes = np.asarray(q.encode(X))
+    codes_rot = np.asarray(q_rot.encode(X @ delta))
+    mismatch = np.mean(np.any(codes != codes_rot, axis=-1))
+    assert mismatch <= 0.01  # exact up to fp-rounding ties
+
+
+def test_rq_distortion_monotone_in_depth(quantizers):
+    pq, X = quantizers["pq"]
+    rq2, _ = quantizers["rq2"]
+    rq3, _ = quantizers["rq3"]
+    d1 = float(pq.distortion(X))
+    d2 = float(rq2.distortion(X))
+    d3 = float(rq3.distortion(X))
+    assert d2 < d1 and d3 < d2, (d1, d2, d3)
+
+
+def test_rq_level_major_layout(quantizers):
+    """Column l·D+d is level l / subspace d, and decode sums the levels."""
+    rq2, X = quantizers["rq2"]
+    codes = rq2.encode(X[:50])
+    lvl0 = quant.PQ(rq2.codebooks[0])
+    np.testing.assert_array_equal(np.asarray(codes[:, :D]),
+                                  np.asarray(lvl0.encode(X[:50])))
+    dec = lvl0.decode(codes[:, :D]) \
+        + quant.PQ(rq2.codebooks[1]).decode(codes[:, D:])
+    np.testing.assert_allclose(np.asarray(rq2.decode(codes)),
+                               np.asarray(dec), atol=1e-6)
+
+
+def test_eq1_loss_trains_through_any_quantizer(quantizers):
+    """training.train_state.eq1_loss: end-to-end Eq.(1) via encode_st yields
+    finite grads for R, codebooks, and the input batch."""
+    rq2, X = quantizers["rq2"]
+    R0 = givens.random_rotation(jax.random.PRNGKey(11), DIM)
+    Xs = X[:32]
+
+    def loss(R, q, x):
+        return ts.eq1_loss(q, R, x, lambda tx: -jnp.mean(jnp.sum(tx * x, -1)),
+                           distortion_weight=0.5)
+
+    val, grads = jax.value_and_grad(loss, argnums=(0, 1, 2))(R0, rq2, Xs)
+    assert np.isfinite(float(val))
+    for g in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g)))
+    # codebook grads come from the distortion term (nonzero somewhere)
+    assert float(jnp.max(jnp.abs(grads[1].codebooks))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Depth-2 residual IVF index end to end (build → search → refresh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def rq_index():
+    X = synthetic.sift_like(jax.random.PRNGKey(20), 2000, 16)
+    R = givens.random_rotation(jax.random.PRNGKey(21), 16)
+    cfg = ivf.IVFPQConfig(num_lists=8, pq=quant.PQConfig(4, 16),
+                          block_size=8, depth=2)
+    index = ivf.build(jax.random.PRNGKey(22), X, R, cfg)
+    Q = synthetic.sift_like(jax.random.PRNGKey(23), 16, 16)
+    return index, X, Q
+
+
+def test_rq_index_full_probe_matches_flat(rq_index):
+    index, _, Q = rq_index
+    assert index.codes.shape[1] == 8  # M·D = 2·4 code columns
+    res = search.search(index, Q, nprobe=index.num_lists, k=10,
+                        use_kernel=False)
+    flat_scores, flat_ids = search.flat_adc_scores(index, Q)
+    want_scores, pos = jax.lax.top_k(flat_scores, 10)
+    np.testing.assert_allclose(np.asarray(res.scores),
+                               np.asarray(want_scores), rtol=1e-5, atol=1e-5)
+    agree = np.mean(np.asarray(res.ids) == np.asarray(flat_ids[pos]))
+    assert agree >= 0.95  # ids agree except on exact score ties
+
+
+def test_rq_index_kernel_matches_ref(rq_index):
+    index, _, Q = rq_index
+    a = search.search(index, Q, nprobe=3, k=5, use_kernel=True)
+    b = search.search(index, Q, nprobe=3, k=5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_rq_index_refresh_rotation(rq_index):
+    index, X, Q = rq_index
+    G = jax.random.normal(jax.random.PRNGKey(24), (16, 16))
+    refreshed, (pi, pj, theta) = maintain.subspace_gcd_step(index, G, 2e-3)
+    assert float(jnp.max(jnp.abs(refreshed.R - index.R))) > 0
+    assert float(givens.orthogonality_error(refreshed.R)) < 1e-4
+    # both RQ levels rotated; codes survive a subspace step (≤1% fp ties)
+    assert refreshed.quantizer.codebooks.shape == index.quantizer.codebooks.shape
+    mismatch = float(maintain.refresh_mismatch(refreshed, X))
+    assert mismatch <= 0.01
+    # scores are rotation-invariant inner products
+    a = search.search(index, Q, nprobe=index.num_lists, k=10, use_kernel=False)
+    b = search.search(refreshed, Q, nprobe=index.num_lists, k=10,
+                      use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rq_index_add_remove(rq_index):
+    index, _, _ = rq_index
+    idx2 = maintain.remove(index, jnp.arange(40, dtype=jnp.int32))
+    Xn = synthetic.sift_like(jax.random.PRNGKey(25), 30, 16)
+    idx3 = maintain.add(idx2, Xn, jnp.arange(2000, 2030, dtype=jnp.int32))
+    assert int(idx3.num_items()) == 2000 - 40 + 30
+    assert idx3.codes.shape[1] == index.codes.shape[1]
+
+
+def test_grouped_adc_batch_kernel_parity():
+    """The KV-cache member of the kernel family, multi-level shapes included."""
+    from repro.kernels import ops, ref
+    for Dp in (4, 8):  # PQ-width and RQ-2-width columns
+        lut = jax.random.normal(jax.random.PRNGKey(Dp), (3, 2, Dp, K))
+        codes = jax.random.randint(jax.random.PRNGKey(Dp + 1), (3, 40, Dp),
+                                   0, K)
+        got = ops.adc_batch(lut, codes, use_kernel=True)
+        want = ref.adc_batch_ref(lut, codes)
+        assert got.shape == (3, 2, 40)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quantizers_are_jit_traceable_pytrees(quantizers):
+    for name in NAMES:
+        q, X = quantizers[name]
+        leaves, treedef = jax.tree_util.tree_flatten(q)
+        assert all(hasattr(leaf, "shape") for leaf in leaves)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert type(rebuilt) is type(q)
+
+        @jax.jit
+        def enc(qz, x):
+            return qz.encode(x)
+
+        np.testing.assert_array_equal(np.asarray(enc(q, X[:8])),
+                                      np.asarray(q.encode(X[:8])))
+        assert isinstance(q, quant.Quantizer)
