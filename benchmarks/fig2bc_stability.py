@@ -12,25 +12,25 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import opq, pq
+from repro import quant
 from repro.data import synthetic
 
 
 def run(num=4096, dim=64, D=8, K=32, iters=20, runs=5, verbose=True):
-    cfg = pq.PQConfig(D, K)
+    cfg = quant.PQConfig(D, K)
     X_full = synthetic.sift_like(jax.random.PRNGKey(0), num, dim)
     out = {}
     for frac in (0.1, 0.5, 1.0):
         n = int(num * frac)
-        finals = {"svd": [], "gcd_greedy": []}
+        finals = {"procrustes": [], "gcd_greedy": []}
         for r in range(runs):
             Xr = X_full[
                 np.random.RandomState(r).permutation(num)[:n]
             ]
             for solver in finals:
-                _R, _cb, trace = opq.alternating_minimization(
+                _R, _cb, trace = quant.opq.alternating_minimization(
                     jax.random.PRNGKey(100 + r), Xr, cfg, iters=iters,
-                    rotation_solver=solver, inner_steps=5, lr=2e-3,
+                    rotation=solver, inner_steps=5, lr=2e-3,
                 )
                 finals[solver].append(float(np.asarray(trace)[-1]))
         stats = {
@@ -43,7 +43,7 @@ def run(num=4096, dim=64, D=8, K=32, iters=20, runs=5, verbose=True):
                 emit(f"fig2bc/frac{int(frac*100)}/{s}", 0.0,
                      f"mean={stats[s]['mean']:.4f};std={stats[s]['std']:.4f}")
     # paper claim: GCD-G std <= OPQ std (lower variance)
-    stable = all(out[f]["gcd_greedy"]["std"] <= out[f]["svd"]["std"] * 1.5
+    stable = all(out[f]["gcd_greedy"]["std"] <= out[f]["procrustes"]["std"] * 1.5
                  for f in out)
     if verbose:
         emit("fig2bc/check/gcd_more_stable", 0.0, str(stable))

@@ -55,7 +55,7 @@ def main():
     for solver in ("frozen", "gcd_greedy"):
         R, pqz, trace = opq.fit(
             jax.random.PRNGKey(3), h, cfg_pq, iters=15,
-            rotation_solver=solver, inner_steps=5, lr=2e-3)
+            rotation=solver, inner_steps=5, lr=2e-3)
         codes = pqz.encode(h @ R)
         tables = pqz.adc_tables(h @ R)
         scores = quant.adc_score_tables(tables, codes, use_kernel=False)

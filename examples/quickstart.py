@@ -24,12 +24,12 @@ def main():
 
     for solver, kw in [
         ("frozen", {}),
-        ("svd", {}),
+        ("procrustes", {}),
         ("gcd_greedy", dict(inner_steps=5, lr=2e-3)),
         ("gcd_steepest", dict(inner_steps=5, lr=2e-3)),
     ]:
         R, cb, trace = opq.alternating_minimization(
-            jax.random.PRNGKey(1), X, cfg, iters=25, rotation_solver=solver, **kw
+            jax.random.PRNGKey(1), X, cfg, iters=25, rotation=solver, **kw
         )
         tr = np.asarray(trace)
         ortho = float(givens.orthogonality_error(R))

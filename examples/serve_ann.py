@@ -38,7 +38,7 @@ def main():
     t0 = time.time()
     R, cb, trace = opq.alternating_minimization(
         jax.random.PRNGKey(2), corpus[:8192], PQConfig(D, K), iters=15,
-        rotation_solver="gcd_greedy", inner_steps=5, lr=2e-3)
+        rotation="gcd_greedy", inner_steps=5, lr=2e-3)
     print(f"rotation learned in {time.time()-t0:.1f}s "
           f"(distortion {float(trace[0]):.3f} → {float(trace[-1]):.3f})")
 

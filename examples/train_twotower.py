@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rotations
 from repro.core import index_layer as il
 from repro.data import synthetic
 from repro.models import recsys
@@ -57,8 +58,10 @@ def main():
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--items", type=int, default=390_000)
     ap.add_argument("--ckpt-dir", default="/tmp/twotower_ckpt")
-    ap.add_argument("--gcd-method", default="greedy",
-                    choices=["random", "greedy", "steepest", "frozen"])
+    ap.add_argument("--rotation", default="gcd_greedy",
+                    choices=[n for n in rotations.names()
+                             if n != "subspace_gcd"],
+                    help="rotation learner (repro.rotations registry spec)")
     args = ap.parse_args()
 
     cfg = build_cfg(args.items)
@@ -70,7 +73,7 @@ def main():
 
     ocfg = opt_lib.OptimizerConfig(
         lr=2e-3, total_steps=args.steps + args.warmup, warmup_steps=20,
-        gcd_method=args.gcd_method, gcd_lr=2e-3,
+        rotation=rotations.RotationConfig.from_spec(args.rotation, lr=2e-3),
     )
     params = recsys.twotower_init(jax.random.PRNGKey(0), cfg)
     state = ts.init_state(jax.random.PRNGKey(1), params, ocfg)
@@ -112,7 +115,7 @@ def main():
     ckpt.wait_pending()
     p_at_k = evaluate(state.params, cfg, log)
     print(f"\nfinal ADC retrieval p@50 = {p_at_k:.4f} "
-          f"(GCD method: {args.gcd_method})")
+          f"(rotation learner: {args.rotation})")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,19 @@
-"""Core: the paper's contribution — GCD rotation learning + trainable PQ index.
+"""Core: the paper's low-level math — Givens primitives + trainable PQ index.
 
 Modules:
   givens       Givens rotation math (directional derivs, commuting pair apply)
   matching     GCD-R / GCD-G / GCD-S pair selection (+ exact DP test oracle)
-  rotation     Trainable SO(n) rotation state & update (Algorithm 2)
-  cayley       Cayley-transform baseline
+  rotation     compatibility shim → repro.rotations (GCD learner, Algorithm 2)
+  cayley       compatibility shim → repro.rotations.cayley (guarded transforms)
   pq           compatibility shim → repro.quant (codebook/k-means substrate)
   opq          compatibility shim → repro.quant.opq (alternating min, Fig 2)
   index_layer  T(X) = φ(XR)Rᵀ trainable index layer (Fig 1), φ = quant.PQ
   kv_quant     PQ-compressed KV cache (per-head quant.PQ on LM attention)
 
-Quantization itself lives in ``repro.quant`` (Quantizer protocol, PQ/RQ/VQ,
-shared k-means); core keeps the rotation-learning math that is this paper's
-contribution.
+Rotation *learning* lives in ``repro.rotations`` (RotationLearner protocol,
+GCD/Cayley/Procrustes/frozen registry); quantization in ``repro.quant``
+(Quantizer protocol, PQ/RQ/VQ, shared k-means). Core keeps the primitive
+math both build on.
 """
 from repro.core import (  # noqa: F401
     cayley,

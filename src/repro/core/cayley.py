@@ -1,41 +1,24 @@
-"""Cayley-transform rotation baseline (paper §1.1, compared in §3).
+"""Compatibility shim — Cayley-transform math moved to ``repro.rotations.cayley``.
 
-R(A) = (I − A)(I + A)⁻¹ with A skew-symmetric, parameterized by the strict
-lower triangle of an (n, n) matrix. Differentiable end-to-end, but every
-evaluation costs an n×n linear solve that does not parallelize on
-GPU/TPU — the paper's (and our) motivation for GCD. Numerically unstable
-near rotations with −1 eigenvalues (noted in §1.1).
+The transforms now carry a numerical guard against the −1-eigenvalue
+instability the paper notes in §1.1 (``rotations.cayley.stable_solve``), and
+the trainable baseline is the ``cayley_sgd`` learner in the rotation
+registry (``rotations.make("cayley_sgd")``). See README.md for the
+migration table.
+
+Attribute access is lazy (PEP 562): ``repro.rotations`` imports
+``repro.core.givens``, so an eager re-export here would cycle.
 """
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
+_NAMES = ("cayley", "init", "inverse_cayley", "skew_from_params",
+          "stable_solve", "CayleySGD", "CayleyState")
 
 
-def skew_from_params(params: jax.Array) -> jax.Array:
-    """Antisymmetrize: A = tril(params, -1) − tril(params, -1)ᵀ."""
-    L = jnp.tril(params, -1)
-    return L - L.T
+def __getattr__(name):
+    if name in _NAMES:
+        from repro.rotations import cayley as _impl
+        return getattr(_impl, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def cayley(params: jax.Array) -> jax.Array:
-    """R = (I − A)(I + A)⁻¹ ∈ SO(n). Solved as (I + A)ᵀ x = (I − A)ᵀ row-wise."""
-    A = skew_from_params(params)
-    n = A.shape[0]
-    I = jnp.eye(n, dtype=A.dtype)
-    # solve (I + A) R = (I − A)  =>  R = (I + A)^{-1} (I − A); both orderings
-    # give an orthogonal matrix since (I−A) and (I+A)^{-1} commute.
-    return jnp.linalg.solve(I + A, I - A)
-
-
-def inverse_cayley(R: jax.Array) -> jax.Array:
-    """A with cayley(A) == R (valid when I + R is invertible): A = (I−R)(I+R)⁻¹."""
-    n = R.shape[0]
-    I = jnp.eye(n, dtype=R.dtype)
-    A = jnp.linalg.solve((I + R).T, (I - R).T).T
-    return jnp.tril(A, -1)  # params form
-
-
-def init(n: int, dtype=jnp.float32) -> jax.Array:
-    """Identity rotation: A = 0."""
-    return jnp.zeros((n, n), dtype=dtype)
+def __dir__():
+    return sorted(_NAMES)

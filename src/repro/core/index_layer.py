@@ -11,7 +11,8 @@ codebooks): the forward uses ``encode_st``, the loss term uses
 protocol every other quantizer consumer in the repo speaks.
 
 Parameters:
-  * ``rot``: RotationState — updated by GCD (never by the inner optimizer).
+  * ``R``: the rotation — updated by the configured ``repro.rotations``
+    learner (``OptimizerConfig.rotation``), never by the inner optimizer.
   * ``codebooks``: (D, K, sub) — trained by the distortion loss (plain SGD
     path) or by streaming EMA. Kept as a raw array leaf so the optimizer's
     name-based manifold routing and launch/cells ParamSpecs see a flat tree;
@@ -41,10 +42,11 @@ class IndexLayerConfig(NamedTuple):
 
 
 class IndexLayerParams(NamedTuple):
-    """R is a plain array so the whole tree is jax.grad-able; the GCD
-    accumulator state (step counter, preconditioners) lives in the optimizer
+    """R is a plain array so the whole tree is jax.grad-able; the rotation
+    learner's state (step counter, preconditioners) lives in the optimizer
     (training.optimizer treats any leaf named 'R'/'rot_*' as a manifold
-    parameter and applies Algorithm 2 instead of Adam)."""
+    parameter and routes it through ``OptimizerConfig.rotation``'s learner
+    instead of Adam)."""
 
     R: jax.Array
     codebooks: jax.Array

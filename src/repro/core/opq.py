@@ -1,13 +1,31 @@
 """Compatibility shim — OPQ alternating minimization moved to
-``repro.quant.opq`` (rotation-aware codebook fitting lives with the other
-quantizer fits; see README.md migration table).
+``repro.quant.opq``; the rotation solvers live in the ``repro.rotations``
+registry (see README.md migration table).
 
-New code should call ``repro.quant.opq.alternating_minimization`` (arrays) or
-``repro.quant.opq.fit`` (protocol idiom, returns (R, quant.PQ, trace)).
+New code should call ``repro.quant.opq.alternating_minimization`` with a
+``rotation=`` registry spec ("procrustes", "gcd_greedy", "cayley_sgd", ...)
+or ``repro.quant.opq.fit`` (protocol idiom, returns (R, quant.PQ, trace)).
+The wrappers below accept the pre-registry ``rotation_solver=`` keyword and
+its legacy names ("svd", "cayley") unchanged.
 """
-from repro.quant.opq import (  # noqa: F401
-    OPQState,
-    alternating_minimization,
-    opq,
-    procrustes_rotation,
-)
+from repro.quant.opq import OPQState, opq, procrustes_rotation  # noqa: F401
+from repro.quant import opq as _qopq
+
+
+def alternating_minimization(key, X, cfg, iters: int = 30,
+                             rotation_solver: str = "svd",
+                             inner_steps: int = 5, lr: float = 1e-4,
+                             kmeans_iters: int = 1):
+    """Legacy wrapper (old signature preserved, positional calls included):
+    ``rotation_solver`` → ``rotation``."""
+    return _qopq.alternating_minimization(
+        key, X, cfg, iters=iters, rotation=rotation_solver,
+        inner_steps=inner_steps, lr=lr, kmeans_iters=kmeans_iters)
+
+
+def fit(key, X, cfg, *, iters: int = 30, rotation_solver: str = "svd",
+        inner_steps: int = 5, lr: float = 1e-4, kmeans_iters: int = 1):
+    """Legacy keyword wrapper: ``rotation_solver`` → ``rotation``."""
+    return _qopq.fit(key, X, cfg, iters=iters, rotation=rotation_solver,
+                     inner_steps=inner_steps, lr=lr,
+                     kmeans_iters=kmeans_iters)

@@ -1,81 +1,66 @@
-"""Trainable SO(n) rotation via Givens coordinate descent (paper Algorithm 2).
+"""Compatibility shim — GCD rotation learning moved to ``repro.rotations``.
 
-``GCDRotation`` owns the rotation matrix R and performs projection-free
-manifold updates:
+New code should go through the learner registry:
 
-    G  = ∇_R L                      (ordinary backprop gradient)
-    A  = GᵀR − RᵀG                  (directional derivatives, Prop. 1)
-    (pi, pj) ← select n/2 disjoint pairs   (GCD-R / GCD-G / GCD-S)
-    θℓ = −λ · A[iℓ, jℓ] / √2
-    R  ← R · ∏ℓ R_{iℓ jℓ}(θℓ)       (commuting block update, O(n²))
+    learner = rotations.make("gcd", method="greedy", preconditioner="adam")
+    state   = learner.init(n)                     # or init_from(R)
+    state, delta = learner.update(state, G, lr, key)
 
-R stays exactly orthogonal at every step (up to fp rounding) — no SVD, no
-matrix exponential, no Cayley solve.
-
-The optional diagonal preconditioners (adagrad / adam over the (n, n)
-directional-derivative field) implement the paper's remark that GCD "can be
-easily integrated with standard neural network training algorithms, such as
-Adagrad and Adam".
+The functional API below (``init`` / ``update`` / ``gcd_step``) is preserved
+for existing callers; see README.md for the migration table. Imports of the
+rotations package are deferred (it imports ``repro.core.givens``, so eager
+module-level imports here would cycle).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import givens, matching
-
-METHODS = ("random", "greedy", "steepest", "overlap_greedy", "overlap_random")
+_FORWARDED = {"GCD": "gcd", "GCDState": "gcd", "RotationState": "gcd",
+              "METHODS": "gcd"}
 
 
-class RotationState(NamedTuple):
-    """State of the trainable rotation."""
-
-    R: jax.Array              # (n, n) current rotation, in SO(n)
-    step: jax.Array           # int32 step counter
-    accum: jax.Array          # (n, n) preconditioner 1st accumulator (adagrad/adam-m)
-    accum2: jax.Array         # (n, n) adam-v accumulator (unused for adagrad)
-
-
-def init(n: int, dtype=jnp.float32) -> RotationState:
-    return RotationState(
-        R=jnp.eye(n, dtype=dtype),
-        step=jnp.int32(0),
-        accum=jnp.zeros((n, n), dtype=jnp.float32),
-        accum2=jnp.zeros((n, n), dtype=jnp.float32),
-    )
+def __getattr__(name):
+    if name in _FORWARDED:
+        import importlib
+        mod = importlib.import_module(f"repro.rotations.{_FORWARDED[name]}")
+        return getattr(mod, "GCDState" if name == "RotationState" else name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def init_from(R: jax.Array) -> RotationState:
-    n = R.shape[0]
-    return RotationState(
-        R=R,
-        step=jnp.int32(0),
-        accum=jnp.zeros((n, n), dtype=jnp.float32),
-        accum2=jnp.zeros((n, n), dtype=jnp.float32),
-    )
+@functools.lru_cache(maxsize=None)
+def _learner(method: str, preconditioner: str, sweeps: int):
+    from repro.rotations.gcd import GCD
+    return GCD(method=method, preconditioner=preconditioner, sweeps=sweeps)
 
 
-def _precondition(state: RotationState, A: jax.Array, preconditioner: str,
-                  beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8):
-    """Optionally rescale the directional-derivative field elementwise."""
-    if preconditioner == "none":
-        return A, state.accum, state.accum2
-    t = state.step.astype(jnp.float32) + 1.0
-    if preconditioner == "adagrad":
-        acc = state.accum + jnp.square(A)
-        Ahat = A / (jnp.sqrt(acc) + eps)
-        return Ahat, acc, state.accum2
-    if preconditioner == "adam":
-        m = beta1 * state.accum + (1.0 - beta1) * A
-        v = beta2 * state.accum2 + (1.0 - beta2) * jnp.square(A)
-        mhat = m / (1.0 - beta1**t)
-        vhat = v / (1.0 - beta2**t)
-        Ahat = mhat / (jnp.sqrt(vhat) + eps)
-        return Ahat, m, v
-    raise ValueError(f"unknown preconditioner {preconditioner!r}")
+def init(n: int, dtype=None):
+    import jax.numpy as jnp
+    return _learner("greedy", "none", 16).init(n, dtype or jnp.float32)
+
+
+def init_from(R: jax.Array):
+    return _learner("greedy", "none", 16).init_from(R)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "preconditioner", "sweeps")
+)
+def update(
+    state,
+    G: jax.Array,
+    lr,
+    key: jax.Array,
+    *,
+    method: str = "greedy",
+    preconditioner: str = "none",
+    sweeps: int = 16,
+):
+    """One GCD step (old functional entry point; see rotations.GCD.update)."""
+    new_state, _delta = _learner(method, preconditioner, sweeps).update(
+        state, G, lr, key)
+    return new_state
 
 
 def gcd_step(
@@ -84,85 +69,27 @@ def gcd_step(
     accum: jax.Array,
     accum2: jax.Array,
     step: jax.Array,
-    lr: float | jax.Array,
+    lr,
     key: jax.Array,
     *,
     method: str = "greedy",
     preconditioner: str = "none",
     sweeps: int = 16,
 ):
-    """Functional core of Algorithm 2 — vmappable over stacked rotations
-    (e.g. the per-layer KV rotations (L, hd, hd)). Returns
-    (R_new, accum, accum2)."""
-    n = R.shape[0]
-    state = RotationState(R=R, step=step, accum=accum, accum2=accum2)
-    A = givens.directional_derivs(G.astype(jnp.float32), R.astype(jnp.float32))
-    Ahat, acc, acc2 = _precondition(state, A, preconditioner)
-
-    if method == "random":
-        pi, pj = matching.random_matching(key, n)
-    elif method == "greedy":
-        # exact-equivalent vectorized-rounds variant: ~12× faster at n=512
-        # than the one-edge-at-a-time scan (see matching.greedy_matching_fast)
-        pi, pj = matching.greedy_matching_fast(Ahat)
-    elif method == "steepest":
-        pi, pj = matching.steepest_matching(Ahat, sweeps=sweeps)
-    elif method == "overlap_greedy":
-        pi, pj = matching.overlapping_topk(Ahat)
-    elif method == "overlap_random":
-        pi, pj = matching.overlapping_random(key, n)
-    else:
-        raise ValueError(f"unknown GCD method {method!r}")
-
-    theta = -jnp.asarray(lr, jnp.float32) * Ahat[pi, pj] / givens.SQRT2
-    if method.startswith("overlap"):
-        R_new = apply_overlapping(R, pi, pj, theta)
-    else:
-        R_new = givens.apply_pair_rotations(R, pi, pj, theta.astype(R.dtype))
-    return R_new, acc, acc2
-
-
-@functools.partial(
-    jax.jit, static_argnames=("method", "preconditioner", "sweeps")
-)
-def update(
-    state: RotationState,
-    G: jax.Array,
-    lr: float | jax.Array,
-    key: jax.Array,
-    *,
-    method: str = "greedy",
-    preconditioner: str = "none",
-    sweeps: int = 16,
-) -> RotationState:
-    """One GCD step. ``G`` is the plain gradient ∇_R L (already psum'd in
-    data-parallel training). The matching is computed from |A| and the step
-    angle for pair ℓ is −lr · Â[iℓ, jℓ] / √2 (paper Algorithm 2, line 8)."""
-    R_new, acc, acc2 = gcd_step(
-        state.R, G, state.accum, state.accum2, state.step, lr, key,
-        method=method, preconditioner=preconditioner, sweeps=sweeps,
-    )
-    return RotationState(R=R_new, step=state.step + 1, accum=acc, accum2=acc2)
+    """Array-level GCD step (old optimizer hook). Returns (R, accum, accum2)."""
+    from repro.rotations.gcd import GCDState
+    state = GCDState(R=R, step=step, accum=accum, accum2=accum2)
+    new_state, _delta = _learner(method, preconditioner, sweeps).update(
+        state, G, lr, key)
+    return new_state.R, new_state.accum, new_state.accum2
 
 
 def apply_overlapping(R: jax.Array, pi: jax.Array, pj: jax.Array,
                       theta: jax.Array) -> jax.Array:
-    """Sequentially apply possibly-overlapping rotations (ablation only).
-
-    Overlapping pairs do not commute, so this is a serial fori_loop — the
-    paper's point is precisely that this is both slower and theoretically
-    unsound; we keep it for the §3.1 ablation benchmarks.
-    """
-
-    def body(l, Rc):
-        i, j, t = pi[l], pj[l], theta[l].astype(Rc.dtype)
-        ci, cj = Rc[:, i], Rc[:, j]
-        c, s = jnp.cos(t), jnp.sin(t)
-        Rc = Rc.at[:, i].set(c * ci + s * cj)
-        Rc = Rc.at[:, j].set(c * cj - s * ci)
-        return Rc
-
-    return jax.lax.fori_loop(0, pi.shape[0], body, R)
+    """Sequential overlapping-pair apply (now a GivensDelta behavior)."""
+    from repro.rotations import base
+    return base.GivensDelta(pi=pi, pj=pj, theta=theta,
+                            overlapping=True).apply(R)
 
 
 def rotation_grad(loss_fn, R: jax.Array) -> jax.Array:

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import givens, matching
+from repro import rotations
+from repro.core import givens
 from repro.index import ivf
 from repro.index.ivf import IVFPQIndex
 
@@ -125,32 +126,40 @@ def refresh_rotation(index: IVFPQIndex, pi: jax.Array, pj: jax.Array,
 
 
 @jax.jit
+def refresh_delta(index: IVFPQIndex,
+                  delta: rotations.GivensDelta) -> IVFPQIndex:
+    """``refresh_rotation`` for a learner-produced RotationDelta — the index
+    side of the trainer/index sync contract: feed the same delta that
+    ``RotationLearner.update`` returned and the served rotation matches the
+    trainer's ``materialize`` exactly. Only Givens deltas factor into
+    per-subspace codebook rotations; dense deltas (Cayley/Procrustes) cannot
+    be absorbed without a re-encode."""
+    if not isinstance(delta, rotations.GivensDelta):
+        raise TypeError(
+            f"refresh_delta needs a GivensDelta (got {type(delta).__name__}):"
+            " dense Cayley/Procrustes deltas do not factor into per-subspace"
+            " codebook rotations — re-encode (ivf.build) instead")
+    if delta.overlapping:
+        raise ValueError("refresh requires a disjoint (commuting) delta")
+    return refresh_rotation(index, delta.pi, delta.pj, delta.theta)
+
+
+@jax.jit
 def subspace_gcd_step(index: IVFPQIndex, G: jax.Array, lr: float | jax.Array):
-    """Serving-aware GCD step: greedy matching over the directional
-    derivatives with cross-subspace entries masked to 0.
+    """Serving-aware GCD step via the ``subspace_gcd`` rotation learner
+    (``repro.rotations.SubspaceGCD`` — the matching is restricted to
+    within-subspace planes, so the delta is block-diagonal over the PQ
+    subspaces and the refresh absorbs it EXACTLY; codes provably unchanged).
 
-    Masked entries carry zero weight, so greedy completes the matching with
-    them only after all useful within-subspace pairs — and their step angle
-    θ = −λ·0/√2 is exactly 0, i.e. an identity rotation. The resulting Δ is
-    block-diagonal over the PQ subspaces and ``refresh_rotation`` absorbs it
-    EXACTLY (codes provably unchanged). This restricts coordinate descent to
-    the subgroup SO(sub)^D — strictly less expressive per step than a full
-    matching, so trainers typically interleave: cheap exact-refresh subspace
-    steps between queries, an occasional full step + ~1% approximate
-    refresh (or rebuild) when the descent stalls.
-
-    Returns (refreshed index, (pi, pj, theta)) — apply the same triple to
-    the trainer's rotation state to stay in sync.
+    Returns (refreshed index, (pi, pj, theta)) — apply the same triple (or
+    the learner's own delta) to the trainer's rotation state to stay in
+    sync.
     """
-    sub = index.quantizer.sub
-    A = givens.directional_derivs(
-        G.astype(jnp.float32), index.R.astype(jnp.float32)
-    )
-    d_idx = jnp.arange(index.dim) // sub
-    A_masked = jnp.where(d_idx[:, None] == d_idx[None, :], A, 0.0)
-    pi, pj = matching.greedy_matching_fast(A_masked)
-    theta = -jnp.asarray(lr, jnp.float32) * A_masked[pi, pj] / givens.SQRT2
-    return refresh_rotation(index, pi, pj, theta), (pi, pj, theta)
+    learner = rotations.make("subspace_gcd", sub=index.quantizer.sub)
+    state = learner.init_from(index.R.astype(jnp.float32))
+    _state, delta = learner.update(
+        state, G, lr, jax.random.PRNGKey(0))  # greedy matching: key unused
+    return refresh_delta(index, delta), (delta.pi, delta.pj, delta.theta)
 
 
 def refresh_mismatch(refreshed: IVFPQIndex, X: jax.Array) -> jax.Array:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import rotations
 from repro.configs import base as cbase
 from repro.configs import get as get_arch
 from repro.models import gnn, param as param_lib, recsys
@@ -90,14 +91,11 @@ def abstract_opt_state(aparams, ocfg: opt_lib.OptimizerConfig):
 
     mu = jax.tree.map(mu_leaf, aparams)
     nu = jax.tree.map(nu_leaf, aparams)
-
-    def rot_leaf(path, a):
-        if opt_lib.is_manifold_path(path):
-            return SDS(a.shape, jnp.float32)
-        return SDS((), jnp.float32)
-
-    ra = jax.tree_util.tree_map_with_path(rot_leaf, aparams)
-    return opt_lib.OptState(mu=mu, nu=nu, rot_acc=ra, rot_acc2=ra,
+    # learner states for the manifold leaves, shape-inferred without
+    # allocating (init_rot_states is pure shape arithmetic under eval_shape)
+    rot = jax.eval_shape(
+        lambda ap: opt_lib.init_rot_states(ap, ocfg), aparams)
+    return opt_lib.OptState(mu=mu, nu=nu, rot=rot,
                             step=SDS((), jnp.int32))
 
 
@@ -126,12 +124,11 @@ def opt_shardings(spec_tree, rules, mesh, aparams, ocfg):
         ps = params_shardings(spec_tree, rules, mesh)
         mu = nu = ps
 
-    def rot_leaf(path, s):
-        return _repl(mesh)
-
-    ra = jax.tree_util.tree_map_with_path(rot_leaf, aparams)
-    return opt_lib.OptState(mu=mu, nu=nu, rot_acc=ra, rot_acc2=ra,
-                            step=_repl(mesh))
+    # rotation-learner states are tiny (n×n) — replicate every leaf
+    abstract_rot = jax.eval_shape(
+        lambda ap: opt_lib.init_rot_states(ap, ocfg), aparams)
+    rot = jax.tree.map(lambda _: _repl(mesh), abstract_rot)
+    return opt_lib.OptState(mu=mu, nu=nu, rot=rot, step=_repl(mesh))
 
 
 def abstract_train_state(spec_tree, param_dtype, ocfg):
@@ -178,7 +175,8 @@ def _opt_cfg_for(cfg) -> opt_lib.OptimizerConfig:
         compute_dtype=jnp.bfloat16 if big else jnp.float32,
         accum_steps=accum,
         accum_dtype=jnp.bfloat16 if big else jnp.float32,
-        gcd_method="greedy", gcd_lr=1e-3,
+        rotation=rotations.RotationConfig(learner="gcd", method="greedy",
+                                          lr=1e-3),
     )
 
 

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, rotations
 from repro.data import pipeline as pipe_lib
 from repro.data import synthetic
 from repro.launch import mesh as mesh_lib
@@ -118,7 +118,7 @@ def init_model(key, cfg, family):
 def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
           resume: bool = True, full: bool = False, seed: int = 0,
           ckpt_every: int = 50, watchdog_factor: float = 5.0,
-          gcd_method: str = "greedy", log_every: int = 10,
+          rotation: str = "gcd_greedy", log_every: int = 10,
           stop_after: int | None = None):
     """``stop_after``: checkpoint and exit after that many steps — simulates
     a crash for the resume tests (the schedule still targets ``steps``, so a
@@ -130,7 +130,7 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
 
     ocfg = opt_lib.OptimizerConfig(
         lr=1e-3, total_steps=steps, warmup_steps=min(50, steps // 10 + 1),
-        gcd_method=gcd_method,
+        rotation=rotations.RotationConfig.from_spec(rotation),
     )
     key = jax.random.PRNGKey(seed)
     params = init_model(key, cfg, arch.family)
@@ -196,12 +196,13 @@ def main():
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="use the full published config (TPU fleets only)")
-    ap.add_argument("--gcd-method", default="greedy",
-                    choices=["random", "greedy", "steepest", "frozen"])
+    ap.add_argument("--rotation", default="gcd_greedy",
+                    choices=[n for n in rotations.names()
+                             if n != "subspace_gcd"])
     args = ap.parse_args()
     _, hist = train(args.arch, args.steps, args.batch, args.ckpt_dir,
                     resume=not args.no_resume, full=args.full,
-                    gcd_method=args.gcd_method)
+                    rotation=args.rotation)
     print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
 
 

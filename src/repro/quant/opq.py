@@ -1,19 +1,20 @@
 """OPQ — Optimized Product Quantization (Ge et al. 2013) and the paper's
-fixed-embedding experiment harness (§3.1 / Fig 2), moved here from core/opq.py
-so rotation-aware codebook fitting lives with the other quantizer fits.
+fixed-embedding experiment harness (§3.1 / Fig 2).
 
 The classic OPQ loop alternates
   (a) k-means on the rotated data XR   → codebooks, codes
-  (b) Orthogonal Procrustes solve      → R = UVᵀ from SVD(Xᵀ·decode(codes))
+  (b) a rotation update toward argmin distortion
 
-The paper swaps step (b) for a few Givens coordinate-descent iterations
-(GCD-R/G/S) or Cayley-SGD steps. ``alternating_minimization`` implements all
-variants behind one ``rotation_solver`` switch so Fig 2a is a single sweep.
+Step (b) is now any ``repro.rotations`` learner, selected by registry spec:
+the classic SVD/Procrustes closed-form solve (learners exposing ``solve``),
+gradient learners stepped ``inner_steps`` times per outer iteration (the
+GCD family, Cayley-SGD), or the frozen control. ``alternating_minimization``
+is therefore one sweepable harness for the whole Fig 2 comparison, and
 ``fit`` wraps it into the protocol idiom: (R, quant.PQ, trace).
 
-Rotation-solver machinery (core.rotation / core.cayley) is imported inside
-the functions: repro.core's pq/opq modules are compatibility shims onto this
-package, so module-level imports would cycle.
+Rotation-learner machinery is imported inside the functions: repro.core's
+pq/opq modules are compatibility shims onto this package, so module-level
+imports would cycle.
 """
 from __future__ import annotations
 
@@ -30,17 +31,14 @@ from repro.quant.pq import PQ
 
 
 def procrustes_rotation(X: jax.Array, Y: jax.Array) -> jax.Array:
-    """argmin_{R ∈ O(n)} ‖XR − Y‖_F = UVᵀ with XᵀY = USVᵀ (Schönemann 1966)."""
-    M = X.T @ Y
-    U, _, Vt = jnp.linalg.svd(M, full_matrices=False)
-    return U @ Vt
+    """argmin_{R ∈ O(n)} ‖XR − Y‖_F = UVᵀ (re-exported convenience)."""
+    from repro.rotations import procrustes as proc
+    return proc.procrustes_rotation(X, Y)
 
 
 class OPQState(NamedTuple):
-    R: jax.Array
+    rot: Any                           # rotation-learner state (R inside)
     codebooks: jax.Array
-    rot_state: Any                     # rotation.RotationState (GCD solvers)
-    cayley_params: jax.Array           # used by Cayley solver
     key: jax.Array
 
 
@@ -55,102 +53,76 @@ def _distortion_grad_wrt_R(X, R, codebooks):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "iters", "rotation_solver", "inner_steps", "kmeans_iters"),
+    static_argnames=("cfg", "iters", "rotation", "inner_steps", "kmeans_iters"),
 )
 def alternating_minimization(
     key: jax.Array,
     X: jax.Array,
     cfg: PQConfig,
     iters: int = 30,
-    rotation_solver: str = "svd",  # svd | gcd_random | gcd_greedy | gcd_steepest
-    #                                | gcd_overlap_greedy | gcd_overlap_random
-    #                                | cayley | frozen
+    rotation: str = "procrustes",  # any repro.rotations registry spec
     inner_steps: int = 5,
     lr: float = 1e-4,
     kmeans_iters: int = 1,
 ):
     """Fixed-embedding rotation learning (paper §3.1). Returns
     (final R, codebooks, distortion trace of length ``iters``)."""
-    from repro.core import cayley as cayley_mod
-    from repro.core import rotation
+    from repro import rotations
+
+    learner = rotations.make(rotation)
+    closed_form = hasattr(learner, "solve")
+    frozen = isinstance(learner, rotations.Frozen)
 
     n = X.shape[-1]
     k0, k1 = jax.random.split(key)
     cb0, _ = km.kmeans(k0, X @ jnp.eye(n, dtype=X.dtype), cfg, iters=kmeans_iters)
-    state = OPQState(
-        R=jnp.eye(n, dtype=X.dtype),
-        codebooks=cb0,
-        rot_state=rotation.init(n, dtype=X.dtype),
-        cayley_params=cayley_mod.init(n, dtype=X.dtype),
-        key=k1,
-    )
-
-    gcd_method = {
-        "gcd_random": "random",
-        "gcd_greedy": "greedy",
-        "gcd_steepest": "steepest",
-        "gcd_overlap_greedy": "overlap_greedy",
-        "gcd_overlap_random": "overlap_random",
-    }.get(rotation_solver)
+    state = OPQState(rot=learner.init(n, dtype=X.dtype), codebooks=cb0, key=k1)
 
     def body(state: OPQState, _):
         # (a) k-means refresh of codebooks on rotated data
-        XR = X @ state.R
+        R = learner.materialize(state.rot)
+        XR = X @ R
         codebooks = state.codebooks
         for _i in range(kmeans_iters):
             codebooks, _codes = km.kmeans_update(XR, codebooks)
 
-        # (b) rotation update
+        # (b) rotation update through the learner
         key, sub = jax.random.split(state.key)
-        R, rot_state, cay = state.R, state.rot_state, state.cayley_params
-        if rotation_solver == "svd":
+        rot = state.rot
+        if frozen:
+            pass
+        elif closed_form:
             codes = cb.assign(X @ R, codebooks)
             target = cb.decode(codes, codebooks)
-            R = procrustes_rotation(X, target)
-        elif rotation_solver == "frozen":
-            pass
-        elif gcd_method is not None:
-            rot_state = rot_state._replace(R=R)
+            rot, _delta = learner.solve(rot, X, target)
+        else:
             for _i in range(inner_steps):
                 sub, sk = jax.random.split(sub)
-                G = _distortion_grad_wrt_R(X, rot_state.R, codebooks)
-                rot_state = rotation.update(
-                    rot_state, G, lr, sk, method=gcd_method
-                )
-            R = rot_state.R
-        elif rotation_solver == "cayley":
-            def loss(p):
-                return cb.distortion(X @ cayley_mod.cayley(p), codebooks)
+                G = _distortion_grad_wrt_R(
+                    X, learner.materialize(rot), codebooks)
+                rot, _delta = learner.update(rot, G, lr, sk)
 
-            for _i in range(inner_steps):
-                g = jax.grad(loss)(cay)
-                cay = cay - lr * g
-            R = cayley_mod.cayley(cay)
-        else:
-            raise ValueError(f"unknown rotation_solver {rotation_solver!r}")
-
-        dist = cb.distortion(X @ R, codebooks)
-        new_state = OPQState(R=R, codebooks=codebooks, rot_state=rot_state,
-                             cayley_params=cay, key=key)
-        return new_state, dist
+        dist = cb.distortion(X @ learner.materialize(rot), codebooks)
+        return OPQState(rot=rot, codebooks=codebooks, key=key), dist
 
     state, trace = jax.lax.scan(body, state, None, length=iters)
-    return state.R, state.codebooks, trace
+    return learner.materialize(state.rot), state.codebooks, trace
 
 
 def opq(key, X, cfg: PQConfig, iters: int = 30, kmeans_iters: int = 1):
-    """Classic OPQ (SVD rotation solver)."""
+    """Classic OPQ (SVD/Procrustes rotation solver)."""
     return alternating_minimization(
-        key, X, cfg, iters=iters, rotation_solver="svd", kmeans_iters=kmeans_iters
+        key, X, cfg, iters=iters, rotation="procrustes",
+        kmeans_iters=kmeans_iters
     )
 
 
-def fit(key, X, cfg: PQConfig, *, iters: int = 30, rotation_solver: str = "svd",
+def fit(key, X, cfg: PQConfig, *, iters: int = 30, rotation: str = "procrustes",
         inner_steps: int = 5, lr: float = 1e-4,
         kmeans_iters: int = 1) -> tuple[jax.Array, PQ, jax.Array]:
     """Protocol-idiom entry point: returns (R, quant.PQ, distortion trace)."""
     R, codebooks, trace = alternating_minimization(
-        key, X, cfg, iters=iters, rotation_solver=rotation_solver,
+        key, X, cfg, iters=iters, rotation=rotation,
         inner_steps=inner_steps, lr=lr, kmeans_iters=kmeans_iters,
     )
     return R, PQ(codebooks), trace

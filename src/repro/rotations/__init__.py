@@ -1,0 +1,41 @@
+"""repro.rotations — the unified rotation-learner subsystem.
+
+The paper's central claim is a *comparison of rotation-learning algorithms*
+(GCD variants vs. Cayley vs. SVD/Procrustes); this package makes every
+algorithm a first-class, swappable citizen behind one optax-style protocol
+(see ``base``) and one string registry (see ``registry``):
+
+  base        RotationLearner protocol, GivensDelta / DenseDelta pytrees,
+              the shared ``apply(X, delta)``
+  gcd         GCD (Algorithm 2: random/greedy/steepest + overlap ablations),
+              SubspaceGCD (serving-aware, index-exact deltas), Frozen
+  cayley      Cayley transform math (with the −1-eigenvalue guard) and the
+              CayleySGD retraction learner
+  procrustes  SVD learner: projected SGD ``update`` + closed-form ``solve``
+  registry    ``make`` / ``names`` / ``RotationConfig`` / ``from_config``
+
+Consumers: ``training.optimizer`` routes every manifold leaf through the
+configured learner (``OptimizerConfig.rotation``), ``quant.opq`` sweeps
+learners in the alternating minimization, ``index.maintain`` consumes
+GivensDeltas to refresh a live IVF index, and the fig2a/fig2bc/table1/fig4
+benchmarks sweep ``names()``. ``core.rotation`` and ``core.cayley`` remain
+as compatibility shims — see README.md for the migration table.
+"""
+from repro.rotations import base, cayley, gcd, procrustes, registry  # noqa: F401
+from repro.rotations.base import (  # noqa: F401
+    DenseDelta,
+    GivensDelta,
+    RotationDelta,
+    RotationLearner,
+    apply,
+    identity_delta,
+)
+from repro.rotations.cayley import CayleySGD  # noqa: F401
+from repro.rotations.gcd import GCD, GCDState, Frozen, SubspaceGCD  # noqa: F401
+from repro.rotations.procrustes import Procrustes  # noqa: F401
+from repro.rotations.registry import (  # noqa: F401
+    RotationConfig,
+    from_config,
+    make,
+    names,
+)

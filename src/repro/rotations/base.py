@@ -1,0 +1,166 @@
+"""RotationLearner protocol + RotationDelta pytrees (the `repro.rotations` core).
+
+Every rotation-learning algorithm in the repo — the paper's Givens coordinate
+descent variants, the Cayley-SGD baseline, SVD/Procrustes, and the frozen-R
+control — implements one optax-style protocol:
+
+    learner = rotations.make("gcd", method="greedy")
+    state   = learner.init(n)                       # or init_from(R)
+    state, delta = learner.update(state, grad, lr, key)
+    R       = learner.materialize(state)            # current rotation
+
+``update`` consumes the plain backprop gradient ``grad = ∇_R L`` and returns
+both the new state and a **RotationDelta**: a pytree describing the group
+element Δ with ``R_new = R_old · Δ``. Two concrete deltas exist:
+
+  * ``GivensDelta(pi, pj, theta)`` — a product of Givens plane rotations
+    ∏ℓ R_{pi[ℓ],pj[ℓ]}(θℓ). Disjoint pairs commute (the GCD default);
+    ``overlapping=True`` marks the paper's §3.1 non-commuting ablations,
+    which ``apply`` composes sequentially.
+  * ``DenseDelta(dR)`` — a dense factor (Cayley retraction, Procrustes).
+
+The shared ``apply(X, delta)`` right-multiplies any (..., n) array by Δ, so
+the trainer and a live IVF index can consume the *same* delta and stay
+provably in sync: ``apply(R_old, delta) == materialize(new_state)`` is a
+protocol invariant (checked for every registered learner in
+tests/test_rotations.py), and ``index.maintain.refresh_delta`` absorbs a
+GivensDelta into a serving index without re-encoding the corpus.
+
+All learners are frozen dataclasses (hashable → usable as jit static
+arguments) and all states/deltas are pytrees (vmappable over stacked
+per-layer rotations (L, n, n)). Learners expose ``reorthonormalize_every``:
+every that-many updates the state's R is re-projected onto SO(n)
+(``givens.project_to_so_n`` in f32), bounding fp drift on long bf16 runs;
+0 disables the guard (GCD needs none in f32 — that is the paper's point).
+CAVEAT: on a projection step the state absorbs a correction the returned
+delta does not carry — ``materialize(new_state)`` is then the *projection*
+of ``apply(R_old, delta)``. A consumer syncing a live index by deltas must
+keep the guard off (the default, and the right call for f32 serving loops)
+or re-sync the index whenever ``state.step % every == 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import givens
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GivensDelta:
+    """Δ = ∏ℓ R_{pi[ℓ],pj[ℓ]}(theta[ℓ]) — the GCD-family delta.
+
+    ``pi/pj/theta`` are (p,) arrays (or (L, p) under vmap). ``overlapping``
+    is static metadata: False ⇒ pairs are disjoint and commute (O(m·p)
+    column mixing); True ⇒ the §3.1 ablation, applied sequentially.
+    """
+
+    pi: jax.Array
+    pj: jax.Array
+    theta: jax.Array
+    overlapping: bool = dataclasses.field(
+        default=False, metadata={"static": True})
+
+    def apply(self, X: jax.Array) -> jax.Array:
+        if self.overlapping:
+            return _apply_overlapping(X, self.pi, self.pj, self.theta)
+        return givens.apply_pair_rotations(X, self.pi, self.pj, self.theta)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseDelta:
+    """Δ as a dense (n, n) factor — Cayley / Procrustes learners."""
+
+    dR: jax.Array
+
+    def apply(self, X: jax.Array) -> jax.Array:
+        return X @ self.dR.astype(X.dtype)
+
+
+RotationDelta = GivensDelta | DenseDelta
+
+
+def apply(X: jax.Array, delta: RotationDelta) -> jax.Array:
+    """Right-multiply X (..., n) by the delta's group element Δ."""
+    return delta.apply(X)
+
+
+def identity_delta(dtype=jnp.float32) -> GivensDelta:
+    """The empty Givens product — Δ = I at O(1) cost (frozen learner)."""
+    z = jnp.zeros((0,), jnp.int32)
+    return GivensDelta(pi=z, pj=z, theta=jnp.zeros((0,), dtype))
+
+
+def _apply_overlapping(X: jax.Array, pi: jax.Array, pj: jax.Array,
+                       theta: jax.Array) -> jax.Array:
+    """Sequentially compose possibly-overlapping plane rotations.
+
+    Overlapping pairs do not commute, so this is a serial fori_loop — the
+    paper's point is precisely that this is both slower and theoretically
+    unsound; kept for the §3.1 ablation benchmarks.
+    """
+
+    def body(l, Xc):
+        i, j, t = pi[l], pj[l], theta[l].astype(Xc.dtype)
+        ci, cj = Xc[..., i], Xc[..., j]
+        c, s = jnp.cos(t), jnp.sin(t)
+        Xc = Xc.at[..., i].set(c * ci + s * cj)
+        Xc = Xc.at[..., j].set(c * cj - s * ci)
+        return Xc
+
+    return jax.lax.fori_loop(0, pi.shape[0], body, X)
+
+
+@runtime_checkable
+class RotationLearner(Protocol):
+    """The optax-style learner protocol (see module docstring).
+
+    Implementations are frozen dataclasses; hyper-parameters (pair-selection
+    method, preconditioner, ``reorthonormalize_every``) live on the learner,
+    per-rotation quantities (R, step counter, accumulators) in the state.
+    """
+
+    def init(self, n: int, dtype=jnp.float32) -> Any:
+        """Fresh state at R = I_n."""
+        ...
+
+    def init_from(self, R: jax.Array) -> Any:
+        """Fresh state at an existing rotation (e.g. an OPQ warm start)."""
+        ...
+
+    def with_rotation(self, state: Any, R: jax.Array) -> Any:
+        """State with its rotation replaced (re-sync from a param leaf)."""
+        ...
+
+    def update(self, state: Any, grad: jax.Array, lr: float | jax.Array,
+               key: jax.Array) -> tuple[Any, RotationDelta]:
+        """One manifold step from ``grad = ∇_R L``; returns (state, Δ)."""
+        ...
+
+    def materialize(self, state: Any) -> jax.Array:
+        """The current rotation matrix R ∈ SO(n)."""
+        ...
+
+
+def maybe_reorthonormalize(R: jax.Array, step: jax.Array,
+                           every: int) -> jax.Array:
+    """Project R back onto SO(n) when ``step`` hits a multiple of ``every``.
+
+    ``step`` is the post-update counter; ``every == 0`` disables the guard.
+    The SVD projection runs in f32 regardless of R's dtype (bf16 SVD is both
+    unsupported and pointless) and casts back. On steps where the projection
+    fires, the learner's returned delta does NOT include the correction —
+    see the module-docstring caveat on delta-based index sync.
+    """
+    if not every:
+        return R
+
+    def project(r):
+        return givens.project_to_so_n(r.astype(jnp.float32)).astype(r.dtype)
+
+    return jax.lax.cond(step % every == 0, project, lambda r: r, R)

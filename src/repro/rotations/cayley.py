@@ -1,0 +1,148 @@
+"""Cayley-transform math + the Cayley-SGD RotationLearner (paper §1.1, §3).
+
+R(A) = (I − A)(I + A)⁻¹ with A skew-symmetric, parameterized by the strict
+lower triangle of an (n, n) matrix. Differentiable end-to-end, but every
+evaluation costs an n×n linear solve that does not parallelize on GPU/TPU —
+the paper's (and our) motivation for GCD.
+
+Numerical guard (the instability §1.1 notes): a rotation with an eigenvalue
+at −1 makes I + R exactly singular, so ``inverse_cayley`` explodes as
+eigenvalues approach −1 (a half-turn in any plane). Its solve routes through
+``stable_solve``: the direct LU solution is kept when it is finite and
+backward-consistent, otherwise the Tikhonov-regularized normal equations
+take over — the minimum-norm-flavored solution stays finite at the
+singularity instead of returning inf/nan (regression test in
+tests/test_rotations.py). The forward ``cayley`` needs no guard — I + A is
+provably nonsingular for skew A (its eigenvalues are 1 + iλ) — and uses a
+plain solve so the per-step cost benchmarked in Fig 4 stays honest.
+
+``CayleySGD`` is the trainable baseline: one update pulls the rotation
+gradient back through the transform at A = 0 (an exact jax.vjp — this linear
+solve per step is the cost the paper's Fig 4 measures) and retracts
+R ← R · cayley(−lr·∇A). Re-centering at A = 0 each step keeps the transform
+far from the −1-eigenvalue instability and makes the delta an explicit dense
+factor the serving index can consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rotations import base
+
+
+def skew_from_params(params: jax.Array) -> jax.Array:
+    """Antisymmetrize: A = tril(params, -1) − tril(params, -1)ᵀ."""
+    L = jnp.tril(params, -1)
+    return L - L.T
+
+
+def stable_solve(M: jax.Array, B: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Solve M X = B, surviving (near-)singular M.
+
+    Returns the direct LU solution when it is finite and backward-consistent
+    (‖M·X − B‖ small relative to ‖B‖); otherwise the Tikhonov-regularized
+    normal equations  (MᵀM + (eps·‖M‖)²·I) X = MᵀB,  which are always
+    nonsingular and degrade gracefully toward the least-squares solution at
+    the exact singularity. Both candidates are jit-computed unconditionally
+    (n is small on every call path); the selection is a jnp.where, so the
+    function stays traceable and differentiable on the well-posed branch.
+    """
+    n = M.shape[-1]
+    X = jnp.linalg.solve(M, B)
+    scale = jnp.maximum(jnp.linalg.norm(M), 1.0)
+    reg = jnp.linalg.solve(
+        M.T @ M + (eps * scale) ** 2 * jnp.eye(n, dtype=M.dtype), M.T @ B)
+    resid = jnp.linalg.norm(M @ X - B)
+    ok = jnp.all(jnp.isfinite(X)) & (resid <= 1e-3 * jnp.maximum(
+        jnp.linalg.norm(B), 1.0))
+    return jnp.where(ok, X, reg)
+
+
+def cayley(params: jax.Array) -> jax.Array:
+    """R = (I − A)(I + A)⁻¹ ∈ SO(n), A = skew(params).
+
+    Plain LU solve: I + A is provably nonsingular for skew A (eigenvalues
+    1 + iλ), so the forward transform never hits the −1-eigenvalue
+    singularity — the guarded ``stable_solve`` is reserved for
+    ``inverse_cayley``, keeping the per-step cost this module's Fig 4
+    comparison measures honest.
+    """
+    A = skew_from_params(params)
+    n = A.shape[-1]
+    I = jnp.eye(n, dtype=A.dtype)
+    # solve (I + A) R = (I − A)  =>  R = (I + A)^{-1} (I − A); both orderings
+    # give an orthogonal matrix since (I−A) and (I+A)^{-1} commute.
+    return jnp.linalg.solve(I + A, I - A)
+
+
+def inverse_cayley(R: jax.Array) -> jax.Array:
+    """A with cayley(A) == R: A = (I−R)(I+R)⁻¹, returned in params form.
+
+    I + R is singular exactly when R has a −1 eigenvalue; ``stable_solve``
+    keeps the result finite there (the entries for the offending plane
+    saturate instead of overflowing — see module docstring).
+    """
+    n = R.shape[-1]
+    I = jnp.eye(n, dtype=R.dtype)
+    A = stable_solve((I + R).T, (I - R).T).T
+    return jnp.tril(A, -1)  # params form
+
+
+def init(n: int, dtype=jnp.float32) -> jax.Array:
+    """Identity rotation: A = 0 (the Cayley params array)."""
+    return jnp.zeros((n, n), dtype=dtype)
+
+
+class CayleyState(NamedTuple):
+    R: jax.Array              # (n, n) current rotation
+    step: jax.Array           # int32 step counter
+
+
+@dataclasses.dataclass(frozen=True)
+class CayleySGD:
+    """Riemannian SGD with the Cayley retraction, re-centered every step.
+
+    update:  gA = ∇_A L(R·cayley(A))|_{A=0}   (exact vjp through the solve)
+             Δ  = cayley(−lr · gA)            (∈ SO(n) by construction)
+             R  ← R · Δ
+
+    First-order equivalent to training an accumulated Cayley parameter by
+    SGD (the classic baseline), but every step pays the transform's linear
+    solve — the Fig 4 runtime gap versus GCD is exactly this solve.
+    """
+
+    reorthonormalize_every: int = 0
+
+    def init(self, n: int, dtype=jnp.float32) -> CayleyState:
+        return self.init_from(jnp.eye(n, dtype=dtype))
+
+    def init_from(self, R: jax.Array) -> CayleyState:
+        return CayleyState(R=R, step=jnp.int32(0))
+
+    def with_rotation(self, state: CayleyState, R: jax.Array) -> CayleyState:
+        return state._replace(R=R)
+
+    def materialize(self, state: CayleyState) -> jax.Array:
+        return state.R
+
+    def update(self, state: CayleyState, grad: jax.Array,
+               lr: float | jax.Array, key: jax.Array):
+        del key  # deterministic
+        R32 = state.R.astype(jnp.float32)
+
+        def rotated(p):
+            return R32 @ cayley(p)
+
+        zero = jnp.zeros_like(R32)
+        _, vjp = jax.vjp(rotated, zero)
+        (gA,) = vjp(grad.astype(jnp.float32))
+        dR = cayley(-jnp.asarray(lr, jnp.float32) * gA)
+        delta = base.DenseDelta(dR=dR)
+        step = state.step + 1
+        R_new = base.maybe_reorthonormalize(
+            delta.apply(state.R), step, self.reorthonormalize_every)
+        return CayleyState(R=R_new, step=step), delta

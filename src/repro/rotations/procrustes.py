@@ -1,0 +1,74 @@
+"""SVD/Procrustes RotationLearner — the classic OPQ rotation solver.
+
+Two entry points share one state:
+
+  * ``update(state, grad, lr, key)`` — projected Riemannian SGD: take the
+    Euclidean step R − lr·G, then SVD-project back onto SO(n)
+    (``givens.project_to_so_n``). This is what "use SVD inside an SGD loop"
+    costs — a full SVD per step, the paper's Fig 4 comparison point — and it
+    makes Procrustes a first-class citizen of the learner conformance suite.
+  * ``solve(state, X, target)`` — the closed-form Procrustes solution
+    argmin_{R ∈ O(n)} ‖XR − target‖_F = UVᵀ (Schönemann 1966), used by OPQ's
+    alternating minimization where the data matrix is available. Note O(n),
+    not SO(n): OPQ permits reflections, matching classic behavior.
+
+Both return a DenseDelta Δ = R_oldᵀ·R_new so downstream consumers see the
+same delta algebra as every other learner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import givens
+from repro.rotations import base
+
+
+def procrustes_rotation(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """argmin_{R ∈ O(n)} ‖XR − Y‖_F = UVᵀ with XᵀY = USVᵀ (Schönemann 1966)."""
+    M = X.T @ Y
+    U, _, Vt = jnp.linalg.svd(M, full_matrices=False)
+    return U @ Vt
+
+
+class ProcrustesState(NamedTuple):
+    R: jax.Array
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Procrustes:
+    reorthonormalize_every: int = 0  # already projected every step; unused
+
+    def init(self, n: int, dtype=jnp.float32) -> ProcrustesState:
+        return self.init_from(jnp.eye(n, dtype=dtype))
+
+    def init_from(self, R: jax.Array) -> ProcrustesState:
+        return ProcrustesState(R=R, step=jnp.int32(0))
+
+    def with_rotation(self, state: ProcrustesState,
+                      R: jax.Array) -> ProcrustesState:
+        return state._replace(R=R)
+
+    def materialize(self, state: ProcrustesState) -> jax.Array:
+        return state.R
+
+    def _step_to(self, state: ProcrustesState, R_new: jax.Array):
+        delta = base.DenseDelta(
+            dR=state.R.astype(jnp.float32).T @ R_new.astype(jnp.float32))
+        return (ProcrustesState(R=R_new.astype(state.R.dtype),
+                                step=state.step + 1), delta)
+
+    def update(self, state: ProcrustesState, grad: jax.Array,
+               lr: float | jax.Array, key: jax.Array):
+        del key  # deterministic
+        R32 = state.R.astype(jnp.float32)
+        stepped = R32 - jnp.asarray(lr, jnp.float32) * grad.astype(jnp.float32)
+        return self._step_to(state, givens.project_to_so_n(stepped))
+
+    def solve(self, state: ProcrustesState, X: jax.Array, target: jax.Array):
+        """Closed-form inner solve for OPQ: R ← argmin ‖XR − target‖_F."""
+        return self._step_to(state, procrustes_rotation(X, target))

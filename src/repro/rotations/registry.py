@@ -1,0 +1,107 @@
+"""The rotation-learner registry — single source of truth for method names.
+
+Before this package, four string sets drifted independently: ``METHODS`` in
+core/rotation.py, ``METHODS`` in benchmarks/fig3_table1_e2e.py,
+``OptimizerConfig.gcd_method`` and ``opq.rotation_solver``. Now every
+consumer (trainer, OPQ, index maintenance, all four rotation benchmarks)
+resolves a spec string through ``make``:
+
+    make("gcd", method="steepest")   # kwargs override the spec's defaults
+    make("gcd_greedy")               # canonical per-method names
+    make("subspace_gcd", sub=8)      # serving-aware GCD (needs the subspace width)
+    make("cayley_sgd")               # Cayley-retraction SGD baseline
+    make("procrustes")               # SVD solver (closed-form + projected SGD)
+    make("frozen")                   # frozen-R control
+
+Legacy aliases from the pre-registry era ("svd", "cayley", the
+``gcd_overlap_*`` ablations) resolve to the same learners, so old spec
+strings keep working through the compat shims.
+
+``RotationConfig`` is the trainer-facing sub-config (hashable NamedTuple —
+OptimizerConfig is a jit static argument): it replaces the former
+``gcd_method`` / ``gcd_lr`` / ``gcd_preconditioner`` fields and feeds
+``from_config`` → a learner instance.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.rotations import base, cayley, gcd, procrustes
+
+_REGISTRY: dict[str, type] = {
+    "gcd": gcd.GCD,
+    "subspace_gcd": gcd.SubspaceGCD,
+    "cayley_sgd": cayley.CayleySGD,
+    "procrustes": procrustes.Procrustes,
+    "frozen": gcd.Frozen,
+}
+_REGISTRY.update({f"gcd_{m}": gcd.GCD for m in gcd.METHODS})
+
+_ALIASES = {
+    "svd": "procrustes",
+    "cayley": "cayley_sgd",
+}
+
+
+def names() -> tuple[str, ...]:
+    """Canonical registered specs — what benchmarks sweep. Aliases and the
+    bare "gcd" spec (the same learner as "gcd_greedy") are excluded so a
+    sweep never double-counts; both still resolve through ``make``."""
+    return tuple(n for n in _REGISTRY if n != "gcd")
+
+
+def canonical(spec: str) -> str:
+    return _ALIASES.get(spec, spec)
+
+
+def make(spec: str, **kwargs) -> base.RotationLearner:
+    """Build a learner from a registry spec. ``kwargs`` go to the learner's
+    constructor (e.g. ``method=``, ``preconditioner=``, ``sub=``,
+    ``reorthonormalize_every=``); a ``gcd_<method>`` spec pre-binds
+    ``method`` unless overridden."""
+    spec = canonical(spec)
+    cls = _REGISTRY.get(spec)
+    if cls is None:
+        raise ValueError(
+            f"unknown rotation learner {spec!r}; registered: {names()}")
+    if spec.startswith("gcd_"):
+        kwargs.setdefault("method", spec[len("gcd_"):])
+    return cls(**kwargs)
+
+
+class RotationConfig(NamedTuple):
+    """Trainer-facing rotation settings (sub-config of OptimizerConfig).
+
+    ``learner`` is a registry spec; ``method``/``preconditioner``/``sweeps``
+    only apply to the GCD family (a ``gcd_<method>`` spec wins over
+    ``method``). ``lr`` is the manifold learning rate, passed to
+    ``learner.update`` — separate from the inner optimizer's lr, as in the
+    former ``gcd_lr``.
+    """
+
+    learner: str = "gcd"
+    lr: float = 1e-3
+    method: str = "greedy"
+    preconditioner: str = "none"
+    sweeps: int = 16
+    reorthonormalize_every: int = 0
+
+    @classmethod
+    def from_spec(cls, spec: str, **kw) -> "RotationConfig":
+        """RotationConfig from a registry spec string (CLI convenience):
+        ``from_spec("gcd_steepest", lr=2e-3)``."""
+        spec = canonical(spec)
+        if spec.startswith("gcd_"):
+            return cls(learner="gcd", method=spec[len("gcd_"):], **kw)
+        return cls(learner=spec, **kw)
+
+
+def from_config(cfg: RotationConfig, **extra) -> base.RotationLearner:
+    """Learner instance for a RotationConfig (``extra`` for e.g. ``sub``)."""
+    spec = canonical(cfg.learner)
+    kw = dict(reorthonormalize_every=cfg.reorthonormalize_every, **extra)
+    if spec == "gcd" or spec.startswith("gcd_") or spec == "subspace_gcd":
+        kw.update(preconditioner=cfg.preconditioner, sweeps=cfg.sweeps)
+        if spec == "gcd":
+            kw.update(method=cfg.method)
+    return make(spec, **kw)

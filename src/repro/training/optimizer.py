@@ -1,14 +1,18 @@
-"""Optimizer with GCD manifold routing.
+"""Optimizer with rotation-learner manifold routing.
 
 Ordinary parameters get AdamW (configurable moment dtype — bf16 moments for
 the ≥100B archs, see DESIGN.md §6). Any leaf whose name is in
 ``MANIFOLD_LEAVES`` ({'R', 'rot_k', 'rot_v'}) is an SO(n) rotation and is
-updated by the paper's Givens coordinate descent (Algorithm 2) instead —
-projection-free, exactly orthogonal at every step. Stacked rotations
-(leading layer axis) are vmapped.
+routed through the ``repro.rotations`` learner configured by
+``OptimizerConfig.rotation`` instead — GCD (the paper's Algorithm 2,
+projection-free and exactly orthogonal at every step), Cayley-SGD,
+SVD/Procrustes, or the frozen-R control, all swappable by registry spec.
+Stacked rotations (leading layer axis, e.g. per-layer KV rotations
+(L, hd, hd)) are vmapped over the learner's update.
 
 This is the paper's headline integration claim: GCD "can be easily
-integrated with standard neural network training algorithms".
+integrated with standard neural network training algorithms" — and with the
+learner protocol, so can every baseline it is compared against.
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import rotation
+from repro import rotations as rot_lib
 
 MANIFOLD_LEAVES = ("R", "rot_k", "rot_v")
 
@@ -39,17 +43,14 @@ class OptimizerConfig(NamedTuple):
     # --- microbatch gradient accumulation (big-arch memory fit) ---
     accum_steps: int = 1
     accum_dtype: Any = jnp.float32
-    # --- GCD manifold settings (paper Algorithm 2) ---
-    gcd_method: str = "greedy"       # random | greedy | steepest | frozen
-    gcd_lr: float = 1e-3
-    gcd_preconditioner: str = "none"
+    # --- manifold (SO(n)) leaf settings: which rotation learner + its lr ---
+    rotation: rot_lib.RotationConfig = rot_lib.RotationConfig()
 
 
 class OptState(NamedTuple):
     mu: Any        # first moments (zeros for manifold leaves)
     nu: Any        # second moments
-    rot_acc: Any   # GCD preconditioner accumulators (zeros elsewhere)
-    rot_acc2: Any
+    rot: Any       # dict[path-key, learner state] for the manifold leaves
     step: jax.Array
 
 
@@ -60,6 +61,28 @@ def _leaf_name(path) -> str:
 
 def is_manifold_path(path) -> bool:
     return _leaf_name(path) in MANIFOLD_LEAVES
+
+
+def path_key(path) -> str:
+    """Stable string key for a param-tree path (OptState.rot dict key)."""
+    return "/".join(_leaf_name((p,)) for p in path)
+
+
+def _init_rot_leaf(learner, p):
+    """Learner state for one manifold leaf (vmapped for stacked (L, n, n))."""
+    if p.ndim == 3:
+        return jax.vmap(learner.init_from)(p)
+    return learner.init_from(p)
+
+
+def init_rot_states(params, cfg: OptimizerConfig):
+    """The ``OptState.rot`` dict: one learner state per manifold leaf."""
+    learner = rot_lib.from_config(cfg.rotation)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {
+        path_key(path): _init_rot_leaf(learner, p)
+        for path, p in flat if is_manifold_path(path)
+    }
 
 
 def factored_shapes(shape: tuple[int, ...]):
@@ -86,16 +109,10 @@ def init(params, cfg: OptimizerConfig) -> OptState:
             return jnp.zeros(factored_shapes(p.shape)[1], jnp.float32)
         return jnp.zeros(p.shape, cfg.moment_dtype)
 
-    def rot_zeros(path, p):
-        if is_manifold_path(path):
-            return jnp.zeros(p.shape, jnp.float32)
-        return jnp.zeros((), jnp.float32)  # placeholder
-
     mu = jax.tree_util.tree_map_with_path(mu_like, params)
     nu = jax.tree_util.tree_map_with_path(nu_like, params)
-    ra = jax.tree_util.tree_map_with_path(rot_zeros, params)
-    ra2 = jax.tree_util.tree_map_with_path(rot_zeros, params)
-    return OptState(mu=mu, nu=nu, rot_acc=ra, rot_acc2=ra2, step=jnp.int32(0))
+    return OptState(mu=mu, nu=nu, rot=init_rot_states(params, cfg),
+                    step=jnp.int32(0))
 
 
 def schedule_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
@@ -183,7 +200,8 @@ def _adafactor_leaf(cfg: OptimizerConfig, lr, t, g, p, vr, vc):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array):
     """Returns (new_params, new_state). Clips the global grad norm, then
-    AdamW everywhere except the SO(n) leaves, which get GCD steps."""
+    AdamW everywhere except the SO(n) leaves, which go through the
+    configured ``repro.rotations`` learner (``cfg.rotation``)."""
     step = state.step
     lr = schedule_lr(cfg, step)
     t = (step + 1).astype(jnp.float32)
@@ -197,30 +215,35 @@ def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array)
     keys = jax.random.split(key, max(len(flat_g), 1))
     key_for = {path: k for (path, _), k in zip(flat_g, keys)}
 
+    learner = rot_lib.from_config(cfg.rotation)
+    rot_n: dict[str, Any] = {}
     cdt = cfg.compute_dtype
 
-    def upd(path, g, p, mu, nu, ra, ra2):
+    def upd(path, g, p, mu, nu):
         g = g.astype(cdt) * clip.astype(cdt) if cfg.grad_clip > 0 else g.astype(cdt)
-        if is_manifold_path(path) and cfg.gcd_method != "frozen":
+        if is_manifold_path(path):
             kk = key_for[path]
+            # re-sync the learner state's R from the param leaf (source of
+            # truth, e.g. after a partial checkpoint restore)
+            st = state.rot[path_key(path)]
 
-            def one_rot(R, G, acc, acc2, k):
-                return rotation.gcd_step(
-                    R, G, acc, acc2, step, cfg.gcd_lr, k,
-                    method=cfg.gcd_method,
-                    preconditioner=cfg.gcd_preconditioner,
-                )
+            def one_rot(s, G, k):
+                s2, _delta = learner.update(s, G, cfg.rotation.lr, k)
+                return s2
 
             if p.ndim == 3:  # stacked per-layer rotations
+                st = jax.vmap(learner.with_rotation)(st, p)
                 ks = jax.random.split(kk, p.shape[0])
-                Rn, ran, ra2n = jax.vmap(one_rot)(p, g, ra, ra2, ks)
+                st2 = jax.vmap(one_rot)(st, g, ks)
+                p_n = jax.vmap(learner.materialize)(st2)
             else:
-                Rn, ran, ra2n = one_rot(p, g, ra, ra2, kk)
-            return Rn.astype(p.dtype), mu, nu, ran, ra2n
-        if is_manifold_path(path):  # frozen-R baseline
-            return p, mu, nu, ra, ra2
+                st = learner.with_rotation(st, p)
+                st2 = one_rot(st, g, kk)
+                p_n = learner.materialize(st2)
+            rot_n[path_key(path)] = st2
+            return p_n.astype(p.dtype), mu, nu
         if cfg.name == "adafactor":
-            return _adafactor_leaf(cfg, lr, t, g, p, mu, nu) + (ra, ra2)
+            return _adafactor_leaf(cfg, lr, t, g, p, mu, nu)
         one = jnp.asarray(1.0, cdt)
         mu_n = jnp.asarray(cfg.beta1, cdt) * mu.astype(cdt) + (one - cfg.beta1) * g
         nu_n = jnp.asarray(cfg.beta2, cdt) * nu.astype(cdt) + (one - cfg.beta2) * jnp.square(g)
@@ -230,18 +253,15 @@ def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array)
             upd_v = upd_v + jnp.asarray(cfg.weight_decay, cdt) * p.astype(cdt)
         p_n = p.astype(cdt) - lr.astype(cdt) * upd_v
         return (p_n.astype(p.dtype), mu_n.astype(cfg.moment_dtype),
-                nu_n.astype(cfg.moment_dtype), ra, ra2)
+                nu_n.astype(cfg.moment_dtype))
 
     results = jax.tree_util.tree_map_with_path(
-        upd, grads, params, state.mu, state.nu, state.rot_acc, state.rot_acc2
+        upd, grads, params, state.mu, state.nu
     )
-    # unzip the 5-tuples back into trees
+    # unzip the 3-tuples back into trees
     treedef = jax.tree.structure(params)
     flat = treedef.flatten_up_to(results)
     p_n = treedef.unflatten([r[0] for r in flat])
     mu_n = treedef.unflatten([r[1] for r in flat])
     nu_n = treedef.unflatten([r[2] for r in flat])
-    ra_n = treedef.unflatten([r[3] for r in flat])
-    ra2_n = treedef.unflatten([r[4] for r in flat])
-    return p_n, OptState(mu=mu_n, nu=nu_n, rot_acc=ra_n, rot_acc2=ra2_n,
-                         step=step + 1)
+    return p_n, OptState(mu=mu_n, nu=nu_n, rot=rot_n, step=step + 1)

@@ -2,8 +2,9 @@
 
 ``make_train_step(loss_fn, opt_cfg)`` turns any ``loss_fn(params, batch)``
 into a jit-able ``(state, batch) → (state, metrics)`` step that:
-  * differentiates the loss (rotations included — their grads feed GCD),
-  * routes updates through training.optimizer (AdamW + GCD manifold),
+  * differentiates the loss (rotations included — their grads feed the
+    configured ``repro.rotations`` learner),
+  * routes updates through training.optimizer (AdamW + manifold learner),
   * advances the RNG deterministically from the step counter.
 
 End-to-end losses that train *through* a quantized index compose with
@@ -35,7 +36,7 @@ def eq1_loss(quantizer, R: jax.Array, X: jax.Array,
     The non-differentiable φ is bridged by ``Quantizer.encode_st`` (forward
     = quantized value, backward = identity wrt X), so ∂/∂X reaches the
     towers, ∂/∂codebooks comes from the distortion term, and ∂/∂R feeds the
-    GCD manifold update in training.optimizer.
+    rotation learner's manifold update in training.optimizer.
     """
     XR = X @ R
     tx = quantizer.encode_st(XR) @ R.T

@@ -1,0 +1,212 @@
+"""Conformance suite for the repro.rotations learner registry.
+
+Every registered learner must satisfy the protocol contract:
+  * exact orthogonality after K update steps (manifold invariant);
+  * delta-vs-state consistency: apply(R_old, delta) == materialize(new_state);
+  * vmapped stacked (L, n, n) updates (the per-layer KV-rotation path);
+  * descent on a convex quadratic (frozen excepted — it must NOT move).
+
+Plus the satellite regressions: the Cayley −1-eigenvalue guard and the
+``reorthonormalize_every`` bf16 drift guard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rotations
+from repro.core import givens
+from repro.rotations import cayley as cayley_mod
+
+N = 16
+SUB_KW = {"subspace_gcd": {"sub": 4}}
+ALL_SPECS = list(rotations.names())
+DESCENT_SPECS = [s for s in ALL_SPECS
+                 if s != "frozen" and not s.startswith("gcd_overlap")]
+
+
+def _make(spec, **kw):
+    return rotations.make(spec, **SUB_KW.get(spec, {}), **kw)
+
+
+def _convex_loss(key, n, m=64):
+    X = jax.random.normal(key, (m, n))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    return lambda R: jnp.mean((X @ R) @ w)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_orthogonality_after_k_steps(spec):
+    learner = _make(spec)
+    loss = _convex_loss(jax.random.PRNGKey(0), N)
+    st = learner.init(N)
+    upd = jax.jit(learner.update)
+    for t in range(12):
+        G = jax.grad(loss)(learner.materialize(st))
+        st, _ = upd(st, G, 0.05, jax.random.PRNGKey(t))
+    R = learner.materialize(st)
+    assert float(givens.orthogonality_error(R)) < 1e-4
+    assert int(st.step) == 12
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_delta_vs_state_consistency(spec):
+    """apply(R_old, delta) == materialize(new_state) — the trainer/index
+    sync contract (index.maintain.refresh_delta relies on it)."""
+    learner = _make(spec)
+    loss = _convex_loss(jax.random.PRNGKey(1), N)
+    # start away from identity so the contract is tested off the origin
+    st = learner.init_from(givens.random_rotation(jax.random.PRNGKey(2), N))
+    for t in range(3):
+        R_old = learner.materialize(st)
+        G = jax.grad(loss)(R_old)
+        st, delta = jax.jit(learner.update)(st, G, 0.05, jax.random.PRNGKey(t))
+        np.testing.assert_allclose(
+            np.asarray(rotations.apply(R_old, delta)),
+            np.asarray(learner.materialize(st)), atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_vmapped_stacked_updates(spec):
+    """Stacked (L, n, n) rotations update under vmap — the per-layer
+    KV-rotation path in training.optimizer."""
+    L = 3
+    learner = _make(spec)
+    Rs = jnp.stack([givens.random_rotation(jax.random.PRNGKey(i), N)
+                    for i in range(L)])
+    Gs = jax.random.normal(jax.random.PRNGKey(7), (L, N, N))
+    st = jax.vmap(learner.init_from)(Rs)
+
+    def one(s, g, k):
+        return learner.update(s, g, 0.05, k)
+
+    st2, delta = jax.vmap(one)(st, Gs, jax.random.split(
+        jax.random.PRNGKey(8), L))
+    R2 = jax.vmap(learner.materialize)(st2)
+    assert R2.shape == (L, N, N)
+    for l in range(L):
+        assert float(givens.orthogonality_error(R2[l])) < 1e-4
+    # vmapped delta consistency
+    applied = jax.vmap(lambda R, d: rotations.apply(R, d))(Rs, delta)
+    np.testing.assert_allclose(np.asarray(applied), np.asarray(R2), atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", DESCENT_SPECS)
+def test_descends_convex_quadratic(spec):
+    learner = _make(spec)
+    loss = _convex_loss(jax.random.PRNGKey(3), N)
+    st = learner.init(N)
+    lr = {"cayley_sgd": 0.02}.get(spec, 0.05)
+    v0 = float(loss(learner.materialize(st)))
+    upd = jax.jit(learner.update)
+    for t in range(30):
+        G = jax.grad(loss)(learner.materialize(st))
+        st, _ = upd(st, G, lr, jax.random.PRNGKey(t))
+    assert float(loss(learner.materialize(st))) < v0
+
+
+def test_frozen_never_moves():
+    learner = rotations.make("frozen")
+    R0 = givens.random_rotation(jax.random.PRNGKey(4), N)
+    st = learner.init_from(R0)
+    G = jax.random.normal(jax.random.PRNGKey(5), (N, N))
+    st, delta = learner.update(st, G, 0.5, jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(np.asarray(learner.materialize(st)),
+                                  np.asarray(R0))
+    assert delta.pi.shape == (0,)  # O(1) identity delta
+
+
+def test_registry_aliases_and_unknown():
+    assert isinstance(rotations.make("svd"), rotations.Procrustes)
+    assert isinstance(rotations.make("cayley"), rotations.CayleySGD)
+    assert rotations.make("gcd_steepest").method == "steepest"
+    # explicit kwarg beats the spec-bound default
+    assert rotations.make("gcd", method="random").method == "random"
+    with pytest.raises(ValueError):
+        rotations.make("does_not_exist")
+    with pytest.raises(ValueError):
+        rotations.make("subspace_gcd")  # sub is mandatory
+
+
+def test_rotation_config_from_spec():
+    rc = rotations.RotationConfig.from_spec("gcd_steepest", lr=2e-3)
+    assert rc.learner == "gcd" and rc.method == "steepest" and rc.lr == 2e-3
+    learner = rotations.from_config(rc)
+    assert isinstance(learner, rotations.GCD) and learner.method == "steepest"
+    assert isinstance(
+        rotations.from_config(rotations.RotationConfig(learner="cayley")),
+        rotations.CayleySGD)
+
+
+def test_subspace_gcd_delta_stays_within_subspaces():
+    sub = 4
+    learner = rotations.make("subspace_gcd", sub=sub)
+    st = learner.init_from(givens.random_rotation(jax.random.PRNGKey(9), N))
+    G = jax.random.normal(jax.random.PRNGKey(10), (N, N))
+    _, delta = learner.update(st, G, 0.05, jax.random.PRNGKey(11))
+    cross = np.asarray(delta.pi) // sub != np.asarray(delta.pj) // sub
+    assert np.all(np.abs(np.asarray(delta.theta)[cross]) == 0.0)
+
+
+# --- satellite: Cayley −1-eigenvalue numerical guard -----------------------
+
+def _rotation_with_eigenvalue_near(theta: float, n: int = 8) -> jnp.ndarray:
+    """Block-diag rotation whose leading 2×2 plane turns by ``theta``
+    (eigenvalues e^{±iθ} → −1 as θ → π)."""
+    R = np.eye(n, dtype=np.float32)
+    c, s = np.cos(theta), np.sin(theta)
+    R[0, 0], R[0, 1], R[1, 0], R[1, 1] = c, -s, s, c
+    return jnp.asarray(R)
+
+
+def test_inverse_cayley_near_minus_one_eigenvalue_is_finite():
+    """§1.1's instability: I + R is singular at a −1 eigenvalue. The guarded
+    solve must stay finite and keep the round trip orthogonal."""
+    # mildly near: the round trip must still be accurate
+    R = _rotation_with_eigenvalue_near(np.pi - 1e-2)
+    A = cayley_mod.inverse_cayley(R)
+    assert bool(jnp.all(jnp.isfinite(A)))
+    R2 = cayley_mod.cayley(A)
+    np.testing.assert_allclose(np.asarray(R2), np.asarray(R), atol=1e-3)
+
+    # exactly at the singularity: finite + orthogonal output (graceful
+    # degradation — the unguarded solve returns inf/nan here)
+    R_sing = _rotation_with_eigenvalue_near(np.pi)
+    A_sing = cayley_mod.inverse_cayley(R_sing)
+    assert bool(jnp.all(jnp.isfinite(A_sing)))
+    assert bool(jnp.all(jnp.isfinite(cayley_mod.cayley(A_sing))))
+
+
+def test_cayley_roundtrip_well_conditioned_unchanged():
+    """The guard must not perturb the well-conditioned path."""
+    p = 0.1 * jax.random.normal(jax.random.PRNGKey(12), (N, N))
+    R = cayley_mod.cayley(p)
+    assert float(givens.orthogonality_error(R)) < 1e-4
+    p2 = cayley_mod.inverse_cayley(R)
+    np.testing.assert_allclose(np.asarray(cayley_mod.cayley(p2)),
+                               np.asarray(R), atol=1e-4)
+
+
+# --- satellite: reorthonormalize_every drift guard --------------------------
+
+def test_bf16_long_horizon_drift_guard():
+    """Long-horizon GCD in bf16 drifts off SO(n); the periodic projection
+    keeps the orthogonality error below tolerance."""
+    n = 16
+    loss = _convex_loss(jax.random.PRNGKey(13), n)
+
+    def run(every, steps=200):
+        learner = rotations.make("gcd", method="random",
+                                 reorthonormalize_every=every)
+        st = learner.init(n, dtype=jnp.bfloat16)
+        upd = jax.jit(learner.update)
+        for t in range(steps):
+            G = jax.grad(loss)(learner.materialize(st).astype(jnp.float32))
+            st, _ = upd(st, G, 0.05, jax.random.PRNGKey(t))
+        R = learner.materialize(st).astype(jnp.float32)
+        return float(givens.orthogonality_error(R))
+
+    guarded = run(every=16)
+    unguarded = run(every=0)
+    assert guarded < 0.05, guarded
+    assert guarded <= unguarded + 1e-6, (guarded, unguarded)

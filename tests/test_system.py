@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import rotations
 from repro.core import index_layer as il
 from repro.core import givens, pq
 from repro.data import synthetic
@@ -21,8 +22,10 @@ def trained():
                                               num_codewords=16),
     )
     log = synthetic.ClickLog(0, cfg.item_vocab, dim=16)
-    ocfg = opt_lib.OptimizerConfig(lr=3e-3, total_steps=120, warmup_steps=10,
-                                   gcd_method="greedy", gcd_lr=3e-3)
+    ocfg = opt_lib.OptimizerConfig(
+        lr=3e-3, total_steps=120, warmup_steps=10,
+        rotation=rotations.RotationConfig(learner="gcd", method="greedy",
+                                          lr=3e-3))
     params = recsys.twotower_init(jax.random.PRNGKey(0), cfg)
     state = ts.init_state(jax.random.PRNGKey(1), params, ocfg)
 

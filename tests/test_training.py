@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import rotations
 from repro.core import givens
 from repro.data import synthetic
 from repro.models import transformer as tfm
@@ -43,7 +44,9 @@ def test_adam_matches_reference_on_quadratic():
 
 
 def test_manifold_leaves_get_gcd_not_adam():
-    cfg = opt.OptimizerConfig(lr=0.1, gcd_method="greedy", gcd_lr=0.05)
+    cfg = opt.OptimizerConfig(
+        lr=0.1, rotation=rotations.RotationConfig(learner="gcd",
+                                                  method="greedy", lr=0.05))
     params = {"R": jnp.eye(8), "w": jnp.zeros((8,))}
     state = opt.init(params, cfg)
     G = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
@@ -56,7 +59,7 @@ def test_manifold_leaves_get_gcd_not_adam():
 
 
 def test_frozen_method_keeps_rotation():
-    cfg = opt.OptimizerConfig(gcd_method="frozen")
+    cfg = opt.OptimizerConfig(rotation=rotations.RotationConfig(learner="frozen"))
     params = {"R": jnp.eye(6)}
     state = opt.init(params, cfg)
     grads = {"R": jax.random.normal(jax.random.PRNGKey(0), (6, 6))}
@@ -85,8 +88,9 @@ def test_accum_steps_equivalent_loss_and_grads():
     tok, lab = synthetic.lm_batch(jax.random.PRNGKey(1), 8, 16, 97)
     outs = {}
     for A in (1, 2, 4):
-        ocfg = opt.OptimizerConfig(accum_steps=A, lr=0.0, gcd_method="frozen",
-                                   grad_clip=0.0)
+        ocfg = opt.OptimizerConfig(
+            accum_steps=A, lr=0.0, grad_clip=0.0,
+            rotation=rotations.RotationConfig(learner="frozen"))
         step = jax.jit(ts.make_train_step(
             lambda pp, t, l: tfm.forward_train(pp, t, l, cfg), ocfg))
         st = ts.init_state(jax.random.PRNGKey(2), p, ocfg)
