@@ -1,22 +1,30 @@
-"""Recall@10 vs QPS: IVF ``nprobe`` sweep, PQ vs depth-2 residual RQ.
+"""Recall@10 vs QPS across the repro.search registry: exact vs flat vs IVF.
 
-Builds synthetic-corpus indexes (GCD-rotated residual quantizer,
-repro.index) for each residual depth and sweeps ``nprobe`` to trace the
-serving trade-offs the ``repro.quant`` abstraction buys:
+One harness, every retrieval backend. Builds a GCD-rotated quantized index
+per residual depth (PQ at depth 1, RQ above) and serves the same corpus,
+queries, and rotation through each registered searcher:
 
+  * exact     — tiled brute force; the recall oracle and the QPS floor
+  * flat_adc  — full ADC scan over the very codes IVF probes (attached to
+                the IVF build, so "recall vs flat" isolates probing loss)
+  * ivf       — ``nprobe`` sweep: scan work vs recall, the serving knob
+
+Metrics per row:
   * scan work   — CSR rows scored per query (the hardware-independent cost)
   * QPS         — measured wall-clock throughput of the jit'd search
-  * recall@10   — (a) vs the flat ADC scan over the same quantized codes
-                  (isolates the loss from probing, the thing nprobe controls)
-                  (b) vs exact MIPS (end-to-end quality)
-  * compression — corpus f32 bytes / code payload bytes (RQ-M spends M×
-                  the code bytes of PQ for strictly lower distortion — the
-                  recall/compression frontier)
+  * recall@10   — (a) vs the flat ADC scan (isolates probing loss)
+                  (b) vs exact MIPS through the registry (end-to-end)
+  * compression — corpus f32 bytes / code payload bytes
+
+The sweep ends with the serving pieces unique to this paper + subsystem:
+a ``subspace_gcd`` RotationDelta absorbed via ``Searcher.refresh`` (codes
+untouched, recall preserved) and a ``search.Engine`` ragged-batch pass
+whose compile cache must stay at one executable per (bucket, k, nprobe).
 
 Acceptance (ISSUE 1, carried forward): at ≥0.9 recall@10-vs-flat, PQ scan
-work must drop ≥5× vs the flat path. ISSUE 2 adds: RQ depth-2 must run
-end-to-end through build, search, and ``refresh_rotation``, and beat PQ's
-recall@10-vs-exact at full probe (more code bits → better quantization).
+work must drop ≥5× vs the flat path. ISSUE 2: RQ depth-2 end-to-end with
+exact subspace refresh and better quantization than PQ. ISSUE 4 adds: all
+registry backends on one harness; Engine compile cache bounded.
 
 Run:  PYTHONPATH=src python benchmarks/ivf_recall_qps.py [--n 100000]
       PYTHONPATH=src python -m benchmarks.run --only ivf [--fast]
@@ -27,13 +35,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import quant
-from repro.core import givens
+from repro import rotations, search
 from repro.data import synthetic
-from repro.index import ivf, maintain, search
+from repro.index import maintain
 from repro.metrics import recall_at_k
 
 
@@ -48,105 +54,135 @@ def _bench(fn, *args, reps=3):
 def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
         subspaces: int = 16, codewords: int = 256, depths=(1, 2),
         use_kernel: bool = False, verbose: bool = True):
-    """Sweep residual depths; returns (results dict, claim-check dict)."""
+    """Sweep the searcher registry × residual depths; returns
+    (results dict, claim-check dict)."""
     out = print if verbose else (lambda *a, **k: None)
     key = jax.random.PRNGKey(0)
     X = synthetic.sift_like(key, n, dim)
     Q = synthetic.sift_like(jax.random.PRNGKey(1), queries, dim)
-    R = givens.random_rotation(jax.random.PRNGKey(2), dim)
-    exact = np.asarray(jnp.argsort(-(Q @ X.T), axis=1)[:, :10])
+    R = rotations.random_rotation(jax.random.PRNGKey(2), dim)
 
     results: dict = {}
     checks: dict = {}
     full_probe_recall: dict = {}
+    swept = set()
+
+    out("backend,scheme,nprobe,scan_rows,scan_reduction,qps,"
+        "recall10_vs_flat,recall10_vs_exact")
+
+    # --- exact backend: the oracle every quantized row is scored against
+    exact_s = search.make("exact")
+    exact_state = exact_s.build(key, X, R, search.SearchConfig(tile_rows=8192))
+    exact_res = exact_s.search(exact_state, Q, k=10)
+    exact_ids = np.asarray(exact_res.ids)
+    exact_dt = _bench(lambda: exact_s.search(exact_state, Q, k=10).scores)
+    out(f"exact,-,-,{n},1.0x,{queries/exact_dt:.0f},1.000,1.000")
+    swept.add("exact")
+
+    ivf_s = search.make("ivf")
+    flat_s = search.make("flat_adc")
 
     for depth in depths:
         name = "pq" if depth == 1 else f"rq{depth}"
-        cfg = ivf.IVFPQConfig(
-            num_lists=lists,
-            pq=quant.PQConfig(subspaces, codewords),
-            block_size=128,
-            depth=depth,
+        cfg = search.SearchConfig(
+            num_lists=lists, subspaces=subspaces, codewords=codewords,
+            depth=depth, block_size=128, nprobe=8,
+            train_size=min(n, 16384), use_kernel=use_kernel,
         )
         t0 = time.time()
-        index = ivf.build(jax.random.PRNGKey(3), X, R, cfg,
-                          train_size=min(n, 16384))
-        code_bytes = index.codes.shape[1] * index.codes.dtype.itemsize
-        compression = dim * 4 / code_bytes
+        ivf_state = ivf_s.build(jax.random.PRNGKey(3), X, R, cfg)
+        flat_state = flat_s.attach(ivf_state.index, use_kernel=use_kernel)
+        index = ivf_state.index
+        st = flat_s.stats(flat_state)
         # residual distortion on a held sample — the strict quantization-
         # quality metric behind the recall frontier (recall can saturate)
         XRs = X[:4096] @ index.R
         res_s = XRs - index.coarse.centroids[index.coarse.assign(XRs)]
         sample_distortion = float(index.quantizer.distortion(res_s))
         out(f"# [{name}] built IVF index: N={n} L={lists} D={subspaces} "
-            f"K={codewords} depth={depth} cap={index.capacity} "
-            f"code_bytes/item={code_bytes} ({compression:.0f}x compression) "
+            f"K={codewords} depth={depth} cap={st['capacity']} "
+            f"code_bytes/item={st['code_bytes_per_row']} "
+            f"({st['compression']:.0f}x compression) "
             f"residual_distortion={sample_distortion:.4f} "
-            f"max_list_blocks={index.max_list_blocks()} "
-            f"({time.time()-t0:.1f}s)")
+            f"max_list_blocks={ivf_state.max_blocks} ({time.time()-t0:.1f}s)")
 
-        # --- flat baseline over the same quantized representation
-        @jax.jit
-        def flat(qb, index=index):
-            scores, ids = search.flat_adc_scores(index, qb)
-            s, pos = jax.lax.top_k(scores, 10)
-            return s, ids[pos]
-
-        flat_dt = _bench(lambda: flat(Q)[0])
-        flat_ids = np.asarray(flat(Q)[1])
-        flat_scan = index.capacity
-        r_flat_exact = recall_at_k(flat_ids, exact)
-        out(f"# [{name}] flat ADC: scan={flat_scan} rows/query "
-            f"qps={queries/flat_dt:.0f} recall@10 vs exact={r_flat_exact:.3f}")
-        out("scheme,nprobe,scan_rows,scan_reduction,qps,"
-            "recall10_vs_flat,recall10_vs_exact")
+        # --- flat backend over the same codes the ivf backend probes
+        flat_res = flat_s.search(flat_state, Q, k=10)
+        flat_dt = _bench(lambda: flat_s.search(flat_state, Q, k=10).scores)
+        flat_ids = np.asarray(flat_res.ids)
+        flat_scan = st["capacity"]
+        r_flat_exact = recall_at_k(flat_ids, exact_ids)
+        out(f"flat_adc,{name},-,{flat_scan},1.0x,{queries/flat_dt:.0f},"
+            f"1.000,{r_flat_exact:.3f}")
+        swept.add("flat_adc")
 
         rows = []
         passed = False
-        max_blocks = index.max_list_blocks()  # hoisted: no host sync in loop
         for nprobe in (1, 2, 4, 8, 16, 32, 64):
             if nprobe > lists:
                 break
-            res = search.search_fixed(index, Q, nprobe=nprobe, k=10,
-                                      max_blocks=max_blocks,
-                                      use_kernel=use_kernel)
-            dt = _bench(lambda np_=nprobe: search.search_fixed(
-                index, Q, nprobe=np_, k=10, max_blocks=max_blocks,
-                use_kernel=use_kernel).scores)
+            res = ivf_s.search(ivf_state, Q, k=10, nprobe=nprobe)
+            dt = _bench(lambda np_=nprobe: ivf_s.search(
+                ivf_state, Q, k=10, nprobe=np_).scores)
             qps = queries / dt
-            scan = float(jnp.mean(res.scanned))
+            scan = float(np.mean(np.asarray(res.scanned)))
             reduction = flat_scan / max(scan, 1.0)
             ids_np = np.asarray(res.ids)
             r_flat = recall_at_k(ids_np, flat_ids)
-            r_exact = recall_at_k(ids_np, exact)
+            r_exact = recall_at_k(ids_np, exact_ids)
             rows.append(dict(nprobe=nprobe, scan=scan, reduction=reduction,
                              qps=qps, recall_flat=r_flat, recall_exact=r_exact))
-            out(f"{name},{nprobe},{scan:.0f},{reduction:.1f}x,{qps:.0f},"
+            out(f"ivf,{name},{nprobe},{scan:.0f},{reduction:.1f}x,{qps:.0f},"
                 f"{r_flat:.3f},{r_exact:.3f}")
             if r_flat >= 0.9 and reduction >= 5.0:
                 passed = True
+        swept.add("ivf")
 
-        # --- rotation refresh: the index stays servable across a GCD step
+        # --- rotation refresh through the protocol: the same RotationDelta
+        # the trainer would emit, absorbed by Searcher.refresh
         def distortion_loss(Rm, index=index):
             return index.quantizer.distortion(X[:8192] @ Rm)
 
         G = jax.grad(distortion_loss)(index.R)
-        refreshed, _ = maintain.subspace_gcd_step(index, G, 2e-3)
-        mismatch = float(maintain.refresh_mismatch(refreshed, X))
-        post = search.search(refreshed, Q, nprobe=min(32, lists), k=10,
-                             use_kernel=use_kernel)
-        post_recall = recall_at_k(np.asarray(post.ids), exact)
-        out(f"# [{name}] refresh_rotation (subspace GCD step): code mismatch "
+        learner = rotations.make("subspace_gcd", sub=index.quantizer.sub)
+        _, delta = learner.update(learner.init_from(index.R), G, 2e-3,
+                                  jax.random.PRNGKey(0))
+        refreshed = ivf_s.refresh(ivf_state, delta)
+        mismatch = float(maintain.refresh_mismatch(refreshed.index, X))
+        post = ivf_s.search(refreshed, Q, k=10, nprobe=min(32, lists))
+        post_recall = recall_at_k(np.asarray(post.ids), exact_ids)
+        out(f"# [{name}] Searcher.refresh (subspace GCD delta): code mismatch "
             f"vs full rebuild = {mismatch*100:.2f}%, post-refresh "
             f"recall@10 vs exact = {post_recall:.3f}")
 
         results[name] = dict(rows=rows, flat_recall_exact=r_flat_exact,
-                             compression=compression, refresh_mismatch=mismatch,
+                             compression=st["compression"],
+                             refresh_mismatch=mismatch,
                              post_refresh_recall=post_recall,
                              residual_distortion=sample_distortion)
         full_probe_recall[name] = (r_flat_exact, sample_distortion)
         if depth == 1:
             checks["pq_scan_reduction_at_recall"] = passed
+
+            # --- Engine: ragged batches, one compile per (bucket, k, nprobe)
+            engine = search.Engine(ivf_s, ivf_state, k=10, nprobe=8,
+                                   min_bucket=32)
+            sizes = (31, 60, 17, 31, queries)
+            for sz in sizes:
+                engine.search(np.asarray(Q)[:sz])
+            es = engine.stats()
+            # expected bucket set through the Engine's own bucketing, so
+            # the acceptance check cannot drift from the implementation
+            buckets = {engine._bucket(sz) for sz in sizes}
+            checks["engine_compile_cache"] = es["compiles"] <= len(buckets)
+            results["engine"] = dict(
+                compiles=es["compiles"], requests=es["requests"],
+                lut_hit_rate=es["lut_hit_rate"],
+                latency_ms_p50=es["latency_ms_p50"])
+            out(f"# [engine] {es['requests']} ragged batches over buckets "
+                f"{sorted(buckets)} -> {es['compiles']} compiles, LUT hit "
+                f"rate {es['lut_hit_rate']:.2f}, p50 "
+                f"{es['latency_ms_p50']:.1f} ms")
         else:
             # RQ end-to-end: built, searched, refreshed; refresh stays exact
             # (subspace matching) and recall survives the refresh.
@@ -170,6 +206,7 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
             f"best rq={best_rq:.3f}; residual distortion — pq={pq_d:.4f}, "
             f"best rq={best_rq_d:.4f}")
 
+    checks["registry_swept"] = swept == set(search.names())
     out(f"# ACCEPTANCE: {checks} -> "
         f"{'PASS' if all(checks.values()) else 'FAIL'}")
     return results, checks

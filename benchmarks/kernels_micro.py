@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import givens
+from repro import rotations
 from repro.kernels import ops, ref
 
 
@@ -27,7 +27,7 @@ def run(verbose=True):
     perm = np.random.RandomState(0).permutation(n)
     pi, pj = jnp.asarray(perm[: n // 2]), jnp.asarray(perm[n // 2:])
     theta = jax.random.normal(jax.random.fold_in(key, 1), (n // 2,))
-    want = givens.apply_pair_rotations(X, pi, pj, theta)
+    want = rotations.apply_pair_rotations(X, pi, pj, theta)
     got = ops.apply_pair_rotations(X, pi, pj, theta)
     ok = np.allclose(got, want, atol=1e-4)
     us = time_call(jax.jit(

@@ -57,6 +57,7 @@ def main() -> None:
         failures += [f"fig4/{k}" for k, v in checks.items() if not v]
 
     if want("ivf"):
+        # searcher-registry sweep: exact vs flat_adc vs ivf on one harness
         from benchmarks import ivf_recall_qps
         _res, checks = ivf_recall_qps.run(
             n=20_000 if args.fast else 100_000,

@@ -1,31 +1,30 @@
-"""ANN serving example: GCD-learned rotation deployed as a live IVF-PQ index.
+"""ANN serving example: GCD-learned rotation deployed behind search.Engine.
 
 The serving path is the paper's T(X) = φ(XR)Rᵀ deployed at production shape
-(repro.index):
-  * offline: learn (R, codebooks) with GCD, then build an IVF-PQ index —
-    k-means coarse lists over XR plus residual PQ codes in a block-aligned
-    CSR layout (~16× compression at D=16 uint8 codes on 64-dim f32 vectors,
-    before list padding);
-  * online: per query batch, probe the top-``nprobe`` lists and scan only
-    those (the Pallas ivf_adc kernel's job on TPU) — ~10–100× less scan
-    work than the flat ADC path at matched recall;
-  * continuously: after each GCD training step, ``refresh_rotation``
-    absorbs the rotation delta into centroids+codebooks in O(n²) — the
-    index stays servable between training steps with no corpus re-encode.
+through the unified retrieval subsystem (repro.search):
+  * offline: learn (R, codebooks) with GCD, then ``search.make("ivf")``
+    builds the IVF-PQ index — k-means coarse lists over XR plus residual
+    PQ codes in a block-aligned CSR layout;
+  * online: ``search.Engine`` serves ragged query batches — each batch is
+    bucketized to a padded shape, compiled once per (bucket, k, nprobe),
+    and repeated queries reuse their cached ADC LUTs;
+  * continuously: after each GCD training step the learner's RotationDelta
+    is fed to ``engine.refresh`` — centroids+codebooks absorb it in O(n²)
+    and the index stays servable with zero recompiles and no corpus
+    re-encode.
 
 Run:  PYTHONPATH=src python examples/serve_ann.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import givens
+from repro import rotations, search
 from repro.data import synthetic
-from repro.quant import PQConfig, opq
-from repro.index import ivf, maintain, search
+from repro.index import maintain
 from repro.metrics import recall_at_k
+from repro.quant import PQConfig, opq
 
 
 def main():
@@ -42,50 +41,64 @@ def main():
     print(f"rotation learned in {time.time()-t0:.1f}s "
           f"(distortion {float(trace[0]):.3f} → {float(trace[-1]):.3f})")
 
-    # --- build the IVF-PQ index on the learned rotation
-    cfg = ivf.IVFPQConfig(num_lists=L, pq=PQConfig(D, K), block_size=128)
+    # --- build the IVF backend on the learned rotation
+    cfg = search.SearchConfig(num_lists=L, subspaces=D, codewords=K,
+                              block_size=128, nprobe=32, train_size=16384)
+    searcher = search.make("ivf")
     t0 = time.time()
-    index = ivf.build(jax.random.PRNGKey(3), corpus, R, cfg, train_size=16384)
-    code_mib = index.codes.shape[0] * D / 2**20  # uint8-equivalent payload
-    print(f"index built in {time.time()-t0:.1f}s: {L} lists, "
-          f"cap {index.capacity} rows, codes ≈{code_mib:.0f} MiB "
-          f"({corpus.size*4/(index.capacity*D):.0f}× compression)")
+    state = searcher.build(jax.random.PRNGKey(3), corpus, R, cfg)
+    st = searcher.stats(state)
+    print(f"index built in {time.time()-t0:.1f}s: {st['num_lists']} lists, "
+          f"cap {st['capacity']} rows, codes ≈{st['memory_bytes']/2**20:.0f} MiB "
+          f"({st['compression']:.0f}× compression)")
 
-    # --- serve query batches at a few nprobe settings
-    exact = np.asarray(jnp.argsort(-(queries @ corpus.T), axis=1)[:, :10])
-    max_blocks = index.max_list_blocks()  # hoisted: keep host sync out of loop
+    # --- ground truth through the same registry: the exact backend
+    exact = search.make("exact")
+    exact_state = exact.build(key, corpus, R, cfg)
+    truth = np.asarray(exact.search(exact_state, queries, k=10).ids)
+
+    # --- serve ragged batches through the Engine at a few nprobe settings
     for nprobe in (8, 32):
-        res = search.search_fixed(index, queries, nprobe=nprobe, k=10,
-                                  max_blocks=max_blocks, use_kernel=False)
-        jax.block_until_ready(res.scores)
-        t0 = time.time()
-        for _ in range(3):
-            jax.block_until_ready(
-                search.search_fixed(index, queries, nprobe=nprobe, k=10,
-                                    max_blocks=max_blocks,
-                                    use_kernel=False).scores)
-        dt = (time.time() - t0) / 3
-        print(f"nprobe={nprobe:3d}: served 256 queries in {dt*1e3:.1f} ms "
-              f"({256/dt:.0f} qps), scanned {float(jnp.mean(res.scanned)):.0f}"
-              f"/{index.capacity} rows/query, "
-              f"recall@10 vs exact {recall_at_k(np.asarray(res.ids), exact):.3f}")
+        engine = search.Engine(searcher, state, k=10, nprobe=nprobe,
+                               min_bucket=32)
+        all_ids = []
+        for lo, hi in ((0, 96), (96, 153), (153, 256), (0, 256)):
+            all_ids.append(np.asarray(engine.search(queries[lo:hi]).ids))
+        es = engine.stats()
+        rec = recall_at_k(np.concatenate(all_ids[:3]), truth)
+        print(f"nprobe={nprobe:3d}: {es['requests']} ragged batches "
+              f"({es['queries']} queries) -> {es['compiles']} compiles, "
+              f"LUT hit rate {es['lut_hit_rate']:.2f}, "
+              f"p50 {es['latency_ms_p50']:.1f} ms, scanned "
+              f"{es['scanned_rows_mean']:.0f}/{st['capacity']} rows/query, "
+              f"recall@10 vs exact {rec:.3f}")
 
     # --- keep serving across a GCD training step: refresh, don't rebuild
-    def distortion_loss(Rm):
-        return index.quantizer.distortion(corpus[:8192] @ Rm)
+    engine = search.Engine(searcher, state, k=10, nprobe=32, min_bucket=32)
+    engine.search(queries)  # warm the executable cache
 
-    G = jax.grad(distortion_loss)(index.R)
-    jax.block_until_ready(maintain.subspace_gcd_step(index, G, 2e-3)[0].R)
-    t0 = time.time()  # timed second call: refresh cost, not jit compile
-    index2, (pi, pj, theta) = maintain.subspace_gcd_step(index, G, 2e-3)
-    jax.block_until_ready(index2.R)
-    print(f"refresh_rotation after GCD step: {time.time()-t0:.3f}s, "
-          f"orthogonality drift {float(givens.orthogonality_error(index2.R)):.2e}, "
+    def distortion_loss(Rm):
+        return state.index.quantizer.distortion(corpus[:8192] @ Rm)
+
+    G = jax.grad(distortion_loss)(state.index.R)
+    learner = rotations.make("subspace_gcd", sub=state.index.quantizer.sub)
+    _, delta = learner.update(learner.init_from(state.index.R), G, 2e-3,
+                              jax.random.PRNGKey(4))
+    # warm the refresh jit on a throwaway state: time refresh cost, not compile
+    jax.block_until_ready(searcher.refresh(engine.state, delta).index.R)
+    t0 = time.time()
+    engine.refresh(delta)
+    jax.block_until_ready(engine.state.index.R)
+    dt = time.time() - t0
+    res = engine.search(queries)
+    es = engine.stats()
+    print(f"engine.refresh after GCD step: {dt:.3f}s, orthogonality drift "
+          f"{float(rotations.orthogonality_error(engine.state.index.R)):.2e}, "
           f"code mismatch vs full re-encode "
-          f"{float(maintain.refresh_mismatch(index2, corpus))*100:.2f}%")
-    res = search.search(index2, queries, nprobe=32, k=10, use_kernel=False)
+          f"{float(maintain.refresh_mismatch(engine.state.index, corpus))*100:.2f}%, "
+          f"compiles after refresh: {es['compiles']} (unchanged)")
     print(f"post-refresh recall@10 vs exact: "
-          f"{recall_at_k(np.asarray(res.ids), exact):.3f}")
+          f"{recall_at_k(np.asarray(res.ids), truth):.3f}")
 
 
 if __name__ == "__main__":

@@ -9,12 +9,18 @@ migration table.
 Attribute access is lazy (PEP 562): ``repro.rotations`` imports
 ``repro.core.givens``, so an eager re-export here would cycle.
 """
+import warnings
+
 _NAMES = ("cayley", "init", "inverse_cayley", "skew_from_params",
           "stable_solve", "CayleySGD", "CayleyState")
 
 
 def __getattr__(name):
     if name in _NAMES:
+        warnings.warn(
+            f"repro.core.cayley.{name} is deprecated; use "
+            "repro.rotations.cayley (or rotations.make('cayley_sgd')) — see "
+            "the README migration table", DeprecationWarning, stacklevel=2)
         from repro.rotations import cayley as _impl
         return getattr(_impl, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

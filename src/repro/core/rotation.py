@@ -14,6 +14,7 @@ module-level imports here would cycle).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 
@@ -21,9 +22,17 @@ _FORWARDED = {"GCD": "gcd", "GCDState": "gcd", "RotationState": "gcd",
               "METHODS": "gcd"}
 
 
+def _warn(what: str) -> None:
+    warnings.warn(
+        f"repro.core.rotation.{what} is deprecated; use the repro.rotations "
+        "learner registry (rotations.make('gcd', ...)) — see the README "
+        "migration table", DeprecationWarning, stacklevel=3)
+
+
 def __getattr__(name):
     if name in _FORWARDED:
         import importlib
+        _warn(name)
         mod = importlib.import_module(f"repro.rotations.{_FORWARDED[name]}")
         return getattr(mod, "GCDState" if name == "RotationState" else name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
@@ -36,17 +45,25 @@ def _learner(method: str, preconditioner: str, sweeps: int):
 
 
 def init(n: int, dtype=None):
+    _warn("init")
     import jax.numpy as jnp
     return _learner("greedy", "none", 16).init(n, dtype or jnp.float32)
 
 
 def init_from(R: jax.Array):
+    _warn("init_from")
     return _learner("greedy", "none", 16).init_from(R)
 
 
 @functools.partial(
     jax.jit, static_argnames=("method", "preconditioner", "sweeps")
 )
+def _update_jit(state, G, lr, key, *, method, preconditioner, sweeps):
+    new_state, _delta = _learner(method, preconditioner, sweeps).update(
+        state, G, lr, key)
+    return new_state
+
+
 def update(
     state,
     G: jax.Array,
@@ -58,9 +75,9 @@ def update(
     sweeps: int = 16,
 ):
     """One GCD step (old functional entry point; see rotations.GCD.update)."""
-    new_state, _delta = _learner(method, preconditioner, sweeps).update(
-        state, G, lr, key)
-    return new_state
+    _warn("update")
+    return _update_jit(state, G, lr, key, method=method,
+                       preconditioner=preconditioner, sweeps=sweeps)
 
 
 def gcd_step(
@@ -77,6 +94,7 @@ def gcd_step(
     sweeps: int = 16,
 ):
     """Array-level GCD step (old optimizer hook). Returns (R, accum, accum2)."""
+    _warn("gcd_step")
     from repro.rotations.gcd import GCDState
     state = GCDState(R=R, step=step, accum=accum, accum2=accum2)
     new_state, _delta = _learner(method, preconditioner, sweeps).update(

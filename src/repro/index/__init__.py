@@ -13,7 +13,19 @@ Turns the paper's T(X) = φ(XR)Rᵀ into a production-shaped ANN index, with
             training step into a live index without re-encoding the corpus
             (scheme-agnostic via Quantizer.rotate)
 
-Quick start::
+This package is the IVF *mechanism* layer; the serving front door is
+``repro.search`` — a Searcher registry (``exact`` / ``flat_adc`` / ``ivf``)
+plus a batching ``Engine`` — and new retrieval code should go through it::
+
+    from repro import search
+    searcher = search.make("ivf")
+    state = searcher.build(key, X, R, search.SearchConfig(num_lists=256,
+                                                          subspaces=16))
+    res = searcher.search(state, Q, k=10)            # res.scores, res.ids
+    state = searcher.refresh(state, delta)           # after a GCD step
+
+The free functions below remain supported (the ``ivf``/``flat_adc``
+backends dispatch to them)::
 
     from repro import quant
     from repro.index import ivf, search, maintain
@@ -22,7 +34,8 @@ Quick start::
     res = search.search(index, Q, nprobe=16, k=10)   # res.scores, res.ids
     index = maintain.refresh_rotation(index, pi, pj, theta)  # after a GCD step
 
-See README.md §Index serving for the layout and the recall/nprobe trade-off.
+See README.md §Index serving for the layout and the recall/nprobe
+trade-off, and §Serving engine for the registry/Engine migration table.
 """
 from repro.index import ivf, maintain, search  # noqa: F401
 from repro.index.ivf import IVFPQConfig, IVFPQIndex  # noqa: F401

@@ -24,6 +24,12 @@ flat scan — the recall/work trade-off is entirely in ``nprobe``.
 Device sharding: under an active mesh the candidate axis is annotated with
 the ``ivf`` rule table (sharding/rules.py) so XLA splits list scanning over
 the "model" axis while the query batch stays data-parallel.
+
+This module is the IVF *mechanism*; the serving front door is
+``repro.search`` (Searcher registry + batching Engine), whose ``ivf`` and
+``flat_adc`` backends dispatch here. The ``*_prepared`` variants take the
+rotated queries and ADC LUTs as explicit operands so the Engine can cache
+per-query LUTs across requests.
 """
 from __future__ import annotations
 
@@ -44,6 +50,28 @@ class SearchResult(NamedTuple):
     scores: jax.Array   # (b, k) approximate inner products, descending
     ids: jax.Array      # (b, k) item ids (−1 where fewer than k candidates)
     scanned: jax.Array  # (b,) CSR rows scanned per query (scan-work metric)
+
+
+def topk_padded(scores: jax.Array, cand_ids: jax.Array,
+                k: int) -> tuple[jax.Array, jax.Array]:
+    """The one top-k + padding contract every retrieval path shares.
+
+    ``cand_ids`` is (C,) or (b, C); masked candidates must already score
+    −inf. Returns (b, k) scores/ids padded with (−inf, −1) when k > C or
+    when fewer than k finite candidates survive.
+    """
+    b, C = scores.shape
+    if cand_ids.ndim == 1:
+        cand_ids = jnp.broadcast_to(cand_ids[None, :], (b, C))
+    kk = min(k, C)
+    top_scores, pos = jax.lax.top_k(scores, kk)
+    top_ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
+    if kk < k:
+        top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),
+                             constant_values=NEG_INF)
+        top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return top_scores, top_ids
 
 
 def probe(index: IVFPQIndex, QR: jax.Array,
@@ -74,19 +102,15 @@ def candidate_blocks(index: IVFPQIndex, lists: jax.Array,
     return jnp.where(valid, blk, index.sentinel_block).astype(jnp.int32), valid
 
 
-@functools.partial(
-    jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
-)
-def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
-                 max_blocks: int, use_kernel: bool = True) -> SearchResult:
-    """Jit-friendly core: ``max_blocks`` (the per-list probe window in tiles,
-    ≥ index.max_list_blocks() for exactness) is passed statically."""
-    b = Q.shape[0]
+def _search_core(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+                 nprobe: int, k: int, max_blocks: int,
+                 use_kernel: bool) -> SearchResult:
+    """Probe + scan + top-k over already-rotated queries and built LUTs."""
+    b = QR.shape[0]
     bs = index.block_size
-    QR = sh.constrain(Q @ index.R, ("act_batch", None), sh.IVF_RULES)
+    QR = sh.constrain(QR, ("act_batch", None), sh.IVF_RULES)
 
     lists, cscores = probe(index, QR, nprobe)
-    lut = index.quantizer.adc_tables(QR)                       # (b, Dp, K)
 
     blk, valid = candidate_blocks(index, lists, max_blocks)    # (b, p, B)
     S = b * nprobe * max_blocks
@@ -108,18 +132,39 @@ def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
         scores.reshape(b, -1), ("act_batch", "ivf_cand"), sh.IVF_RULES
     )
 
-    # k can exceed the candidate pool (small nprobe, large k): clamp the
-    # top_k and pad back out to the promised (b, k) with (−inf, −1).
-    kk = min(k, scores.shape[1])
-    top_scores, pos = jax.lax.top_k(scores, kk)
-    top_ids = jnp.take_along_axis(cand_ids.reshape(b, -1), pos, axis=1)
-    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
-    if kk < k:
-        top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),
-                             constant_values=NEG_INF)
-        top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    # k can exceed the candidate pool (small nprobe, large k): the shared
+    # contract clamps the top_k and pads back out to (b, k) with (−inf, −1)
+    top_scores, top_ids = topk_padded(scores, cand_ids.reshape(b, -1), k)
     scanned = jnp.sum(valid.reshape(b, -1), axis=1) * bs
     return SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
+)
+def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
+                 max_blocks: int, use_kernel: bool = True) -> SearchResult:
+    """Jit-friendly core: ``max_blocks`` (the per-list probe window in tiles,
+    ≥ index.max_list_blocks() for exactness) is passed statically."""
+    # constrain before the LUT build so the (b, Dp, K) tables inherit the
+    # act_batch annotation at their producer under an active mesh
+    QR = sh.constrain(Q @ index.R, ("act_batch", None), sh.IVF_RULES)
+    lut = index.quantizer.adc_tables(QR)                       # (b, Dp, K)
+    return _search_core(index, QR, lut, nprobe=nprobe, k=k,
+                        max_blocks=max_blocks, use_kernel=use_kernel)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
+)
+def search_prepared(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+                    nprobe: int, k: int = 10, max_blocks: int,
+                    use_kernel: bool = True) -> SearchResult:
+    """``search_fixed`` with the rotate + LUT-build steps hoisted out: the
+    caller supplies ``QR = Q·R`` and ``lut = quantizer.adc_tables(QR)``.
+    The ``search.Engine`` uses this to reuse cached per-query LUTs."""
+    return _search_core(index, QR, lut, nprobe=nprobe, k=k,
+                        max_blocks=max_blocks, use_kernel=use_kernel)
 
 
 def search(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
@@ -144,6 +189,13 @@ def flat_adc_scores(index: IVFPQIndex, Q: jax.Array, *,
     scan-work baseline for the recall/QPS benchmark."""
     QR = Q @ index.R
     lut = index.quantizer.adc_tables(QR)
+    return flat_adc_prepared(index, QR, lut, use_kernel=use_kernel)
+
+
+def flat_adc_prepared(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+                      use_kernel: bool = False) -> tuple[jax.Array, jax.Array]:
+    """``flat_adc_scores`` with rotate + LUT-build hoisted out (Engine LUT
+    cache entry point, mirroring ``search_prepared``)."""
     res = kops.adc_lookup(lut, index.codes, use_kernel=use_kernel)  # (b, cap)
     # coarse term per row: row r belongs to list l iff offsets[l] ≤ r < offsets[l+1]
     row_list = jnp.searchsorted(

@@ -14,6 +14,11 @@ algorithm a first-class, swappable citizen behind one optax-style protocol
   procrustes  SVD learner: projected SGD ``update`` + closed-form ``solve``
   registry    ``make`` / ``names`` / ``RotationConfig`` / ``from_config``
 
+The rotation-matrix utilities examples and benchmarks need alongside the
+learners (``random_rotation``, ``orthogonality_error``,
+``apply_pair_rotations``, ``project_to_so_n``) are re-exported here from
+``core.givens``, so consumer code imports one package.
+
 Consumers: ``training.optimizer`` routes every manifold leaf through the
 configured learner (``OptimizerConfig.rotation``), ``quant.opq`` sweeps
 learners in the alternating minimization, ``index.maintain`` consumes
@@ -21,6 +26,12 @@ GivensDeltas to refresh a live IVF index, and the fig2a/fig2bc/table1/fig4
 benchmarks sweep ``names()``. ``core.rotation`` and ``core.cayley`` remain
 as compatibility shims — see README.md for the migration table.
 """
+from repro.core.givens import (  # noqa: F401  (canonical rotation utilities)
+    apply_pair_rotations,
+    orthogonality_error,
+    project_to_so_n,
+    random_rotation,
+)
 from repro.rotations import base, cayley, gcd, procrustes, registry  # noqa: F401
 from repro.rotations.base import (  # noqa: F401
     DenseDelta,

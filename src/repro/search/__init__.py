@@ -1,0 +1,47 @@
+"""repro.search — the unified retrieval subsystem (Searcher registry + Engine).
+
+The paper's end-to-end value proposition is *serving*: T(X) = φ(XR)Rᵀ
+deployed as a continuously-refreshed compressed index. This package is the
+one front door for every retrieval call in the repo:
+
+  base      Searcher protocol, SearchConfig, SearchResult (+ the shared
+            top-k/padding contract: ids −1 / scores −inf past the pool)
+  exact     tiled brute-force MIPS — the recall oracle
+  flat      flat ADC over PQ/RQ codes (kernels/adc_lookup full scan)
+  ivf       probe + fused selected-block Pallas scan (index/search.py)
+  registry  ``make`` / ``names`` — the backend string registry
+  engine    ``Engine`` — batching front-end: bucketized ragged batches,
+            per-(bucket, k, nprobe) compile cache, per-query ADC LUT
+            cache, buffer donation, latency/scan-work stats, live
+            rotation refresh between batches
+
+Quick start::
+
+    from repro import search
+    searcher = search.make("ivf")                     # or "exact", "flat_adc"
+    state = searcher.build(key, corpus, R, search.SearchConfig(
+        num_lists=256, subspaces=16, codewords=256, nprobe=16))
+    res = searcher.search(state, Q, k=10)             # res.scores, res.ids
+    engine = search.Engine(searcher, state, k=10)     # ragged serving
+    res = engine.search(Q_any_size)
+    engine.refresh(delta)                             # after a GCD step
+
+Consumers: ``examples/serve_ann.py`` (Engine serving loop),
+``examples/quickstart.py`` / ``examples/gnn_index.py`` (registry recall
+demos), ``benchmarks/ivf_recall_qps.py`` (backend sweep on one harness).
+``index.search``'s free functions remain as the IVF mechanism layer this
+package dispatches to. See README.md §Serving engine for the migration
+table.
+"""
+from repro.search import base, engine, exact, flat, ivf, registry  # noqa: F401
+from repro.search.base import (  # noqa: F401
+    SearchConfig,
+    Searcher,
+    SearchResult,
+    topk_padded,
+)
+from repro.search.engine import Engine  # noqa: F401
+from repro.search.exact import Exact, ExactState  # noqa: F401
+from repro.search.flat import ADCState, FlatADC  # noqa: F401
+from repro.search.ivf import IVF  # noqa: F401
+from repro.search.registry import make, names  # noqa: F401

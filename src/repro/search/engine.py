@@ -1,0 +1,304 @@
+"""search.Engine — the batching, compile-cached serving front-end.
+
+Production query traffic is ragged: request batches arrive at arbitrary
+sizes, and naive ``jax.jit`` recompiles the whole search pipeline for every
+new batch shape. The Engine sits between callers and a Searcher and makes
+the hot path shape-stable:
+
+  * **bucketizing** — a (b, n) batch is zero-padded up to the next
+    power-of-two bucket (≥ ``min_bucket``), so the universe of compiled
+    shapes is logarithmic in the max batch size; results are sliced back
+    to b rows before returning. Batches beyond ``max_bucket`` are chunked.
+  * **compile cache** — one executable per (bucket, k, nprobe) triple,
+    built on first use and reused forever after: ``stats()["compiles"]``
+    counts actual traces, and the cache-hit test in tests/test_search.py
+    pins "at most one compile per shape". A ``refresh`` swaps the state
+    *under* the cached executables (same pytree structure, same statics —
+    guaranteed by the refresh contract), so a live rotation update costs
+    zero recompiles.
+  * **per-query ADC LUT cache** — for quantized backends the (code_width,
+    K) LUT is the per-query setup cost; hot/repeated queries reuse their
+    cached LUT (keyed by raw query bytes, LRU-evicted, invalidated on
+    refresh since LUTs depend on R) and only cache misses pay
+    ``quantizer.adc_tables``. Served through the backend's
+    ``search_prepared`` capability; backends without it (``exact``) take
+    the plain path.
+  * **buffer donation** — on accelerator backends the padded query/LUT
+    buffers are donated to the executable, so serving steady-state holds
+    one in-flight copy instead of two (donation is skipped on CPU, where
+    XLA would warn and ignore it).
+  * **serving stats** — per-request latency, batch/bucket, scan work, LUT
+    hit rate, and compile counts, aggregated by ``stats()``.
+  * **live refresh** — ``engine.refresh(delta)`` absorbs a rotation-learner
+    step between batches: training and serving share the one
+    ``RotationDelta`` path end to end.
+
+Typical loop::
+
+    engine = search.Engine(search.make("ivf"), state, k=10, nprobe=16)
+    for batch in requests:
+        res = engine.search(batch)          # ragged sizes welcome
+    engine.refresh(delta)                    # after a GCD training step
+    print(engine.stats())
+"""
+from __future__ import annotations
+
+import collections
+import inspect
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import rotations
+from repro.search.base import SearchResult, Searcher
+
+
+class Engine:
+    """Batching serving front-end over one Searcher + state (not thread-safe;
+    one Engine per serving thread).
+
+    ``lut_cache_rows`` bounds the LUT cache by *entries*, each a
+    (code_width, K) f32 row on the host — 16 KiB at D=16/K=256 PQ, double
+    at depth-2 RQ — so the default 8192 holds up to ~128–256 MiB per
+    Engine at production configs. Size it to the host budget. The cache
+    trades one synchronous device→host LUT copy per cold batch for free
+    reuse on repeats; for purely streaming traffic with no repeated
+    queries, set ``lut_cache_rows=0`` to disable it (and the prepared
+    path) and serve fully on-device.
+    """
+
+    def __init__(self, searcher: Searcher, state: Any, *, k: int = 10,
+                 nprobe: int | None = None, min_bucket: int = 8,
+                 max_bucket: int = 4096, lut_cache_rows: int = 8192,
+                 donate: bool | None = None, history: int = 512):
+        self.searcher = searcher
+        if hasattr(searcher, "prepare_state"):
+            # bake derived statics now: inside the compiled executables the
+            # state arrives as a traced pytree and cannot be host-synced
+            state = searcher.prepare_state(state)
+        self.state = state
+        self.k = k
+        self.nprobe = nprobe
+        self.min_bucket = max(1, min_bucket)
+        self.max_bucket = max(self.min_bucket, max_bucket)
+        self.lut_cache_rows = lut_cache_rows
+        self.history = history
+        self.donate = (jax.default_backend() != "cpu"
+                       if donate is None else donate)
+
+        self._takes_nprobe = "nprobe" in inspect.signature(
+            searcher.search).parameters
+        if nprobe is not None and not self._takes_nprobe:
+            raise ValueError(
+                f"{type(searcher).__name__} does not take nprobe — an "
+                "nprobe setting on this Engine would be silently ignored")
+        self._prepared_ok = lut_cache_rows > 0 and all(
+            hasattr(searcher, m)
+            for m in ("rotate_queries", "luts", "search_prepared"))
+        self._compiled: dict[tuple, Any] = {}
+        self._luts: collections.OrderedDict[bytes, np.ndarray] = \
+            collections.OrderedDict()
+        self.requests: list[dict] = []
+        self.counters = collections.Counter()
+
+    # -- shape bucketing ---------------------------------------------------
+    def _bucket(self, b: int) -> int:
+        bucket = self.min_bucket
+        while bucket < b:
+            bucket *= 2
+        # chunking guarantees b <= max_bucket, so the clamp still covers b
+        # when max_bucket is not itself a power of two
+        return min(bucket, self.max_bucket)
+
+    # -- compile cache -----------------------------------------------------
+    def _nprobe_key(self, nprobe: int | None) -> int | None:
+        """The *effective* probe width: clamped by the backend where it can
+        be (ivf caps at num_lists), so oversized requests share one
+        executable and request records log what was actually probed."""
+        if not self._takes_nprobe:
+            if nprobe is not None:
+                raise ValueError(
+                    f"{type(self.searcher).__name__} does not take nprobe")
+            return None
+        npb = self.nprobe if nprobe is None else nprobe
+        if npb is not None and npb < 1:
+            raise ValueError(f"nprobe must be >= 1, got {npb}")
+        if hasattr(self.searcher, "effective_nprobe"):
+            npb = self.searcher.effective_nprobe(self.state, npb)
+        return npb
+
+    def _plain_fn(self, bucket: int, k: int, nprobe: int | None):
+        key = ("plain", bucket, k, nprobe)
+        if key not in self._compiled:
+            searcher = self.searcher
+            kw = {} if nprobe is None else {"nprobe": nprobe}
+
+            def fn(state, Q):
+                self.counters["compiles"] += 1  # traced once per key
+                return searcher.search(state, Q, k=k, **kw)
+
+            self._compiled[key] = jax.jit(
+                fn, donate_argnums=(1,) if self.donate else ())
+        return self._compiled[key]
+
+    def _prepared_fn(self, bucket: int, k: int, nprobe: int | None):
+        key = ("prepared", bucket, k, nprobe)
+        if key not in self._compiled:
+            searcher = self.searcher
+            kw = {} if nprobe is None else {"nprobe": nprobe}
+
+            def fn(state, QR, lut):
+                self.counters["compiles"] += 1  # traced once per key
+                return searcher.search_prepared(state, QR, lut, k=k, **kw)
+
+            self._compiled[key] = jax.jit(
+                fn, donate_argnums=(1, 2) if self.donate else ())
+        return self._compiled[key]
+
+    # -- per-query LUT cache -----------------------------------------------
+    def _gather_luts(self, Qnp: np.ndarray,
+                     QR: jax.Array) -> tuple[np.ndarray, int, int]:
+        """LUT rows for every query, cached by raw query bytes. ``QR`` is
+        the already-rotated batch (rows sliced for the misses, so the
+        rotation runs once per request). Returns (lut (b, Dp, K), hits,
+        misses) — both counted per served row; duplicate rows inside one
+        batch pay ``adc_tables`` only once."""
+        keys = [row.tobytes() for row in Qnp]
+        hits = 0
+        need, seen = [], set()
+        for i, kb in enumerate(keys):
+            if kb in self._luts:
+                hits += 1
+                self._luts.move_to_end(kb)  # MRU now: never evicted below
+            elif kb not in seen:
+                seen.add(kb)
+                need.append(i)
+        misses = len(keys) - hits
+        if misses == len(keys) and len(need) == len(keys):
+            # all-miss, all-distinct: serve the device LUTs directly (skip
+            # the host round-trip); the host copy below only feeds the cache
+            lut_dev = self.searcher.luts(self.state, QR)
+            lut_host = np.asarray(lut_dev)
+            for i, kb in enumerate(keys):
+                self._luts[kb] = lut_host[i]
+            self._evict()
+            return lut_dev, hits, misses
+        if need:
+            lut_m = np.asarray(self.searcher.luts(
+                self.state, QR[np.asarray(need)]))
+            for j, i in enumerate(need):
+                self._luts[keys[i]] = lut_m[j]
+        # read every row BEFORE evicting: a batch wider than the cache (or
+        # one whose misses push out nothing-but-this-batch entries) must
+        # still assemble — eviction only trims for the NEXT request
+        rows = np.stack([self._luts[kb] for kb in keys])
+        self._evict()
+        return rows, hits, misses
+
+    def _evict(self) -> None:
+        while len(self._luts) > self.lut_cache_rows:
+            self._luts.popitem(last=False)
+
+    # -- serving -----------------------------------------------------------
+    def search(self, Q: jax.Array, *, k: int | None = None,
+               nprobe: int | None = None) -> SearchResult:
+        """Serve one (b, n) query batch (any b ≥ 1) at top-``k``."""
+        b = Q.shape[0]
+        if b == 0:
+            raise ValueError("empty query batch")
+        if b > self.max_bucket:  # chunk oversized requests
+            parts = [self.search(Q[i:i + self.max_bucket], k=k,
+                                 nprobe=nprobe)
+                     for i in range(0, b, self.max_bucket)]
+            return SearchResult(
+                scores=jnp.concatenate([p.scores for p in parts]),
+                ids=jnp.concatenate([p.ids for p in parts]),
+                scanned=jnp.concatenate([p.scanned for p in parts]))
+
+        k = self.k if k is None else k
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        npb = self._nprobe_key(nprobe)
+        bucket = self._bucket(b)
+        pad = bucket - b
+        t0 = time.perf_counter()
+        compiled_before = self.counters["compiles"]
+
+        lut_hits = lut_misses = 0
+        if self._prepared_ok:
+            # the LUT cache keys on raw query bytes — the one place the
+            # batch must visit the host (dtype preserved, matching the
+            # plain path and direct searcher calls); rotation reads the
+            # original array, so a device-resident Q is not re-uploaded
+            Qnp = np.asarray(Q)
+            QR = self.searcher.rotate_queries(self.state, Q)
+            lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
+            QR = jnp.pad(QR, ((0, pad), (0, 0)))
+            if isinstance(lut, np.ndarray):    # assembled from cached rows
+                lut = jnp.asarray(np.pad(lut, ((0, pad), (0, 0), (0, 0))))
+            else:                              # all-miss: still on device
+                lut = jnp.pad(lut, ((0, pad), (0, 0), (0, 0)))
+            res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
+        else:
+            # plain path: never leaves the device
+            Qp = jnp.pad(jnp.asarray(Q), ((0, pad), (0, 0)))
+            res = self._plain_fn(bucket, k, npb)(self.state, Qp)
+
+        res = SearchResult(scores=res.scores[:b], ids=res.ids[:b],
+                           scanned=res.scanned[:b])
+        jax.block_until_ready(res)
+        latency = time.perf_counter() - t0
+
+        self.counters.update(requests=1, queries=b, lut_hits=lut_hits,
+                             lut_misses=lut_misses)
+        self.requests.append(dict(
+            batch=b, bucket=bucket, k=k, nprobe=npb,
+            latency_ms=latency * 1e3,
+            scanned_rows=float(np.mean(np.asarray(res.scanned))),
+            lut_hits=lut_hits, lut_misses=lut_misses,
+            compiled=self.counters["compiles"] > compiled_before))
+        if len(self.requests) > self.history:
+            del self.requests[: len(self.requests) - self.history]
+        return res
+
+    # -- live rotation refresh --------------------------------------------
+    def refresh(self, delta: rotations.RotationDelta) -> None:
+        """Absorb a rotation-learner step between batches. Cached LUTs are
+        invalidated (they depend on R); compiled executables survive (the
+        state pytree's structure and statics are refresh-invariant)."""
+        self.state = self.searcher.refresh(self.state, delta)
+        self._luts.clear()
+        self.counters["refreshes"] += 1
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate serving stats + the backend's static facts.
+
+        Counter keys (requests/queries/compiles/lut_*) are lifetime totals;
+        the latency/scanned aggregates cover the retained request window
+        (``window_requests``, at most ``history``)."""
+        lat = [r["latency_ms"] for r in self.requests]
+        looked = self.counters["lut_hits"] + self.counters["lut_misses"]
+        return dict(
+            requests=self.counters["requests"],
+            queries=self.counters["queries"],
+            compiles=self.counters["compiles"],
+            executables=len(self._compiled),
+            refreshes=self.counters["refreshes"],
+            lut_hits=self.counters["lut_hits"],
+            lut_misses=self.counters["lut_misses"],
+            lut_hit_rate=(self.counters["lut_hits"] / looked
+                          if looked else 0.0),
+            lut_cached_rows=len(self._luts),
+            window_requests=len(self.requests),
+            latency_ms_mean=float(np.mean(lat)) if lat else 0.0,
+            latency_ms_p50=float(np.median(lat)) if lat else 0.0,
+            latency_ms_max=float(np.max(lat)) if lat else 0.0,
+            scanned_rows_mean=float(np.mean(
+                [r["scanned_rows"] for r in self.requests]))
+            if self.requests else 0.0,
+            searcher=self.searcher.stats(self.state),
+        )

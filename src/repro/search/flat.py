@@ -1,0 +1,171 @@
+"""Flat-ADC searcher: full PQ/RQ scan via the shared ADC kernels.
+
+Scores every CSR row of an IVF-PQ/RQ index (coarse term + residual LUT
+sum, ``kernels/adc_lookup``) — the quantized-but-unprobed middle point of
+the registry: exact's quality ceiling is its score quantization, ``ivf``'s
+additional loss on top is probing. Built with ``num_lists=1`` it is a pure
+flat ADC scan; built with (or attached to, via ``attach``) a multi-list
+index it scans the identical codes the ``ivf`` backend probes, which is
+what makes "recall@10 vs flat" a pure measure of ``nprobe`` — the
+backend-parity regression in tests/test_search.py pins ``ivf`` at
+``nprobe = num_lists`` to this backend's exact output.
+
+``ADCState`` is shared with the ``ivf`` backend: same index pytree, same
+static serving knobs, so one build can serve both backends and ``refresh``
+(``maintain.refresh_delta`` — disjoint GivensDelta only) behaves
+identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import rotations
+from repro.index import maintain
+from repro.index import ivf as index_ivf
+from repro.index import search as index_search
+from repro.index.ivf import IVFPQIndex
+from repro.search.base import SearchConfig, SearchResult, topk_padded
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ADCState:
+    """Quantized-backend state: the servable index + static serving knobs.
+
+    ``nprobe``/``max_blocks`` are read by the ``ivf`` backend only (the
+    probe width default and the static probe-window size); ``flat_adc``
+    scans everything. ``max_blocks = -1`` means "derive from the index at
+    search time" — ``attach``/``build`` bake the concrete value so the
+    serving hot path never host-syncs, but a directly-constructed
+    ``ADCState(index=...)`` still searches exactly instead of silently
+    truncating probed lists.
+    """
+
+    index: IVFPQIndex
+    nprobe: int = dataclasses.field(default=8, metadata={"static": True})
+    max_blocks: int = dataclasses.field(default=-1, metadata={"static": True})
+    use_kernel: bool = dataclasses.field(
+        default=False, metadata={"static": True})
+
+
+def _adc_stats(name: str, state: ADCState) -> dict:
+    index = state.index
+    live = int(np.sum(np.asarray(index.ids) >= 0))
+    code_bytes = int(index.codes.shape[1] * index.codes.dtype.itemsize)
+    return dict(
+        backend=name,
+        rows=live,
+        capacity=index.capacity,
+        dim=index.dim,
+        num_lists=index.num_lists,
+        code_bytes_per_row=code_bytes,
+        compression=float(index.dim * 4 / code_bytes),
+        memory_bytes=int(index.codes.size * index.codes.dtype.itemsize),
+        use_kernel=state.use_kernel,
+    )
+
+
+def _refresh(state: ADCState, delta: rotations.RotationDelta) -> ADCState:
+    return dataclasses.replace(
+        state, index=maintain.refresh_delta(state.index, delta))
+
+
+def _rotate_queries(state: ADCState, Q: jax.Array) -> jax.Array:
+    """Engine capability shared by both quantized backends: Q·R."""
+    return Q @ state.index.R
+
+
+def _luts(state: ADCState, QR: jax.Array) -> jax.Array:
+    """Engine capability shared by both quantized backends: per-query ADC
+    LUTs over the residual quantizer."""
+    return state.index.quantizer.adc_tables(QR)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _flat_search(state: ADCState, Q: jax.Array, k: int) -> SearchResult:
+    QR = Q @ state.index.R
+    lut = state.index.quantizer.adc_tables(QR)
+    return _flat_topk(state, QR, lut, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _flat_prepared(state: ADCState, QR: jax.Array, lut: jax.Array,
+                   k: int) -> SearchResult:
+    return _flat_topk(state, QR, lut, k)
+
+
+def _flat_topk(state: ADCState, QR: jax.Array, lut: jax.Array,
+               k: int) -> SearchResult:
+    scores, cand_ids = index_search.flat_adc_prepared(
+        state.index, QR, lut, use_kernel=state.use_kernel)
+    top_scores, top_ids = topk_padded(scores, cand_ids, k)
+    scanned = jnp.full((QR.shape[0],), state.index.capacity, jnp.int32)
+    return SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatADC:
+    """Registry backend ``"flat_adc"`` (see module docstring)."""
+
+    name: ClassVar[str] = "flat_adc"
+
+    def build(self, key: jax.Array, corpus: jax.Array, R: jax.Array,
+              cfg: SearchConfig) -> ADCState:
+        index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
+                                train_size=cfg.train_size)
+        return self.attach(index, use_kernel=cfg.use_kernel)
+
+    @staticmethod
+    def attach(index: IVFPQIndex, *, use_kernel: bool = False) -> ADCState:
+        """State over an existing index — flat-scan the very codes another
+        backend probes (the parity-test and benchmark-sharing entry)."""
+        return ADCState(index=index, use_kernel=use_kernel,
+                        max_blocks=index.max_list_blocks())
+
+    @staticmethod
+    def from_quantizer(R: jax.Array, quantizer, corpus: jax.Array, *,
+                       block_size: int = 128,
+                       use_kernel: bool = False) -> ADCState:
+        """Serve a *pre-fit* quantizer (e.g. the PQ that OPQ's alternating
+        minimization learned jointly with R) without refitting: the corpus
+        is encoded as ``quantizer.encode(corpus @ R)`` under a single
+        zero-centroid coarse list, so the served codes are exactly the
+        quantizer's own."""
+        from repro import quant
+        XR = jnp.asarray(corpus) @ jnp.asarray(R).astype(corpus.dtype)
+        coarse = quant.VQ(centroids=jnp.zeros((1, XR.shape[1]), XR.dtype))
+        list_ids, codes = index_ivf.encode(XR, coarse, quantizer)
+        ids = jnp.arange(XR.shape[0], dtype=jnp.int32)
+        index = index_ivf.pack(R, coarse, quantizer, codes, list_ids, ids,
+                               block_size=block_size)
+        return FlatADC.attach(index, use_kernel=use_kernel)
+
+    def search(self, state: ADCState, Q: jax.Array, *,
+               k: int = 10) -> SearchResult:
+        return _flat_search(state, Q, k)
+
+    # -- Engine LUT-cache capabilities -------------------------------------
+    def rotate_queries(self, state: ADCState, Q: jax.Array) -> jax.Array:
+        return _rotate_queries(state, Q)
+
+    def luts(self, state: ADCState, QR: jax.Array) -> jax.Array:
+        return _luts(state, QR)
+
+    def search_prepared(self, state: ADCState, QR: jax.Array,
+                        lut: jax.Array, *, k: int = 10) -> SearchResult:
+        return _flat_prepared(state, QR, lut, k)
+
+    def refresh(self, state: ADCState,
+                delta: rotations.RotationDelta) -> ADCState:
+        return _refresh(state, delta)
+
+    def stats(self, state: ADCState) -> dict:
+        st = _adc_stats(self.name, state)
+        st["scan_rows_per_query"] = st["capacity"]
+        return st

@@ -1,0 +1,51 @@
+"""The searcher registry — single source of truth for retrieval backends.
+
+Before this package the repo's three query paths were three disconnected
+idioms: free functions in ``index/search.py`` (IVF), ``flat_adc_scores``
+(flat ADC), and hand-rolled ``Q @ corpus.T`` scans duplicated across
+examples and benchmarks. Now every retrieval call resolves a spec string:
+
+    search.make("exact")       # tiled brute force — the recall oracle
+    search.make("flat_adc")    # PQ/RQ full scan via kernels/adc_lookup
+    search.make("ivf")         # probe + fused selected-block Pallas scan
+
+``names()`` is what benchmarks sweep (``benchmarks/ivf_recall_qps.py``
+runs all backends on one harness); aliases keep informal spellings
+working without double-counting in sweeps.
+"""
+from __future__ import annotations
+
+from repro.search import base, exact, flat, ivf
+
+_REGISTRY: dict[str, type] = {
+    "exact": exact.Exact,
+    "flat_adc": flat.FlatADC,
+    "ivf": ivf.IVF,
+}
+
+_ALIASES = {
+    "flat": "flat_adc",
+    "brute_force": "exact",
+    "bruteforce": "exact",
+}
+
+
+def names() -> tuple[str, ...]:
+    """Canonical registered backends — what benchmarks sweep. Aliases are
+    excluded (they resolve through ``make`` but never double-count)."""
+    return tuple(_REGISTRY)
+
+
+def canonical(spec: str) -> str:
+    return _ALIASES.get(spec, spec)
+
+
+def make(spec: str, **kwargs) -> base.Searcher:
+    """Build a searcher from a registry spec. ``kwargs`` go to the backend's
+    constructor (backends are currently parameter-free frozen dataclasses —
+    per-corpus data lives in the state, serving knobs in SearchConfig)."""
+    cls = _REGISTRY.get(canonical(spec))
+    if cls is None:
+        raise ValueError(
+            f"unknown search backend {spec!r}; registered: {names()}")
+    return cls(**kwargs)

@@ -7,6 +7,10 @@ import pytest
 from repro.core import cayley, givens, opq, pq, rotation
 from repro.data import synthetic
 
+# this module deliberately exercises the deprecated core shims; the
+# explicit warning test below still sees them (pytest.warns bypasses filters)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 
 def _convex_loss(key, n, m=64):
     X = jax.random.normal(key, (m, n))
@@ -116,3 +120,21 @@ def test_opq_gcd_converges_close_to_svd():
     gap_closed = (float(tr_frozen[-1]) - float(tr_gcd[-1])) / (
         float(tr_frozen[-1]) - float(tr_svd[-1]))
     assert gap_closed > 0.6, gap_closed
+
+
+def test_core_shims_emit_deprecation_warning():
+    """ISSUE 4 satellite: the pre-registry core shims must announce their
+    replacement (repro.rotations) on every entry point."""
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        rotation.init(8)
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        rotation.init_from(jnp.eye(8))
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        st = rotation.init(8)
+        rotation.update(st, jnp.zeros((8, 8)), 0.01, jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        _ = rotation.GCD
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        _ = cayley.cayley
+    with pytest.warns(DeprecationWarning, match="repro.rotations"):
+        _ = cayley.CayleySGD

@@ -1,0 +1,341 @@
+"""repro.search — Searcher registry conformance + Engine serving tests.
+
+Coverage demanded by ISSUE 4:
+  * one shared conformance suite over every registered backend
+    (build / search / refresh / stats);
+  * backend parity: ``ivf`` at nprobe = num_lists returns the flat_adc
+    top-k over the same codes, and ``exact`` beats both on recall@10;
+  * the SearchResult padding contract when k exceeds the candidate pool
+    (ids −1, scores −inf, recall_at_k ignores padding);
+  * Engine: ragged batches match direct search, at most one compile per
+    (bucket, k, nprobe), per-query LUT cache hits, live refresh between
+    batches without recompiles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rotations, search
+from repro.data import synthetic
+from repro.metrics import recall_at_k
+
+DIM, SUB, K, L, BS = 16, 4, 16, 8, 8
+N, B = 2000, 16
+CFG = search.SearchConfig(num_lists=L, subspaces=SUB, codewords=K,
+                          block_size=BS, nprobe=4, tile_rows=256)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+    R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+    Q = synthetic.sift_like(jax.random.PRNGKey(2), B, DIM)
+    truth = np.argsort(-np.asarray(Q @ X.T), axis=1)[:, :10]
+    return X, R, Q, truth
+
+
+@pytest.fixture(scope="module")
+def states(data):
+    """One state per backend; flat_adc attached to the ivf build so both
+    serve the identical codes."""
+    X, R, Q, _ = data
+    ivf_state = search.make("ivf").build(jax.random.PRNGKey(3), X, R, CFG)
+    return {
+        "exact": search.make("exact").build(jax.random.PRNGKey(3), X, R, CFG),
+        "flat_adc": search.FlatADC.attach(ivf_state.index),
+        "ivf": ivf_state,
+    }
+
+
+def _delta(R, key=0, lr=1e-3):
+    """A genuine subspace-GCD RotationDelta (what a training step emits)."""
+    G = jax.random.normal(jax.random.PRNGKey(100 + key), (DIM, DIM))
+    learner = rotations.make("subspace_gcd", sub=DIM // SUB)
+    _, delta = learner.update(learner.init_from(R), G, lr,
+                              jax.random.PRNGKey(key))
+    return delta
+
+
+# ---------------------------------------------------------------------------
+# Shared conformance suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", search.names())
+def test_conformance_build_and_search(backend, data, states):
+    _, _, Q, _ = data
+    searcher = search.make(backend)
+    res = searcher.search(states[backend], Q, k=10)
+    assert res.scores.shape == (B, 10) and res.ids.shape == (B, 10)
+    assert res.scanned.shape == (B,)
+    scores = np.asarray(res.scores)
+    ids = np.asarray(res.ids)
+    assert np.all(np.diff(scores, axis=1) <= 1e-6)        # descending
+    assert np.all((ids >= -1) & (ids < N))
+    assert np.all(np.isfinite(scores[ids >= 0]))
+    assert np.all(np.asarray(res.scanned) > 0)
+
+
+@pytest.mark.parametrize("backend", search.names())
+def test_conformance_refresh(backend, data, states):
+    _, R, Q, _ = data
+    searcher = search.make(backend)
+    state = states[backend]
+    before = searcher.search(state, Q, k=10)
+
+    # identity delta: a no-op refresh must not move results
+    ident = searcher.refresh(state, rotations.identity_delta())
+    after = searcher.search(ident, Q, k=10)
+    np.testing.assert_allclose(np.asarray(before.scores),
+                               np.asarray(after.scores), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(after.ids))
+
+    # a genuine learner delta: state stays servable, rotation really moved,
+    # and scores (rotation-invariant inner products) stay put
+    moved = searcher.refresh(state, _delta(R))
+    res = searcher.search(moved, Q, k=10)
+    np.testing.assert_allclose(np.asarray(before.scores),
+                               np.asarray(res.scores), rtol=1e-4, atol=1e-4)
+    new_R = moved.R if backend == "exact" else moved.index.R
+    old_R = state.R if backend == "exact" else state.index.R
+    assert float(jnp.max(jnp.abs(new_R - old_R))) > 0
+    assert float(rotations.orthogonality_error(new_R)) < 1e-4
+
+
+@pytest.mark.parametrize("backend", search.names())
+def test_conformance_stats(backend, states):
+    st = search.make(backend).stats(states[backend])
+    assert st["backend"] == backend
+    assert st["rows"] == N
+    assert st["scan_rows_per_query"] > 0
+    assert st["memory_bytes"] > 0
+    assert st["compression"] >= 1.0
+
+
+def test_registry_make_and_aliases():
+    assert set(search.names()) == {"exact", "flat_adc", "ivf"}
+    assert isinstance(search.make("flat"), search.FlatADC)
+    assert isinstance(search.make("bruteforce"), search.Exact)
+    with pytest.raises(ValueError, match="unknown search backend"):
+        search.make("faiss")
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (ISSUE 4 regression)
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_full_probe_matches_flat_adc(data, states):
+    _, _, Q, _ = data
+    a = search.make("ivf").search(states["ivf"], Q, k=10, nprobe=L)
+    b = search.make("flat_adc").search(states["flat_adc"], Q, k=10)
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=1e-5, atol=1e-5)
+    # ids agree except possibly on exact score ties
+    assert np.mean(np.asarray(a.ids) == np.asarray(b.ids)) >= 0.95
+    # and the flat backend scans strictly more rows
+    assert np.all(np.asarray(b.scanned) >= np.asarray(a.scanned))
+
+
+def test_exact_beats_quantized_on_recall(data, states):
+    _, _, Q, truth = data
+    recalls = {}
+    for backend in search.names():
+        res = search.make(backend).search(states[backend], Q, k=10)
+        recalls[backend] = recall_at_k(np.asarray(res.ids), truth)
+    assert recalls["exact"] >= 0.999          # brute force IS the truth
+    assert recalls["exact"] >= recalls["flat_adc"]
+    assert recalls["exact"] >= recalls["ivf"]
+    # probing can only lose candidates the flat scan keeps (tolerance for
+    # chance overlap with the ground truth on what both get wrong)
+    assert recalls["flat_adc"] >= recalls["ivf"] - 0.05
+
+
+# ---------------------------------------------------------------------------
+# Padding contract: k > candidate pool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", search.names())
+def test_padding_when_k_exceeds_candidates(backend):
+    n_small, k = 12, 32
+    X = synthetic.sift_like(jax.random.PRNGKey(5), n_small, DIM)
+    R = rotations.random_rotation(jax.random.PRNGKey(6), DIM)
+    Q = synthetic.sift_like(jax.random.PRNGKey(7), 4, DIM)
+    cfg = CFG._replace(num_lists=2, codewords=8, nprobe=1, tile_rows=8)
+    searcher = search.make(backend)
+    state = searcher.build(jax.random.PRNGKey(8), X, R, cfg)
+    res = searcher.search(state, Q, k=k)
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    assert ids.shape == (4, k)
+    assert np.all(ids[:, n_small:] == -1)          # pool is at most n_small
+    assert np.all(np.isneginf(scores[ids < 0]))    # padding scores −inf
+    assert np.all(np.isfinite(scores[ids >= 0]))
+    # downstream recall ignores the padding rows entirely
+    truth = np.argsort(-np.asarray(Q @ X.T), axis=1)[:, :10]
+    rec = recall_at_k(ids, truth)
+    assert 0.0 <= rec <= 1.0
+    if backend == "exact":
+        assert rec == 1.0
+
+
+def test_direct_adcstate_construction_searches_exactly(data, states):
+    """ADCState(index=...) without attach must derive the probe window from
+    the index, not silently truncate probed lists to one block."""
+    _, _, Q, _ = data
+    searcher = search.make("ivf")
+    bare = search.ADCState(index=states["ivf"].index, nprobe=L)
+    want = searcher.search(states["ivf"], Q, k=10, nprobe=L)
+    got = searcher.search(bare, Q, k=10)
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(want.scores), rtol=1e-5, atol=1e-5)
+    assert searcher.stats(bare)["max_blocks"] >= 1
+    # and behind the Engine too: the state is normalized before it is ever
+    # passed as a traced jit argument (regression: TracerArrayConversionError)
+    engine = search.Engine(searcher, bare, k=10, nprobe=L, min_bucket=4)
+    eres = engine.search(np.asarray(Q)[:8])
+    np.testing.assert_allclose(np.asarray(eres.scores),
+                               np.asarray(want.scores)[:8], rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_flat_single_list_build(data):
+    """num_lists=1 (the pure flat scan quickstart/gnn use) builds/serves."""
+    X, R, Q, truth = data
+    cfg = CFG._replace(num_lists=1)
+    searcher = search.make("flat_adc")
+    state = searcher.build(jax.random.PRNGKey(9), X, R, cfg)
+    res = searcher.search(state, Q, k=10)
+    assert recall_at_k(np.asarray(res.ids), truth) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_direct_search(data, states):
+    _, _, Q, _ = data
+    searcher = search.make("ivf")
+    engine = search.Engine(searcher, states["ivf"], k=10, nprobe=4,
+                           min_bucket=4)
+    for b in (3, 7, 16):
+        got = engine.search(np.asarray(Q)[:b])
+        want = searcher.search(states["ivf"], Q[:b], k=10, nprobe=4)
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(want.scores), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.ids),
+                                      np.asarray(want.ids))
+
+
+def test_engine_compiles_once_per_bucket_k_nprobe(data, states):
+    _, _, Q, _ = data
+    Qnp = np.asarray(Q)
+    engine = search.Engine(search.make("ivf"), states["ivf"], k=10, nprobe=4,
+                           min_bucket=4)
+    for b in (3, 4, 7, 3):                 # buckets {4, 8}
+        engine.search(Qnp[:b])
+    assert engine.stats()["compiles"] == 2
+    engine.search(Qnp[:3], k=5)            # new k -> one more
+    engine.search(Qnp[:3], nprobe=L)       # new nprobe -> one more
+    assert engine.stats()["compiles"] == 4
+    for b in (3, 4, 7):                    # all warm now
+        engine.search(Qnp[:b])
+    engine.search(Qnp[:3], k=5)
+    st = engine.stats()
+    assert st["compiles"] == 4
+    assert st["executables"] == 4
+    assert st["requests"] == 10
+    # oversized nprobe clamps to num_lists BEFORE keying the cache: both
+    # requests share the nprobe=L executable compiled above
+    engine.search(Qnp[:3], nprobe=10 * L)
+    engine.search(Qnp[:3], nprobe=20 * L)
+    st = engine.stats()
+    assert st["compiles"] == 4
+    assert engine.requests[-1]["nprobe"] == L   # records what was probed
+
+
+def test_engine_lut_cache_hits_repeated_queries(data, states):
+    _, _, Q, _ = data
+    Qnp = np.asarray(Q)
+    engine = search.Engine(search.make("flat_adc"), states["flat_adc"], k=10,
+                           min_bucket=4)
+    engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["lut_misses"] == 8 and st["lut_hits"] == 0
+    engine.search(Qnp[:8])                 # same queries: all cached
+    st = engine.stats()
+    assert st["lut_hits"] == 8 and st["lut_misses"] == 8
+    engine.search(Qnp[4:12])               # half cached
+    st = engine.stats()
+    assert st["lut_hits"] == 12 and st["lut_misses"] == 12
+    # duplicate rows in one batch: counted per served row, computed once
+    dup = np.stack([Qnp[14], Qnp[14], Qnp[14]])
+    engine.search(dup)
+    st = engine.stats()
+    assert st["lut_hits"] == 12 and st["lut_misses"] == 15
+    assert st["lut_cached_rows"] == 13      # one entry for the triplicate
+    engine.search(dup)                     # now fully cached
+    assert engine.stats()["lut_hits"] == 15
+
+
+def test_engine_lut_eviction_under_pressure(data, states):
+    """A full LRU must never evict rows the in-flight batch still needs:
+    batches wider than the cache and steady-state hit/miss mixes both
+    assemble (regression for read-after-evict KeyError)."""
+    _, _, Q, _ = data
+    Qnp = np.asarray(Q)
+    engine = search.Engine(search.make("flat_adc"), states["flat_adc"], k=10,
+                           min_bucket=4, lut_cache_rows=4)
+    engine.search(Qnp[:8])                  # batch wider than the cache
+    assert engine.stats()["lut_cached_rows"] == 4
+    engine.search(Qnp[4:8])                 # hits on the survivors
+    assert engine.stats()["lut_hits"] == 4
+    engine.search(Qnp[2:7])                 # mixed: hits + evicting misses
+    res = engine.search(Qnp)                # full batch, 4x the cache
+    assert res.ids.shape == (B, 10)
+    st = engine.stats()
+    assert st["lut_cached_rows"] == 4
+    assert st["lut_hits"] == 4 + 3 + 4      # 4,5,6 then 2,3,5,6 survivors
+
+
+def test_engine_live_refresh_between_batches(data, states):
+    _, R, Q, _ = data
+    Qnp = np.asarray(Q)
+    engine = search.Engine(search.make("ivf"), states["ivf"], k=10, nprobe=4,
+                           min_bucket=4)
+    before = engine.search(Qnp[:8])
+    compiles = engine.stats()["compiles"]
+
+    engine.refresh(_delta(R))
+    after = engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["refreshes"] == 1
+    assert st["compiles"] == compiles       # zero recompiles across refresh
+    assert st["lut_misses"] == 16           # LUT cache invalidated (R moved)
+    # scores are rotation-invariant; the refreshed engine still serves them
+    np.testing.assert_allclose(np.asarray(before.scores),
+                               np.asarray(after.scores), rtol=1e-4, atol=1e-4)
+
+
+def test_engine_plain_path_and_chunking(data, states):
+    _, _, Q, _ = data
+    engine = search.Engine(search.make("exact"), states["exact"], k=10,
+                           min_bucket=4, max_bucket=8)
+    res = engine.search(np.asarray(Q))      # B=16 > max_bucket: chunked
+    assert res.ids.shape == (B, 10)
+    st = engine.stats()
+    assert st["requests"] == 2              # two max_bucket chunks
+    assert st["lut_misses"] == 0            # exact has no LUT path
+    assert st["searcher"]["backend"] == "exact"
+    with pytest.raises(ValueError, match="empty query batch"):
+        engine.search(np.zeros((0, DIM), np.float32))
+    # nprobe on a backend that cannot honor it is an error, not a no-op
+    with pytest.raises(ValueError, match="does not take nprobe"):
+        engine.search(np.asarray(Q)[:4], nprobe=4)
+    with pytest.raises(ValueError, match="does not take nprobe"):
+        search.Engine(search.make("exact"), states["exact"], nprobe=4)
