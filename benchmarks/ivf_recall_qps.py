@@ -8,6 +8,10 @@ queries, and rotation through each registered searcher:
   * flat_adc  — full ADC scan over the very codes IVF probes (attached to
                 the IVF build, so "recall vs flat" isolates probing loss)
   * ivf       — ``nprobe`` sweep: scan work vs recall, the serving knob
+  * *_sharded — the row-sharded twins, attached to the same artifacts
+                (parity rows in-process; the ``--devices N`` sweep runs a
+                forced-host-device subprocess and measures per-device scan
+                work vs the replicated backend)
 
 Metrics per row:
   * scan work   — CSR rows scored per query (the hardware-independent cost)
@@ -23,15 +27,22 @@ whose compile cache must stay at one executable per (bucket, k, nprobe).
 
 Acceptance (ISSUE 1, carried forward): at ≥0.9 recall@10-vs-flat, PQ scan
 work must drop ≥5× vs the flat path. ISSUE 2: RQ depth-2 end-to-end with
-exact subspace refresh and better quantization than PQ. ISSUE 4 adds: all
-registry backends on one harness; Engine compile cache bounded.
+exact subspace refresh and better quantization than PQ. ISSUE 4: all
+registry backends on one harness; Engine compile cache bounded. ISSUE 5
+adds: sharded backends match their replicated twins, and per-device scan
+work under ``--devices N`` shrinks ~linearly at unchanged recall@10.
 
 Run:  PYTHONPATH=src python benchmarks/ivf_recall_qps.py [--n 100000]
       PYTHONPATH=src python -m benchmarks.run --only ivf [--fast]
+      PYTHONPATH=src python -m benchmarks.run --only ivf --devices 4
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -42,6 +53,8 @@ from repro.data import synthetic
 from repro.index import maintain
 from repro.metrics import recall_at_k
 
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def _bench(fn, *args, reps=3):
     jax.block_until_ready(fn(*args))
@@ -51,11 +64,98 @@ def _bench(fn, *args, reps=3):
     return (time.time() - t0) / reps
 
 
+def sharded_cell(n: int, dim: int, queries: int, lists: int, subspaces: int,
+                 codewords: int, devices: int, nprobe: int = 8) -> dict:
+    """The --devices measurement: single vs sharded IVF on a forced-host-
+    device mesh (runs inside the worker subprocess ``run`` spawns — must be
+    imported only after XLA_FLAGS pins the device count)."""
+    assert jax.device_count() >= devices, (
+        f"need {devices} devices, have {jax.device_count()}")
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh(devices)
+
+    key = jax.random.PRNGKey(0)
+    X = synthetic.sift_like(key, n, dim)
+    Q = synthetic.sift_like(jax.random.PRNGKey(1), queries, dim)
+    R = rotations.random_rotation(jax.random.PRNGKey(2), dim)
+    cfg = search.SearchConfig(
+        num_lists=lists, subspaces=subspaces, codewords=codewords,
+        nprobe=nprobe, train_size=min(n, 16384))
+
+    ivf_s = search.make("ivf")
+    single = ivf_s.build(jax.random.PRNGKey(3), X, R, cfg)
+    res_single = ivf_s.search(single, Q, k=10, nprobe=nprobe)
+    scan_single = float(np.mean(np.asarray(res_single.scanned)))
+
+    sh_s = search.make("ivf_sharded", mesh=mesh)
+    state = search.IVFSharded.attach(single.index, mesh=mesh, nprobe=nprobe)
+    res = sh_s.search(state, Q, k=10)
+    # measured rows scanned: the sharded result's ``scanned`` psums every
+    # shard's valid blocks, so /devices is the per-device share (comparable
+    # to the single-device measurement, unlike the static window bound)
+    per_dev = float(np.mean(np.asarray(res.scanned))) / devices
+
+    truth = np.argsort(-np.asarray(Q @ X.T), axis=1)[:, :10]
+    r_single = recall_at_k(np.asarray(res_single.ids), truth)
+    r_sharded = recall_at_k(np.asarray(res.ids), truth)
+
+    # Engine over the sharded backend: compile-cache + recompile-free refresh
+    engine = search.Engine(sh_s, state, k=10, nprobe=nprobe, min_bucket=32)
+    engine.search(np.asarray(Q))
+    compiles = engine.stats()["compiles"]
+    G = jax.random.normal(jax.random.PRNGKey(9), (dim, dim))
+    learner = rotations.make("subspace_gcd", sub=single.index.quantizer.sub)
+    _, delta = learner.update(learner.init_from(single.index.R), G, 2e-3,
+                              jax.random.PRNGKey(0))
+    engine.refresh(delta)
+    post = engine.search(np.asarray(Q))
+    return dict(
+        devices=devices,
+        scan_single=scan_single,
+        scan_per_device=float(per_dev),
+        reduction_per_device=scan_single / max(float(per_dev), 1.0),
+        recall_single=float(r_single),
+        recall_sharded=float(r_sharded),
+        parity=bool(recall_at_k(np.asarray(res.ids),
+                                np.asarray(res_single.ids)) >= 0.999),
+        refresh_recompiles=int(engine.stats()["compiles"] - compiles),
+        post_refresh_recall=float(
+            recall_at_k(np.asarray(post.ids), truth)),
+    )
+
+
+def _run_sharded_cell(devices: int, **kw) -> dict:
+    """Spawn ``sharded_cell`` under ``--xla_force_host_platform_device_count``
+    (the flag must be set before jax initializes, hence the subprocess)."""
+    code = (
+        "import os, json\n"
+        # append rather than overwrite: inherited platform/memory flags must
+        # survive (duplicated flags resolve last-wins in XLA)
+        "os.environ['XLA_FLAGS'] = (os.environ.get('XLA_FLAGS', '') + "
+        f"' --xla_force_host_platform_device_count={devices}').strip()\n"
+        "from benchmarks.ivf_recall_qps import sharded_cell\n"
+        f"print('CELL=' + json.dumps(sharded_cell(devices={devices}, "
+        + ", ".join(f"{k}={v!r}" for k, v in kw.items()) + ")))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [_REPO, os.path.join(_REPO, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded cell failed:\n{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines() if l.startswith("CELL=")][-1]
+    return json.loads(line[len("CELL="):])
+
+
 def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
         subspaces: int = 16, codewords: int = 256, depths=(1, 2),
-        use_kernel: bool = False, verbose: bool = True):
+        use_kernel: bool = False, verbose: bool = True, devices: int = 1):
     """Sweep the searcher registry × residual depths; returns
-    (results dict, claim-check dict)."""
+    (results dict, claim-check dict). ``devices > 1`` appends the sharded
+    scan-work sweep on a forced-host-device subprocess."""
     out = print if verbose else (lambda *a, **k: None)
     key = jax.random.PRNGKey(0)
     X = synthetic.sift_like(key, n, dim)
@@ -183,6 +283,7 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
                 f"{sorted(buckets)} -> {es['compiles']} compiles, LUT hit "
                 f"rate {es['lut_hit_rate']:.2f}, p50 "
                 f"{es['latency_ms_p50']:.1f} ms")
+
         else:
             # RQ end-to-end: built, searched, refreshed; refresh stays exact
             # (subspace matching) and recall survives the refresh.
@@ -190,6 +291,41 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
                 mismatch <= 0.01 and np.isfinite(post_recall)
                 and post_recall > 0.0
             )
+
+        if depth == depths[0]:
+            # --- sharded twins on the local mesh (S = device_count; 1 in a
+            # plain run — the --devices sweep below forces a real shard
+            # count): same artifacts, so recall must match the replicated
+            # backend row for row. First depth rather than depth 1, so a
+            # --depths 2 run still sweeps (and ticks) every registry name.
+            from repro.launch.mesh import make_data_mesh
+            mesh = make_data_mesh()
+            S = jax.device_count()
+            sharded_ok = True
+            ivf8_ids = np.asarray(
+                ivf_s.search(ivf_state, Q, k=10, nprobe=8).ids)
+            for sh_name, want_ids in (
+                    ("exact_sharded", exact_ids),
+                    ("flat_sharded", flat_ids),
+                    ("ivf_sharded", ivf8_ids)):
+                sh_s = search.make(sh_name, mesh=mesh)
+                if sh_name == "exact_sharded":
+                    sh_state = sh_s.build(
+                        key, X, R, search.SearchConfig(tile_rows=8192))
+                else:
+                    sh_state = type(sh_s).attach(index, mesh=mesh, nprobe=8)
+                kw = {"nprobe": 8} if sh_name == "ivf_sharded" else {}
+                res = sh_s.search(sh_state, Q, k=10, **kw)
+                dt = _bench(lambda s_=sh_s, st_=sh_state, kw_=kw: s_.search(
+                    st_, Q, k=10, **kw_).scores)
+                ids_np = np.asarray(res.ids)
+                r_exact = recall_at_k(ids_np, exact_ids)
+                sharded_ok &= recall_at_k(ids_np, want_ids) >= 0.999
+                per_dev = float(np.mean(np.asarray(res.scanned))) / S
+                out(f"{sh_name},{name},{'8' if kw else '-'},{per_dev:.0f}"
+                    f"/dev×{S},-,{queries/dt:.0f},-,{r_exact:.3f}")
+                swept.add(sh_name)
+            checks["sharded_parity"] = sharded_ok
 
     if 1 in depths and len(full_probe_recall) > 1:
         pq_r, pq_d = full_probe_recall["pq"]
@@ -205,6 +341,28 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
         out(f"# frontier: flat recall@10 vs exact — pq={pq_r:.3f}, "
             f"best rq={best_rq:.3f}; residual distortion — pq={pq_d:.4f}, "
             f"best rq={best_rq_d:.4f}")
+
+    if devices > 1:
+        cell = _run_sharded_cell(
+            devices, n=n, dim=dim, queries=queries, lists=lists,
+            subspaces=subspaces, codewords=codewords)
+        results["sharded"] = cell
+        out(f"# [sharded --devices {devices}] scan/query: "
+            f"{cell['scan_single']:.0f} (1 dev) -> "
+            f"{cell['scan_per_device']:.0f}/dev "
+            f"({cell['reduction_per_device']:.1f}x per-device reduction), "
+            f"recall@10 {cell['recall_single']:.3f} -> "
+            f"{cell['recall_sharded']:.3f}, refresh recompiles "
+            f"{cell['refresh_recompiles']}")
+        # near-linear: per-device scan work within 2x of the ideal 1/S slice
+        # (block-padding rounds short per-shard lists up to whole tiles)
+        checks["sharded_scan_linear"] = (
+            cell["reduction_per_device"] >= devices / 2.0)
+        checks["sharded_recall_unchanged"] = (
+            cell["recall_sharded"] >= cell["recall_single"] - 1e-6
+            and cell["parity"])
+        checks["sharded_refresh_no_recompile"] = (
+            cell["refresh_recompiles"] == 0)
 
     checks["registry_swept"] = swept == set(search.names())
     out(f"# ACCEPTANCE: {checks} -> "
@@ -224,11 +382,14 @@ def main() -> None:
                     help="comma list of residual depths (1=PQ, 2=RQ-2, ...)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas path (TPU; interpret mode is too slow here)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="run the sharded sweep on N forced host devices "
+                         "(subprocess)")
     args = ap.parse_args()
     depths = tuple(int(d) for d in args.depths.split(","))
     run(n=args.n, dim=args.dim, queries=args.queries, lists=args.lists,
         subspaces=args.subspaces, codewords=args.codewords, depths=depths,
-        use_kernel=args.use_kernel)
+        use_kernel=args.use_kernel, devices=args.devices)
 
 
 if __name__ == "__main__":

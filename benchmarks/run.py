@@ -17,6 +17,9 @@ def main() -> None:
                     help="comma list: fig2a,fig2bc,table1,fig4,ivf,kernels,"
                          "roofline")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="ivf section: run the sharded sweep on N forced "
+                         "host devices (subprocess)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -63,7 +66,8 @@ def main() -> None:
             n=20_000 if args.fast else 100_000,
             queries=64 if args.fast else 256,
             lists=64 if args.fast else 256,
-            depths=(1, 2))
+            depths=(1, 2),
+            devices=args.devices)
         failures += [f"ivf/{k}" for k, v in checks.items() if not v]
 
     if want("kernels"):

@@ -5,13 +5,17 @@ Turns the paper's T(X) = φ(XR)Rᵀ into a production-shaped ANN index, with
 
   ivf       build: quant.VQ coarse quantizer over rotated vectors +
             residual quant.PQ (depth 1) or quant.RQ (depth M), packed into
-            a block-aligned CSR pytree (IVFPQIndex)
+            a block-aligned CSR pytree (IVFPQIndex); the partitioned
+            variants — ``shard_split`` (repartition a built index) and
+            ``build_sharded`` (host-sharded chunk ingest; the corpus never
+            concatenates) — feed the row-sharded searchers
   search    batched query engine: probe top-nprobe lists, per-query
             Quantizer.adc_tables LUTs, fused Pallas selected-block ADC scan
             (kernels/ivf_adc.py — depth rides in the LUT column dim)
   maintain  incremental add/remove and refresh_rotation — absorb a GCD
             training step into a live index without re-encoding the corpus
-            (scheme-agnostic via Quantizer.rotate)
+            (scheme-agnostic via Quantizer.rotate; ``rotate_components``
+            is the corpus-independent core the sharded refresh reuses)
 
 This package is the IVF *mechanism* layer; the serving front door is
 ``repro.search`` — a Searcher registry (``exact`` / ``flat_adc`` / ``ivf``)

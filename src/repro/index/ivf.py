@@ -210,3 +210,103 @@ def build(key: jax.Array, X: jax.Array, R: jax.Array, cfg: IVFPQConfig, *,
         ids = jnp.arange(X.shape[0], dtype=jnp.int32)
     return pack(R, coarse, quantizer, codes, list_ids, ids,
                 block_size=cfg.block_size)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned build: the corpus lives sharded, each shard a local CSR
+# ---------------------------------------------------------------------------
+
+
+def shard_split(index: IVFPQIndex, num_shards: int) -> list[IVFPQIndex]:
+    """Repartition a built index into ``num_shards`` per-shard CSRs.
+
+    Items map to shards by contiguous id-rank range (shard s owns the
+    s-th of S equal slices of the sorted live ids — balanced within one
+    row for any id space); every shard keeps the SHARED R / coarse /
+    residual quantizer and repacks only its own rows into block-aligned
+    lists — codes are carried over, never re-encoded, so a shard's row
+    scores are bit-identical to the source index's. This is the parity
+    path of the ``repro.search`` ``*_sharded`` backends: attach the same
+    single-device build, redistributed.
+    """
+    ids = np.asarray(index.ids)
+    codes = np.asarray(index.codes)
+    offsets = np.asarray(index.list_offsets)
+    live = ids >= 0
+    row_list = np.searchsorted(offsets, np.arange(len(ids)), side="right") - 1
+    row_list = np.clip(row_list, 0, index.num_lists - 1)
+    # Partition by id RANK, not id value: ranks are dense whatever the id
+    # space (sparse external ids from build(ids=...)/maintain.add would
+    # otherwise collapse onto one shard), so shards stay balanced within
+    # one row, and for the common dense 0..N−1 ids rank == id — contiguous
+    # ranges either way.
+    live_ids = ids[live]
+    rank = np.empty(live_ids.size, dtype=np.int64)
+    rank[np.argsort(live_ids, kind="stable")] = np.arange(live_ids.size)
+    shard_of = np.full(ids.shape, -1, dtype=np.int64)
+    shard_of[live] = (rank * num_shards) // max(live_ids.size, 1)
+    parts = []
+    for s in range(num_shards):
+        m = shard_of == s
+        parts.append(pack(index.R, index.coarse, index.quantizer,
+                          codes[m], row_list[m], ids[m],
+                          block_size=index.block_size))
+    return parts
+
+
+def build_sharded(key: jax.Array, chunks, R: jax.Array, cfg: IVFPQConfig, *,
+                  coarse_iters: int = 10, pq_iters: int = 10,
+                  train_size: int | None = None, mesh=None,
+                  axis: str = "data") -> list[IVFPQIndex]:
+    """Host-sharded ingest: one local index per corpus chunk.
+
+    ``chunks`` is a sequence of (rows_s, n) arrays — one per shard — that
+    are rotated and encoded one at a time, so the full corpus never
+    materializes on one device: the only cross-chunk state is the training
+    sample (capped at ``train_size`` rows — default 65536, NEVER the full
+    corpus, or the sample concat would defeat the chunked ingest) taken
+    from the chunk heads, and the O(n² + L·n + D·K·sub) quantizers it
+    fits. Item ids are global (chunk-order offsets). When ``mesh`` is
+    given the coarse fit runs as a sharded k-means
+    (``quant.kmeans.kmeans_sharded`` — per-shard assign + psum
+    accumulate); the residual fit stays on the sample either way (it is
+    already capped). Returns per-shard indexes for
+    ``search.attach_shards``.
+    """
+    chunks = [jnp.asarray(c) for c in chunks]
+    n_total = sum(int(c.shape[0]) for c in chunks)
+    cap = min(65536 if train_size is None else train_size, n_total)
+    R = jnp.asarray(R)
+
+    # training sample: heads of the chunks, rotated chunk by chunk
+    sample, have = [], 0
+    for c in chunks:
+        if have >= cap:
+            break
+        take = min(int(c.shape[0]), cap - have)
+        sample.append(c[:take] @ R.astype(c.dtype))
+        have += take
+    XT = jnp.concatenate(sample) if len(sample) > 1 else sample[0]
+
+    kc, kp = jax.random.split(key)
+    if mesh is not None:
+        centroids = quant.kmeans.vq_kmeans_sharded(
+            kc, XT, cfg.num_lists, mesh=mesh, axis=axis, iters=coarse_iters)
+        coarse = quant.VQ(centroids=centroids)
+    else:
+        coarse = quant.VQ.fit(kc, XT, cfg.num_lists, iters=coarse_iters)
+    train_lists = coarse.assign(XT)
+    quantizer, _ = quant.fit_quantizer(
+        kp, XT - coarse.centroids[train_lists], cfg.pq,
+        depth=cfg.depth, iters=pq_iters,
+    )
+
+    parts, start = [], 0
+    for c in chunks:
+        XRc = c @ R.astype(c.dtype)
+        list_ids, codes = encode(XRc, coarse, quantizer)
+        ids = jnp.arange(start, start + c.shape[0], dtype=jnp.int32)
+        start += int(c.shape[0])
+        parts.append(pack(R, coarse, quantizer, codes, list_ids, ids,
+                          block_size=cfg.block_size))
+    return parts

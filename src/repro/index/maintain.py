@@ -98,28 +98,55 @@ def add(index: IVFPQIndex, X_new: jax.Array, new_ids: jax.Array) -> IVFPQIndex:
     )
 
 
+def rotate_components(R: jax.Array, coarse, quantizer, pi: jax.Array,
+                      pj: jax.Array, theta: jax.Array):
+    """The corpus-independent piece of a rotation refresh: rotate R, the
+    coarse centroids, and the residual codebooks by a disjoint plane
+    product. Codes never enter — which is exactly why the row-sharded
+    searchers (``search/sharded.py``) refresh by updating these three
+    replicated components in place while every device's CSR shard stays
+    untouched (zero recompiles, zero cross-device traffic).
+
+    Cross-subspace pairs apply to R and the coarse centroids exactly and
+    are dropped (θ→0) for the residual quantizer's product codebooks —
+    within-subspace pairs only mix columns inside one subspace slice, so
+    ``Quantizer.rotate`` absorbs them exactly (all levels at once for RQ).
+    """
+    sub = quantizer.sub
+    R_new = givens.apply_pair_rotations(R, pi, pj, theta)
+    coarse_new = coarse.rotate(pi, pj, theta)
+    within = (pi // sub) == (pj // sub)
+    theta_w = jnp.where(within, theta, 0.0)
+    quantizer_new = quantizer.rotate(pi, pj, theta_w)
+    return R_new, coarse_new, quantizer_new
+
+
+def check_refreshable(delta: rotations.RotationDelta) -> rotations.GivensDelta:
+    """The ADC-backend refresh precondition: a disjoint GivensDelta. Dense
+    Cayley/Procrustes deltas do not factor into per-subspace codebook
+    rotations — re-encode (ivf.build) instead."""
+    if not isinstance(delta, rotations.GivensDelta):
+        raise TypeError(
+            f"refresh needs a GivensDelta (got {type(delta).__name__}):"
+            " dense Cayley/Procrustes deltas do not factor into per-subspace"
+            " codebook rotations — re-encode (ivf.build) instead")
+    if delta.overlapping:
+        raise ValueError("refresh requires a disjoint (commuting) delta")
+    return delta
+
+
 @jax.jit
 def refresh_rotation(index: IVFPQIndex, pi: jax.Array, pj: jax.Array,
                      theta: jax.Array) -> IVFPQIndex:
     """Absorb a GCD step R ← R·∏ℓ R_{pi[ℓ],pj[ℓ]}(theta[ℓ]) into the live
     index without touching the stored codes (see module docstring).
 
-    Pairs must be disjoint (a GCD matching). Cross-subspace pairs are
-    applied to R and the coarse centroids exactly, and dropped (θ→0) for
-    the residual quantizer's product codebooks. Scheme-agnostic: any
-    ``quant`` object implementing ``rotate`` (PQ, RQ, ...) refreshes here.
+    Pairs must be disjoint (a GCD matching). Scheme-agnostic: any ``quant``
+    object implementing ``rotate`` (PQ, RQ, ...) refreshes here — the
+    component rotation itself is ``rotate_components``.
     """
-    sub = index.quantizer.sub
-    R_new = givens.apply_pair_rotations(index.R, pi, pj, theta)
-    coarse_new = index.coarse.rotate(pi, pj, theta)
-
-    # Within-subspace pairs only mix columns inside one subspace slice, so
-    # Quantizer.rotate absorbs them exactly (all levels at once for RQ);
-    # zeroing θ for cross-subspace pairs makes those rotations the identity.
-    within = (pi // sub) == (pj // sub)
-    theta_w = jnp.where(within, theta, 0.0)
-    quantizer_new = index.quantizer.rotate(pi, pj, theta_w)
-
+    R_new, coarse_new, quantizer_new = rotate_components(
+        index.R, index.coarse, index.quantizer, pi, pj, theta)
     return dataclasses.replace(
         index, R=R_new, coarse=coarse_new, quantizer=quantizer_new
     )
@@ -132,15 +159,8 @@ def refresh_delta(index: IVFPQIndex,
     side of the trainer/index sync contract: feed the same delta that
     ``RotationLearner.update`` returned and the served rotation matches the
     trainer's ``materialize`` exactly. Only Givens deltas factor into
-    per-subspace codebook rotations; dense deltas (Cayley/Procrustes) cannot
-    be absorbed without a re-encode."""
-    if not isinstance(delta, rotations.GivensDelta):
-        raise TypeError(
-            f"refresh_delta needs a GivensDelta (got {type(delta).__name__}):"
-            " dense Cayley/Procrustes deltas do not factor into per-subspace"
-            " codebook rotations — re-encode (ivf.build) instead")
-    if delta.overlapping:
-        raise ValueError("refresh requires a disjoint (commuting) delta")
+    per-subspace codebook rotations (``check_refreshable``)."""
+    check_refreshable(delta)
     return refresh_rotation(index, delta.pi, delta.pj, delta.theta)
 
 

@@ -23,7 +23,11 @@ flat scan — the recall/work trade-off is entirely in ``nprobe``.
 
 Device sharding: under an active mesh the candidate axis is annotated with
 the ``ivf`` rule table (sharding/rules.py) so XLA splits list scanning over
-the "model" axis while the query batch stays data-parallel.
+the "model" axis while the query batch stays data-parallel. The row-sharded
+deployment (``search/sharded.py``) instead runs ``_search_core`` as the
+shard-local body of a shard_map — each device probes the shared centroids
+but scans only its own CSR shard, and per-shard top-k runs merge
+cross-device.
 
 This module is the IVF *mechanism*; the serving front door is
 ``repro.search`` (Searcher registry + batching Engine), whose ``ivf`` and
@@ -41,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.index.ivf import IVFPQIndex
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.sharding import rules as sh
 
 NEG_INF = -jnp.inf
@@ -58,20 +63,14 @@ def topk_padded(scores: jax.Array, cand_ids: jax.Array,
 
     ``cand_ids`` is (C,) or (b, C); masked candidates must already score
     −inf. Returns (b, k) scores/ids padded with (−inf, −1) when k > C or
-    when fewer than k finite candidates survive.
+    when fewer than k finite candidates survive. The core lives in
+    ``kernels.ref.topk_merge_ref`` (also the cross-shard merge of the
+    sharded searchers) so the contract has exactly one implementation.
     """
     b, C = scores.shape
     if cand_ids.ndim == 1:
         cand_ids = jnp.broadcast_to(cand_ids[None, :], (b, C))
-    kk = min(k, C)
-    top_scores, pos = jax.lax.top_k(scores, kk)
-    top_ids = jnp.take_along_axis(cand_ids, pos, axis=1)
-    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
-    if kk < k:
-        top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),
-                             constant_values=NEG_INF)
-        top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)), constant_values=-1)
-    return top_scores, top_ids
+    return kref.topk_merge_ref(scores, cand_ids, k)
 
 
 def probe(index: IVFPQIndex, QR: jax.Array,

@@ -133,3 +133,15 @@ def embedding_bag(table, indices, bag_ids, num_bags: int, weights=None, *,
     if use_kernel:
         return _bag.embedding_bag(table, indices, bag_ids, num_bags, weights)
     return ref.embedding_bag_ref(table, indices, bag_ids, num_bags, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_merge(scores, ids, k: int):
+    """Cross-shard local-k merge: (b, C) gathered per-shard top-k runs ->
+    (b, k) global top-k under the −inf/−1 padding contract. The reduce step
+    of the sharded searcher family (search/sharded.py): each shard scans
+    its local CSR rows, emits a padded local top-k, and the all_gather'd
+    (b, shards·k) runs merge here. Pure top_k — XLA's sort is already
+    optimal at these widths, so there is no Pallas variant (the ref IS the
+    implementation)."""
+    return ref.topk_merge_ref(scores, ids, k)

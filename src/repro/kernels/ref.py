@@ -96,3 +96,26 @@ def embedding_bag_ref(table: jax.Array, indices: jax.Array, bag_ids: jax.Array,
     if weights is not None:
         rows = rows * weights[:, None].astype(rows.dtype)
     return jax.ops.segment_sum(rows, bag_ids, num_segments=num_bags)
+
+
+def topk_merge_ref(scores: jax.Array, ids: jax.Array,
+                   k: int) -> tuple[jax.Array, jax.Array]:
+    """Merge concatenated per-shard top-k runs into one global top-k.
+
+    scores/ids (b, C) — C = shards·k after the sharded searcher's
+    all_gather — under the SearchResult padding contract: slots past the
+    candidate pool carry score −inf, and every −inf slot gets id −1 so
+    padding survives the merge. Returns (b, k), padded the same way when
+    k > C.
+    """
+    b, C = scores.shape
+    kk = min(k, C)
+    top_scores, pos = jax.lax.top_k(scores, kk)
+    top_ids = jnp.take_along_axis(ids, pos, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
+    if kk < k:
+        top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),
+                             constant_values=-jnp.inf)
+        top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)),
+                          constant_values=-1)
+    return top_scores, top_ids

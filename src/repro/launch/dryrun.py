@@ -47,7 +47,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name, "ok": False}
     try:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-        n_chips = mesh_lib.num_chips(mesh)
+        n_chips = analysis.num_chips(mesh)
         sh.pop_warnings()
         cell = cells_lib.build_cell(arch_id, shape_name, mesh)
         rec["sharding_warnings"] = sorted(set(sh.pop_warnings()))
@@ -76,7 +76,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             lower_s=round(t_lower - t0, 2),
             compile_s=round(t_compile - t_lower, 2),
             report=report,
-            fits_hbm=report["memory"]["peak_bytes"] <= mesh_lib.CHIP_HBM_BYTES,
+            fits_hbm=report["memory"]["peak_bytes"] <= analysis.CHIP_HBM_BYTES,
         )
         if verbose:
             print(f"[{arch_id} × {shape_name} × {mesh_name}] OK "

@@ -6,17 +6,22 @@ jax device state (the dry-run must set XLA_FLAGS before any jax init).
   single-pod: (16, 16)      axes ("data", "model")   = 256 chips (one v5e pod)
   multi-pod:  (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
 
-Hardware constants for the §Roofline terms (TPU v5e): 197 TFLOP/s bf16,
-819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM) are OWNED by ``repro.roofline.analysis`` — the launch layer
+re-exports them for compatibility so the dry-run report and the roofline
+table can never disagree on what a chip is.
 """
 from __future__ import annotations
 
 import jax
 
-PEAK_FLOPS_BF16 = 197e12      # per chip
-HBM_BW = 819e9                # bytes/s per chip
-ICI_BW = 50e9                 # bytes/s per link
-CHIP_HBM_BYTES = 16 * 1024**3  # v5e: 16 GiB
+from repro.roofline.analysis import (  # noqa: F401  (compat re-exports)
+    CHIP_HBM_BYTES,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    num_chips,
+)
 
 
 def make_mesh_compat(shape, axes, **kwargs):
@@ -45,8 +50,10 @@ def make_host_mesh():
     return make_mesh_compat((1, 1), ("data", "model"))
 
 
-def num_chips(mesh) -> int:
-    n = 1
-    for v in mesh.shape.values():
-        n *= v
-    return n
+def make_data_mesh(shards: int | None = None):
+    """1-axis ``("data",)`` mesh over ``shards`` devices (default: all) —
+    the serving mesh of the row-sharded searcher family
+    (``repro.search`` ``*_sharded`` backends): the corpus partitions over
+    "data" and each device scans only its local CSR shard."""
+    n = jax.device_count() if shards is None else shards
+    return make_mesh_compat((n,), ("data",))

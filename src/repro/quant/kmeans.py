@@ -5,6 +5,14 @@ per-subspace PQ codebooks, each level of a residual quantizer, and —
 via ``vq_kmeans`` (a single-subspace special case) — the IVF coarse
 quantizer's full-vector centroids. Streaming EMA updates (VQ-VAE style) live
 here too as the alternative to gradient training of codebooks.
+
+``kmeans_sharded`` is the distributed flavor: rows shard over a mesh axis,
+each device assigns only its local rows, and the centroid accumulate is a
+``psum`` — the same Lloyd update with a different summation order, so it
+matches the single-device fit up to fp reordering (the distortion-parity
+test in tests/test_distributed.py). This is what lets the sharded index
+build (``index.ivf.build_sharded``) fit its coarse quantizer without ever
+gathering the training rows onto one device.
 """
 from __future__ import annotations
 
@@ -63,6 +71,80 @@ def vq_kmeans(key: jax.Array, X: jax.Array, num_centroids: int,
     PQConfig(1, L) codebooks (1, L, n) are exactly L centroids. Returns
     (L, n) centroids — the IVF coarse-quantizer fit."""
     cb, _ = kmeans(key, X, PQConfig(1, num_centroids), iters=iters)
+    return cb[0]
+
+
+# ---------------------------------------------------------------------------
+# Sharded fit: per-shard assign + psum centroid accumulate under shard_map
+# ---------------------------------------------------------------------------
+
+
+def _sharded_lloyd_step(codebooks: jax.Array, Xs: jax.Array, w: jax.Array,
+                        axis: str) -> jax.Array:
+    """One Lloyd iteration over this shard's rows (runs inside shard_map).
+
+    ``w`` is 1.0 for real rows, 0.0 for the padding that makes the row count
+    divisible by the shard count — padded rows contribute nothing to either
+    the sums or the counts. The cross-shard reduce is the two psums; the
+    codebooks stay replicated (the same invariant the sharded searcher
+    keeps: O(K) state replicated, O(N) state partitioned).
+    """
+    D, K, _ = codebooks.shape
+    codes = assign(Xs, codebooks)                     # (m_local, D)
+    Xss = split(Xs, D)                                # (m_local, D, sub)
+
+    def per_subspace(xd, cd):
+        sums = jax.ops.segment_sum(xd * w[:, None], cd, num_segments=K)
+        cnt = jax.ops.segment_sum(w, cd, num_segments=K)
+        return sums, cnt
+
+    sums, cnt = jax.vmap(per_subspace, in_axes=(1, 1))(Xss, codes)
+    sums = jax.lax.psum(sums, axis)
+    cnt = jax.lax.psum(cnt, axis)
+    return jnp.where(cnt[..., None] > 0,
+                     sums / jnp.maximum(cnt[..., None], 1.0), codebooks)
+
+
+def kmeans_sharded(key: jax.Array, X: jax.Array, cfg: PQConfig, *, mesh,
+                   axis: str = "data", iters: int = 10) -> jax.Array:
+    """Distributed ``kmeans``: rows of ``X`` shard over ``mesh``'s ``axis``.
+
+    Init samples K rows exactly like the single-device fit (same key); each
+    iteration assigns locally and accumulates centroids with a psum, so no
+    device ever holds more than m/S training rows. Returns (D, K, sub)
+    codebooks — numerically ≈ ``kmeans`` (identical update, shard-local
+    partial sums reduce in a different order).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    S = mesh.shape[axis]
+    m = X.shape[0]
+    pad = (-m) % S
+    cb = kmeans_init(key, X, cfg)
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    w = jnp.concatenate([jnp.ones((m,), jnp.float32),
+                         jnp.zeros((pad,), jnp.float32)])
+
+    step = compat.shard_map(
+        functools.partial(_sharded_lloyd_step, axis=axis),
+        mesh=mesh,
+        in_specs=(P(), P(axis), P(axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    for _ in range(iters):
+        cb = step(cb, Xp, w)
+    return cb
+
+
+def vq_kmeans_sharded(key: jax.Array, X: jax.Array, num_centroids: int, *,
+                      mesh, axis: str = "data", iters: int = 10) -> jax.Array:
+    """``vq_kmeans`` with the fit sharded over ``mesh``'s ``axis`` — the
+    coarse-quantizer fit of the partitioned index build."""
+    cb = kmeans_sharded(key, X, PQConfig(1, num_centroids),
+                        mesh=mesh, axis=axis, iters=iters)
     return cb[0]
 
 

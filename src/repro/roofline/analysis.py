@@ -21,7 +21,24 @@ from __future__ import annotations
 import re
 from typing import Any
 
-from repro.launch import mesh as mesh_lib
+# Hardware constants for the roofline terms (TPU v5e) — the ONE source of
+# truth. The launch layer (mesh policy, dry-run HBM check) re-exports these
+# from here so the roofline table and the dry-run report can never disagree
+# on what a chip is.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+CHIP_HBM_BYTES = 16 * 1024**3  # v5e: 16 GiB
+
+
+def num_chips(mesh) -> int:
+    """Total devices of a mesh — the per-device divisor of every roofline
+    and capacity figure (dry-run report, sharded-index sizing)."""
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -74,9 +91,9 @@ def roofline_terms(
     bytes_per_device: float,
     collective_bytes_per_device: float,
 ) -> dict[str, float]:
-    compute = flops_per_device / mesh_lib.PEAK_FLOPS_BF16
-    memory = bytes_per_device / mesh_lib.HBM_BW
-    collective = collective_bytes_per_device / mesh_lib.ICI_BW
+    compute = flops_per_device / PEAK_FLOPS_BF16
+    memory = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
     dominant = max(
         ("compute", compute), ("memory", memory), ("collective", collective),
         key=lambda kv: kv[1],
@@ -131,7 +148,7 @@ def analyze(compiled, lowered=None, model_flops_total: float | None = None,
                            + mem.output_size_in_bytes
                            + mem.temp_size_in_bytes
                            - mem.alias_size_in_bytes),
-            "hbm_limit": mesh_lib.CHIP_HBM_BYTES,
+            "hbm_limit": CHIP_HBM_BYTES,
         },
         **roofline_terms(flops, byts, coll["collective_bytes"]),
     }

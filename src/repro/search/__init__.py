@@ -9,6 +9,11 @@ one front door for every retrieval call in the repo:
   exact     tiled brute-force MIPS — the recall oracle
   flat      flat ADC over PQ/RQ codes (kernels/adc_lookup full scan)
   ivf       probe + fused selected-block Pallas scan (index/search.py)
+  sharded   the row-sharded twins (``exact_sharded``/``flat_sharded``/
+            ``ivf_sharded``): corpus partitioned over the mesh's "data"
+            axis, per-shard local scans under shard_map, all_gather +
+            re-top-k merge; R/centroids/codebooks stay replicated so a
+            RotationDelta refresh is in-place and recompile-free
   registry  ``make`` / ``names`` — the backend string registry
   engine    ``Engine`` — batching front-end: bucketized ragged batches,
             per-(bucket, k, nprobe) compile cache, per-query ADC LUT
@@ -33,7 +38,15 @@ demos), ``benchmarks/ivf_recall_qps.py`` (backend sweep on one harness).
 package dispatches to. See README.md §Serving engine for the migration
 table.
 """
-from repro.search import base, engine, exact, flat, ivf, registry  # noqa: F401
+from repro.search import (  # noqa: F401
+    base,
+    engine,
+    exact,
+    flat,
+    ivf,
+    registry,
+    sharded,
+)
 from repro.search.base import (  # noqa: F401
     SearchConfig,
     Searcher,
@@ -45,3 +58,11 @@ from repro.search.exact import Exact, ExactState  # noqa: F401
 from repro.search.flat import ADCState, FlatADC  # noqa: F401
 from repro.search.ivf import IVF  # noqa: F401
 from repro.search.registry import make, names  # noqa: F401
+from repro.search.sharded import (  # noqa: F401
+    ExactSharded,
+    FlatSharded,
+    IVFSharded,
+    ShardedADCState,
+    ShardedExactState,
+    attach_shards,
+)

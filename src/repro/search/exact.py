@@ -46,8 +46,10 @@ class ExactState:
     tile_rows: int = dataclasses.field(default=4096, metadata={"static": True})
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _exact_search(state: ExactState, Q: jax.Array, k: int) -> SearchResult:
+def _exact_search_impl(state: ExactState, Q: jax.Array,
+                       k: int) -> SearchResult:
+    """The tiled scan body, un-jit'd — also the per-shard local scan of the
+    ``exact_sharded`` backend (called inside shard_map)."""
     QR = Q @ state.R.astype(Q.dtype)
     n = state.XR.shape[1]
     tiles = state.XR.reshape(-1, state.tile_rows, n)
@@ -72,6 +74,10 @@ def _exact_search(state: ExactState, Q: jax.Array, k: int) -> SearchResult:
     (scores, ids), _ = jax.lax.scan(merge, init, (tiles, tile_ids))
     scanned = jnp.full((b,), jnp.sum(state.ids >= 0), dtype=jnp.int32)
     return SearchResult(scores=scores, ids=ids, scanned=scanned)
+
+
+_exact_search = functools.partial(jax.jit, static_argnames=("k",))(
+    _exact_search_impl)
 
 
 @dataclasses.dataclass(frozen=True)

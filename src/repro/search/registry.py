@@ -9,24 +9,37 @@ examples and benchmarks. Now every retrieval call resolves a spec string:
     search.make("flat_adc")    # PQ/RQ full scan via kernels/adc_lookup
     search.make("ivf")         # probe + fused selected-block Pallas scan
 
+plus the row-sharded twins — same transform, same SearchResult contract,
+corpus partitioned over the mesh's "data" axis with an all_gather +
+re-top-k merge (``search/sharded.py``):
+
+    search.make("exact_sharded", mesh=mesh)
+    search.make("flat_sharded", mesh=mesh)
+    search.make("ivf_sharded", mesh=mesh)
+
 ``names()`` is what benchmarks sweep (``benchmarks/ivf_recall_qps.py``
 runs all backends on one harness); aliases keep informal spellings
 working without double-counting in sweeps.
 """
 from __future__ import annotations
 
-from repro.search import base, exact, flat, ivf
+from repro.search import base, exact, flat, ivf, sharded
 
 _REGISTRY: dict[str, type] = {
     "exact": exact.Exact,
     "flat_adc": flat.FlatADC,
     "ivf": ivf.IVF,
+    "exact_sharded": sharded.ExactSharded,
+    "flat_sharded": sharded.FlatSharded,
+    "ivf_sharded": sharded.IVFSharded,
 }
 
 _ALIASES = {
     "flat": "flat_adc",
     "brute_force": "exact",
     "bruteforce": "exact",
+    "flat_adc_sharded": "flat_sharded",
+    "sharded": "ivf_sharded",
 }
 
 

@@ -1,0 +1,639 @@
+"""Row-sharded searcher family: the corpus partitioned over the device mesh.
+
+The replicated backends cap corpus size at one chip's HBM and throughput at
+one chip's bandwidth. This module is the distributed half of the registry —
+every replicated backend gets a ``*_sharded`` twin that keeps the paper's
+serving transform and the SearchResult contract while the corpus lives
+partitioned over the mesh's "data" axis end to end (the GPU-scale ANN
+recipe of Wieschollek et al.: partition the database, search partitions in
+parallel, merge per-partition top-k):
+
+  exact_sharded    per-shard tiled brute-force scan over local rows
+  flat_sharded     per-shard flat ADC scan over the local CSR codes
+  ivf_sharded      per-shard probe + fused selected-block scan — every
+                   device probes the same top-``nprobe`` lists of the
+                   SHARED coarse quantizer but scans only its local lists
+
+All three run the existing single-device scan as the shard-local body of a
+``compat.shard_map``: per-shard arrays (rotated corpus / CSR codes, ids,
+list offsets) are stacked on a leading shard axis and partitioned with the
+``ivf_sharded`` rule table (sharding/rules.py — corpus rows over
+("pod", "data")), while R, the coarse centroids, and the residual
+codebooks stay replicated (O(n²) vs O(N) state). Each shard emits a padded
+local top-k honoring the −inf/−1 contract — including when k exceeds its
+local pool — and the static-shape merge is an ``all_gather`` of the
+(b, k) runs + re-top-k (``kernels.ops.topk_merge``), so the collective
+payload is O(b·k·shards), independent of corpus size.
+
+Parity: built (or ``attach``-ed) from the same artifacts, a sharded
+backend returns bit-identical scores to its replicated twin — per-row
+scores are computed by the same kernel on the same codes, and the merge
+only reorders candidates (tests/test_distributed.py pins all three on an
+8-fake-device mesh). ``refresh`` broadcasts the (small, replicated)
+RotationDelta and updates R/coarse/codebooks in place — per-shard CSR
+state, pytree structure, and statics are untouched, so a live rotation
+refresh costs zero recompiles and zero cross-device traffic
+(``maintain.rotate_components``).
+
+The registry serves them like any other backend::
+
+    mesh = launch.mesh.make_data_mesh()            # ("data",) over all devices
+    searcher = search.make("ivf_sharded", mesh=mesh)
+    state = searcher.build(key, corpus, R, cfg)    # corpus rows partitioned
+    engine = search.Engine(searcher, state, k=10, nprobe=16)
+
+and ``search.Engine`` needs no changes: the LUT cache keys on replicated
+quantities, the compile cache on (bucket, k, nprobe), and chunked/ragged
+batches flow through the shard_map'd executables unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat, quant, rotations
+from repro.index import ivf as index_ivf
+from repro.index import maintain
+from repro.index import search as index_search
+from repro.index.ivf import IVFPQIndex
+from repro.kernels import ops as kops
+from repro.search import exact as exact_mod
+from repro.search.base import SearchConfig, SearchResult, topk_padded
+from repro.sharding import rules as sh
+
+
+AxisSpec = str | tuple[str, ...]
+
+
+def resolve_mesh(mesh: Mesh | None = None,
+                 axis: AxisSpec = "auto") -> Mesh:
+    """The serving mesh: an explicit one, else the ambient mesh context (if
+    it has a shard axis), else a fresh 1-axis mesh over every device.
+
+    The ambient mesh must be a concrete ``Mesh`` — shard placement needs
+    real devices, and new JAX's ``use_mesh`` context reports an
+    AbstractMesh (no device list), which cannot place index shards.
+    """
+    if mesh is not None:
+        return mesh
+    ambient = compat.current_mesh()
+    if (isinstance(ambient, Mesh)
+            and getattr(ambient, "devices", None) is not None):
+        try:
+            resolve_axes(ambient, axis)
+            return ambient
+        except ValueError:
+            pass
+    from repro.launch.mesh import make_data_mesh
+
+    return make_data_mesh()
+
+
+def resolve_axes(mesh: Mesh, axis: AxisSpec = "auto") -> tuple[str, ...]:
+    """The mesh axes the corpus rows shard over.
+
+    ``"auto"`` takes the row-sharded rule table's axes present on this
+    mesh (``IVF_SHARDED_RULES["ivf_rows"] == ("pod", "data")`` → both on a
+    multi-pod mesh, just ``("data",)`` on a data-only one), so the shard
+    count is the FULL product of the row axes — a (2, 16) pod×data mesh
+    shards 32 ways, it does not silently replicate over "pod"."""
+    if axis == "auto" or axis is None:
+        rule = sh.IVF_SHARDED_RULES["ivf_rows"]
+        kept = tuple(a for a in rule if a in mesh.shape)
+        if not kept:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has none of the row-shard axes "
+                f"{rule}")
+        return kept
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no {a!r} axis to shard over")
+    return axes
+
+
+def _num_shards(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _place_sharded(arr: jax.Array, mesh: Mesh,
+                   axes: tuple[str, ...]) -> jax.Array:
+    """Partition a stacked (S, ...) per-shard array over the mesh: leading
+    (shard) axis over the resolved row axes — the placement half of the
+    ``ivf_sharded`` rule table, with S = the axis-size product by
+    construction so the spec never silently drops to replication."""
+    spec = P(axes if len(axes) > 1 else axes[0],
+             *([None] * (arr.ndim - 1)))
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
+
+def _replicated_specs(tree) -> object:
+    """A matching tree of replicated PartitionSpecs for a pytree argument."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _shard_spec(axes: tuple[str, ...]) -> P:
+    """in_spec for a stacked (S, ...) per-shard array: leading dim over the
+    resolved row axes."""
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def _merge_local_topk(scores: jax.Array, ids: jax.Array, k: int,
+                      axes: tuple[str, ...]) -> tuple[jax.Array, jax.Array]:
+    """Inside shard_map: concatenate every shard's padded (b, k) run and
+    re-top-k. Static shapes — (b, S·k) — whatever the per-shard pools."""
+    g_scores = jax.lax.all_gather(scores, axes, axis=1, tiled=True)
+    g_ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
+    return kops.topk_merge(g_scores, g_ids, k)
+
+
+# ---------------------------------------------------------------------------
+# exact_sharded
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedExactState:
+    """Rotated corpus stacked per shard; R replicated. ``mesh``/``axes``
+    are static aux data, so jit specializes per mesh layout and a refresh
+    (same shapes, same statics) never invalidates a compiled executable."""
+
+    R: jax.Array        # (n, n) serving rotation, replicated
+    XR: jax.Array       # (S, rows_s, n) rotated corpus, zero-padded
+    ids: jax.Array      # (S, rows_s) int32 global item ids, −1 = padding
+    mesh: Mesh = dataclasses.field(metadata={"static": True})
+    tile_rows: int = dataclasses.field(default=4096,
+                                       metadata={"static": True})
+    axes: tuple[str, ...] = dataclasses.field(default=("data",),
+                                              metadata={"static": True})
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _exact_sharded_search(state: ShardedExactState, Q: jax.Array,
+                          k: int) -> SearchResult:
+    axes = state.axes
+
+    def local(R, XR_s, ids_s, Q):
+        lstate = exact_mod.ExactState(R=R, XR=XR_s[0], ids=ids_s[0],
+                                      tile_rows=state.tile_rows)
+        res = exact_mod._exact_search_impl(lstate, Q, k)
+        scores, ids = _merge_local_topk(res.scores, res.ids, k, axes)
+        return SearchResult(scores=scores, ids=ids,
+                            scanned=jax.lax.psum(res.scanned, axes))
+
+    f = compat.shard_map(
+        local, mesh=state.mesh,
+        in_specs=(P(), _shard_spec(axes), _shard_spec(axes), P()),
+        out_specs=SearchResult(scores=P(), ids=P(), scanned=P()),
+        check_vma=False,
+    )
+    return f(state.R, state.XR, state.ids, Q)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactSharded:
+    """Registry backend ``"exact_sharded"`` (see module docstring)."""
+
+    name: ClassVar[str] = "exact_sharded"
+    mesh: Mesh | None = None
+    axis: AxisSpec = "auto"
+
+    def build(self, key: jax.Array, corpus: jax.Array, R: jax.Array,
+              cfg: SearchConfig) -> ShardedExactState:
+        del key  # deterministic build
+        mesh = resolve_mesh(self.mesh, self.axis)
+        axes = resolve_axes(mesh, self.axis)
+        S = _num_shards(mesh, axes)
+        R = jnp.asarray(R)
+        XR = jnp.asarray(corpus) @ R.astype(corpus.dtype)
+        n_rows, n = XR.shape
+        rows_s = max(-(-n_rows // S), 1)
+        tile = max(1, min(cfg.tile_rows, rows_s))
+        rows_s = -(-rows_s // tile) * tile          # whole tiles per shard
+        pad = rows_s * S - n_rows
+        ids = jnp.concatenate([
+            jnp.arange(n_rows, dtype=jnp.int32),
+            jnp.full((pad,), -1, jnp.int32),
+        ]).reshape(S, rows_s)
+        XR = jnp.pad(XR, ((0, pad), (0, 0))).reshape(S, rows_s, n)
+        return ShardedExactState(
+            R=R, XR=_place_sharded(XR, mesh, axes),
+            ids=_place_sharded(ids, mesh, axes),
+            mesh=mesh, tile_rows=tile, axes=axes)
+
+    def search(self, state: ShardedExactState, Q: jax.Array, *,
+               k: int = 10) -> SearchResult:
+        return _exact_sharded_search(state, Q, k)
+
+    def refresh(self, state: ShardedExactState,
+                delta: rotations.RotationDelta) -> ShardedExactState:
+        return dataclasses.replace(
+            state,
+            R=rotations.apply(state.R, delta),
+            XR=rotations.apply(state.XR, delta),
+        )
+
+    def stats(self, state: ShardedExactState) -> dict:
+        ids = np.asarray(state.ids)
+        rows = int(np.sum(ids >= 0))
+        S = ids.shape[0]
+        return dict(
+            backend=self.name,
+            rows=rows,
+            capacity=int(ids.size),
+            dim=int(state.XR.shape[-1]),
+            shards=S,
+            tile_rows=state.tile_rows,
+            scan_rows_per_query=rows,
+            scan_rows_per_query_per_device=rows / S,
+            memory_bytes=int(state.XR.size * state.XR.dtype.itemsize),
+            memory_bytes_per_device=int(
+                state.XR.size * state.XR.dtype.itemsize) // S,
+            compression=1.0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# flat_sharded / ivf_sharded — the quantized family over stacked CSR shards
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedADCState:
+    """Quantized sharded state: shared quantizers + stacked per-shard CSRs.
+
+    R/coarse/quantizer are the replicated O(n²) components a refresh
+    rotates; codes/ids/list_offsets hold one block-aligned CSR per shard
+    (padded to a common capacity with hole rows so they stack). ``nprobe``
+    and ``max_blocks`` (the MAX over shards' longest lists — every shard
+    runs the same program) mirror ``ADCState``'s statics.
+    """
+
+    R: jax.Array              # (n, n) replicated
+    coarse: quant.VQ          # shared coarse quantizer (L centroids)
+    quantizer: quant.Quantizer  # shared residual quantizer
+    codes: jax.Array          # (S, cap_s, Dp) per-shard CSR codes
+    ids: jax.Array            # (S, cap_s) int32 global ids, −1 = hole
+    list_offsets: jax.Array   # (S, L+1) per-shard list offsets
+    mesh: Mesh = dataclasses.field(metadata={"static": True})
+    block_size: int = dataclasses.field(default=128,
+                                        metadata={"static": True})
+    nprobe: int = dataclasses.field(default=8, metadata={"static": True})
+    max_blocks: int = dataclasses.field(default=-1,
+                                        metadata={"static": True})
+    use_kernel: bool = dataclasses.field(default=False,
+                                         metadata={"static": True})
+    axes: tuple[str, ...] = dataclasses.field(default=("data",),
+                                              metadata={"static": True})
+
+    @property
+    def num_shards(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def num_lists(self) -> int:
+        return self.list_offsets.shape[1] - 1
+
+
+def attach_shards(parts: list[IVFPQIndex], *, mesh: Mesh | None = None,
+                  axis: AxisSpec = "auto", nprobe: int = 8,
+                  use_kernel: bool = False) -> ShardedADCState:
+    """Stack per-shard indexes (``ivf.shard_split`` or ``ivf.build_sharded``
+    output) into one servable sharded state.
+
+    All parts must share R / coarse / quantizer / block_size — checked
+    below, because serving decodes every shard against shard 0's
+    quantizers and a mismatch would be silently wrong, not loud. Shorter
+    shards pad to the max capacity with hole rows appended AFTER their
+    sentinel block — unreferenced by any offset, id −1, so both the flat
+    scan (masked) and the probe scan (never scheduled) ignore them.
+
+    Assembly is host-side (one stacked array per field before placement),
+    so the attach step needs the whole index in host memory even though
+    serving state is partitioned — fine up to host RAM (codes are the
+    compressed 2 B-ish/row payload, not the f32 corpus). Past that, feed
+    per-shard chunks through ``ivf.build_sharded`` so no step ever holds
+    more than a chunk, and on a real multi-host pod attach per-host
+    shard lists (single-host process assumption here matches the repo's
+    forced-host-device test rig).
+    """
+    mesh = resolve_mesh(mesh, axis)
+    axes = resolve_axes(mesh, axis)
+    S = _num_shards(mesh, axes)
+    if len(parts) != S:
+        raise ValueError(
+            f"{len(parts)} index shards for a {S}-way {axes!r} mesh axis")
+    head = parts[0]
+    # the shared components must be IDENTICAL across shards — serving
+    # decodes every shard's codes against shard 0's quantizers, so a list
+    # of independently-fit per-chunk indexes would return well-formed but
+    # silently wrong scores. Fail loudly instead (use ``shard_split`` or
+    # ``build_sharded``, which share one fit by construction).
+    for i, p in enumerate(parts[1:], start=1):
+        if (p.block_size != head.block_size
+                or not np.array_equal(np.asarray(p.R), np.asarray(head.R))
+                or not np.array_equal(np.asarray(p.coarse.centroids),
+                                      np.asarray(head.coarse.centroids))
+                or not np.array_equal(np.asarray(p.quantizer.codebooks),
+                                      np.asarray(head.quantizer.codebooks))):
+            raise ValueError(
+                f"index shard {i} does not share shard 0's R/coarse/"
+                "quantizer/block_size — sharded serving requires one fit "
+                "across all shards (ivf.shard_split / ivf.build_sharded)")
+    cap = max(p.capacity for p in parts)
+    codes, ids = [], []
+    for p in parts:
+        extra = cap - p.capacity
+        codes.append(np.pad(np.asarray(p.codes), ((0, extra), (0, 0))))
+        ids.append(np.pad(np.asarray(p.ids), (0, extra),
+                          constant_values=-1))
+    return ShardedADCState(
+        R=head.R, coarse=head.coarse, quantizer=head.quantizer,
+        codes=_place_sharded(jnp.asarray(np.stack(codes)), mesh, axes),
+        ids=_place_sharded(jnp.asarray(np.stack(ids)), mesh, axes),
+        list_offsets=_place_sharded(
+            jnp.asarray(np.stack([np.asarray(p.list_offsets)
+                                  for p in parts])), mesh, axes),
+        mesh=mesh, block_size=head.block_size,
+        nprobe=min(nprobe, head.num_lists),
+        max_blocks=max(max(p.max_list_blocks() for p in parts), 1),
+        use_kernel=use_kernel, axes=axes,
+    )
+
+
+def _local_index(R, coarse, quantizer, codes_s, ids_s, offs_s,
+                 block_size: int) -> IVFPQIndex:
+    """This shard's single-device index view (inside shard_map: the leading
+    shard axis arrives as a size-1 block)."""
+    return IVFPQIndex(R=R, coarse=coarse, quantizer=quantizer,
+                      codes=codes_s[0], ids=ids_s[0],
+                      list_offsets=offs_s[0], block_size=block_size)
+
+
+def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut: jax.Array,
+                  local_body):
+    """Run ``local_body(local_index, QR, lut) -> SearchResult`` on every
+    shard and merge (body already emits a padded local top-k)."""
+    axes = state.axes
+
+    def local(R, coarse, quantizer, codes, ids, offs, QR, lut):
+        idx = _local_index(R, coarse, quantizer, codes, ids, offs,
+                           state.block_size)
+        res = local_body(idx, QR, lut)
+        scores, out_ids = _merge_local_topk(
+            res.scores, res.ids, res.scores.shape[1], axes)
+        return SearchResult(scores=scores, ids=out_ids,
+                            scanned=jax.lax.psum(res.scanned, axes))
+
+    f = compat.shard_map(
+        local, mesh=state.mesh,
+        in_specs=(P(), _replicated_specs(state.coarse),
+                  _replicated_specs(state.quantizer),
+                  _shard_spec(axes), _shard_spec(axes), _shard_spec(axes),
+                  P(), P()),
+        out_specs=SearchResult(scores=P(), ids=P(), scanned=P()),
+        check_vma=False,
+    )
+    return f(state.R, state.coarse, state.quantizer, state.codes, state.ids,
+             state.list_offsets, QR, lut)
+
+
+def _flat_local_body(k: int, use_kernel: bool):
+    def body(idx: IVFPQIndex, QR, lut) -> SearchResult:
+        scores, cand_ids = index_search.flat_adc_prepared(
+            idx, QR, lut, use_kernel=use_kernel)
+        top_scores, top_ids = topk_padded(scores, cand_ids, k)
+        scanned = jnp.full((QR.shape[0],), idx.capacity, jnp.int32)
+        return SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+
+    return body
+
+
+def _ivf_local_body(k: int, nprobe: int, max_blocks: int, use_kernel: bool):
+    def body(idx: IVFPQIndex, QR, lut) -> SearchResult:
+        # every shard probes the same lists of the shared coarse quantizer
+        # (the probe is replicated work, O(b·L)) but scans only its local
+        # CSR blocks — the O(rows) term is what divides by the shard count
+        return index_search._search_core(
+            idx, QR, lut, nprobe=nprobe, k=k, max_blocks=max_blocks,
+            use_kernel=use_kernel)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _flat_sharded_prepared(state: ShardedADCState, QR: jax.Array,
+                           lut: jax.Array, k: int) -> SearchResult:
+    return _sharded_scan(state, QR, lut,
+                         _flat_local_body(k, state.use_kernel))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _ivf_sharded_prepared(state: ShardedADCState, QR: jax.Array,
+                          lut: jax.Array, k: int,
+                          nprobe: int) -> SearchResult:
+    return _sharded_scan(
+        state, QR, lut,
+        _ivf_local_body(k, nprobe, state.max_blocks, state.use_kernel))
+
+
+def _sharded_refresh(state: ShardedADCState,
+                     delta: rotations.RotationDelta) -> ShardedADCState:
+    """Broadcast the (small, replicated) delta: rotate R/coarse/codebooks
+    in place, leave every shard's CSR untouched — structure and statics are
+    refresh-invariant, so compiled executables survive."""
+    maintain.check_refreshable(delta)
+    R, coarse, quantizer = maintain.rotate_components(
+        state.R, state.coarse, state.quantizer,
+        delta.pi, delta.pj, delta.theta)
+    return dataclasses.replace(state, R=R, coarse=coarse,
+                               quantizer=quantizer)
+
+
+def _sharded_adc_stats(name: str, state: ShardedADCState) -> dict:
+    ids = np.asarray(state.ids)
+    live = int(np.sum(ids >= 0))
+    S = state.num_shards
+    code_bytes = int(state.codes.shape[-1] * state.codes.dtype.itemsize)
+    mem = int(state.codes.size * state.codes.dtype.itemsize)
+    return dict(
+        backend=name,
+        rows=live,
+        capacity=int(ids.size),
+        dim=int(state.coarse.dim),
+        shards=S,
+        num_lists=state.num_lists,
+        code_bytes_per_row=code_bytes,
+        compression=float(state.coarse.dim * 4 / code_bytes),
+        memory_bytes=mem,
+        memory_bytes_per_device=mem // S,
+        use_kernel=state.use_kernel,
+    )
+
+
+def _shard_existing(index: IVFPQIndex, mesh: Mesh | None, axis: AxisSpec, *,
+                    nprobe: int, use_kernel: bool) -> ShardedADCState:
+    mesh = resolve_mesh(mesh, axis)
+    axes = resolve_axes(mesh, axis)
+    parts = index_ivf.shard_split(index, _num_shards(mesh, axes))
+    return attach_shards(parts, mesh=mesh, axis=axes, nprobe=nprobe,
+                         use_kernel=use_kernel)
+
+
+# Engine LUT-cache capabilities, shared by both sharded ADC backends (the
+# replicated pair shares these the same way — see flat.py):
+def _rotate_queries(state: ShardedADCState, Q: jax.Array) -> jax.Array:
+    return Q @ state.R
+
+
+def _luts(state: ShardedADCState, QR: jax.Array) -> jax.Array:
+    return state.quantizer.adc_tables(QR)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSharded:
+    """Registry backend ``"flat_sharded"`` (see module docstring)."""
+
+    name: ClassVar[str] = "flat_sharded"
+    mesh: Mesh | None = None
+    axis: AxisSpec = "auto"
+
+    def build(self, key: jax.Array, corpus: jax.Array, R: jax.Array,
+              cfg: SearchConfig) -> ShardedADCState:
+        index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
+                                train_size=cfg.train_size)
+        return self.attach(index, mesh=self.mesh, axis=self.axis,
+                           use_kernel=cfg.use_kernel)
+
+    @staticmethod
+    def attach(index: IVFPQIndex, *, mesh: Mesh | None = None,
+               axis: AxisSpec = "auto", nprobe: int = 8,
+               use_kernel: bool = False) -> ShardedADCState:
+        """Shard an existing replicated index across the mesh — the very
+        codes the single-device backends serve, redistributed (the parity
+        and migration entry point)."""
+        return _shard_existing(index, mesh, axis, nprobe=nprobe,
+                               use_kernel=use_kernel)
+
+    def search(self, state: ShardedADCState, Q: jax.Array, *,
+               k: int = 10) -> SearchResult:
+        QR = _rotate_queries(state, Q)
+        return _flat_sharded_prepared(state, QR, _luts(state, QR), k)
+
+    # -- Engine LUT-cache capabilities -------------------------------------
+    def rotate_queries(self, state: ShardedADCState,
+                       Q: jax.Array) -> jax.Array:
+        return _rotate_queries(state, Q)
+
+    def luts(self, state: ShardedADCState, QR: jax.Array) -> jax.Array:
+        return _luts(state, QR)
+
+    def search_prepared(self, state: ShardedADCState, QR: jax.Array,
+                        lut: jax.Array, *, k: int = 10) -> SearchResult:
+        return _flat_sharded_prepared(state, QR, lut, k)
+
+    def refresh(self, state: ShardedADCState,
+                delta: rotations.RotationDelta) -> ShardedADCState:
+        return _sharded_refresh(state, delta)
+
+    def stats(self, state: ShardedADCState) -> dict:
+        st = _sharded_adc_stats(self.name, state)
+        st["scan_rows_per_query"] = st["capacity"]
+        st["scan_rows_per_query_per_device"] = (st["capacity"]
+                                                / state.num_shards)
+        return st
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFSharded:
+    """Registry backend ``"ivf_sharded"`` (see module docstring)."""
+
+    name: ClassVar[str] = "ivf_sharded"
+    mesh: Mesh | None = None
+    axis: AxisSpec = "auto"
+
+    def build(self, key: jax.Array, corpus: jax.Array, R: jax.Array,
+              cfg: SearchConfig) -> ShardedADCState:
+        index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
+                                train_size=cfg.train_size)
+        return self.attach(index, mesh=self.mesh, axis=self.axis,
+                           nprobe=cfg.nprobe, use_kernel=cfg.use_kernel)
+
+    @staticmethod
+    def attach(index: IVFPQIndex, *, mesh: Mesh | None = None,
+               axis: AxisSpec = "auto", nprobe: int = 8,
+               use_kernel: bool = False) -> ShardedADCState:
+        """Shard an existing replicated index across the mesh (see
+        ``FlatSharded.attach`` — one state serves both sharded ADC
+        backends, like ``ADCState`` does for the replicated pair)."""
+        return _shard_existing(index, mesh, axis, nprobe=nprobe,
+                               use_kernel=use_kernel)
+
+    def effective_nprobe(self, state: ShardedADCState,
+                         nprobe: int | None) -> int:
+        """Engine capability: the probe width actually served (clamped at
+        the shared coarse quantizer's list count)."""
+        return min(state.nprobe if nprobe is None else nprobe,
+                   state.num_lists)
+
+    def prepare_state(self, state: ShardedADCState) -> ShardedADCState:
+        """Engine capability: bake the probe window for a directly-
+        constructed state (``attach_shards`` already did — one host sync
+        over the stacked offsets otherwise)."""
+        if state.max_blocks >= 1:
+            return state
+        lens = np.diff(np.asarray(state.list_offsets), axis=1)
+        return dataclasses.replace(
+            state, max_blocks=max(int(lens.max()) // state.block_size, 1))
+
+    def search(self, state: ShardedADCState, Q: jax.Array, *, k: int = 10,
+               nprobe: int | None = None) -> SearchResult:
+        state = self.prepare_state(state)
+        QR = _rotate_queries(state, Q)
+        return _ivf_sharded_prepared(state, QR, _luts(state, QR), k,
+                                     self.effective_nprobe(state, nprobe))
+
+    # -- Engine LUT-cache capabilities -------------------------------------
+    def rotate_queries(self, state: ShardedADCState,
+                       Q: jax.Array) -> jax.Array:
+        return _rotate_queries(state, Q)
+
+    def luts(self, state: ShardedADCState, QR: jax.Array) -> jax.Array:
+        return _luts(state, QR)
+
+    def search_prepared(self, state: ShardedADCState, QR: jax.Array,
+                        lut: jax.Array, *, k: int = 10,
+                        nprobe: int | None = None) -> SearchResult:
+        # prepare_state is a no-op on an attach_shards state (max_blocks
+        # baked as a STATIC, concrete even under a jit trace); the host
+        # sync only fires for a directly-constructed concrete state, same
+        # as the replicated twin's _max_blocks fallback
+        state = self.prepare_state(state)
+        return _ivf_sharded_prepared(state, QR, lut, k,
+                                     self.effective_nprobe(state, nprobe))
+
+    def refresh(self, state: ShardedADCState,
+                delta: rotations.RotationDelta) -> ShardedADCState:
+        return _sharded_refresh(state, delta)
+
+    def stats(self, state: ShardedADCState) -> dict:
+        st = _sharded_adc_stats(self.name, state)
+        st["nprobe"] = state.nprobe
+        st["max_blocks"] = state.max_blocks
+        per_shard = min(state.nprobe * state.max_blocks * state.block_size,
+                        int(state.codes.shape[1]))
+        st["scan_rows_per_query"] = per_shard * state.num_shards
+        st["scan_rows_per_query_per_device"] = per_shard
+        return st

@@ -98,13 +98,28 @@ PAPER_RULES: dict[str, Any] = dict(RECSYS_BASE_RULES)
 # shards over "model", which splits the selected-list scan across devices.
 # Index storage (centroids, codebooks, CSR codes/ids) is replicated by
 # default — at 2 B/row/subspace a 100M-item index is ~3 GiB, well under
-# chip HBM; a row-sharded variant would flip "ivf_cap" to "model".
+# chip HBM; the row-sharded variant below flips the corpus rows to
+# ("pod", "data").
 IVF_RULES: dict[str, Any] = {
     "act_batch": ("pod", "data"),
     "ivf_cand": "model",
     "ivf_cap": None,
     "ivf_lists": None,
+    "ivf_rows": None,          # shard axis of a stacked per-shard index
 }
+
+# Row-sharded IVF (repro.search sharded backends): the corpus lives
+# partitioned over the mesh's data axes end to end — each device owns one
+# CSR shard (its own block-aligned lists over its local rows) and serves
+# the fused scan locally; results merge with an all_gather + re-top-k.
+# Capacity scales with the mesh: rows/device ≈ HBM / (2 B/row/subspace),
+# so a ("pod", "data") = 32-way shard lifts the 100M-item ceiling to ~3B.
+# Centroids, codebooks, and R stay replicated (they are O(n²), not O(N)).
+IVF_SHARDED_RULES: dict[str, Any] = dict(IVF_RULES)
+IVF_SHARDED_RULES.update({
+    "ivf_cap": ("pod", "data"),
+    "ivf_rows": ("pod", "data"),
+})
 
 # Rotation/PQ parameters are small and replicated everywhere.
 for _t in (LM_BASE_RULES, GNN_BASE_RULES, RECSYS_BASE_RULES, PAPER_RULES):
@@ -169,6 +184,7 @@ RULE_REGISTRY: dict[str, dict[str, Any]] = {
     "recsys": RECSYS_BASE_RULES,
     "paper": PAPER_RULES,
     "ivf": IVF_RULES,
+    "ivf_sharded": IVF_SHARDED_RULES,
 }
 
 
@@ -286,10 +302,7 @@ def constrain(x, logical_axes, rules, mesh=None):
 
 
 def _current_mesh():
-    try:
-        from jax._src.mesh import thread_resources
+    """Ambient mesh context via the version-guarded ``compat`` probe."""
+    from repro import compat
 
-        mesh = thread_resources.env.physical_mesh
-        return None if mesh.empty else mesh
-    except Exception:  # pragma: no cover
-        return None
+    return compat.current_mesh()

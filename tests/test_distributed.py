@@ -86,6 +86,267 @@ def test_ef_psum_int8_under_shard_map():
     assert res["err_shape"] == [8, 64]
 
 
+def test_sharded_backends_match_single_device():
+    """Every ``*_sharded`` backend on an 8-fake-device mesh returns its
+    single-device twin's results — same scores (bit-identical per-row ADC
+    math; merge only reorders), same ids — including the k-exceeds-local-
+    pool edge where each shard holds fewer than k rows."""
+    res = _run(HEADER + textwrap.dedent("""
+        from repro import rotations, search
+        from repro.data import synthetic
+        from repro.launch.mesh import make_data_mesh
+
+        DIM, SUB, K, L, BS = 16, 4, 16, 8, 8
+        N, B = 2000, 16
+        CFG = search.SearchConfig(num_lists=L, subspaces=SUB, codewords=K,
+                                  block_size=BS, nprobe=4, tile_rows=256)
+        X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+        R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+        Q = synthetic.sift_like(jax.random.PRNGKey(2), B, DIM)
+        mesh = make_data_mesh()
+        out = {"devices": jax.device_count()}
+        for sharded, single in (("exact_sharded", "exact"),
+                                ("flat_sharded", "flat_adc"),
+                                ("ivf_sharded", "ivf")):
+            s = search.make(sharded, mesh=mesh)
+            st = s.build(jax.random.PRNGKey(3), X, R, CFG)
+            got = s.search(st, Q, k=10)
+            ss = search.make(single)
+            want = ss.search(ss.build(jax.random.PRNGKey(3), X, R, CFG),
+                             Q, k=10)
+            out[sharded] = dict(
+                scores_close=bool(np.allclose(np.asarray(got.scores),
+                                              np.asarray(want.scores),
+                                              atol=1e-5)),
+                id_agree=float(np.mean(np.asarray(got.ids)
+                                       == np.asarray(want.ids))),
+                shards=int(s.stats(st)["shards"]),
+            )
+            # k > per-shard pool: 50 rows over 8 shards, k = 16
+            Xs = synthetic.sift_like(jax.random.PRNGKey(5), 50, DIM)
+            small = s.build(jax.random.PRNGKey(8), Xs, R, CFG._replace(
+                num_lists=2, codewords=8, nprobe=2, tile_rows=8))
+            r = s.search(small, Xs[:4], k=16)
+            ids = np.asarray(r.ids); sc = np.asarray(r.scores)
+            out[sharded]["k_gt_pool"] = bool(
+                ids.shape == (4, 16)
+                and np.all(np.isneginf(sc[ids < 0]))
+                and np.all(np.isfinite(sc[ids >= 0]))
+                and np.all(np.diff(sc, axis=1) <= 1e-6))
+
+        # ("pod", "data") mesh: the shard count must be the FULL product of
+        # the row axes (2×4 = 8), not just the "data" extent — and the
+        # stacked state must actually partition, not silently replicate
+        pod_mesh = make_mesh_compat((2, 4), ("pod", "data"))
+        s = search.make("ivf_sharded", mesh=pod_mesh)
+        st = s.build(jax.random.PRNGKey(3), X, R, CFG)
+        got = s.search(st, Q, k=10)
+        ss = search.make("ivf")
+        want = ss.search(ss.build(jax.random.PRNGKey(3), X, R, CFG), Q, k=10)
+        shardings = {str(d) for d in st.codes.sharding.device_set}
+        out["pod_data"] = dict(
+            shards=int(s.stats(st)["shards"]),
+            scores_close=bool(np.allclose(np.asarray(got.scores),
+                                          np.asarray(want.scores),
+                                          atol=1e-5)),
+            devices_holding_codes=len(shardings),
+            replicated=bool(st.codes.sharding.is_fully_replicated),
+        )
+        print(json.dumps(out))
+    """))
+    assert res["devices"] == 8
+    for backend in ("exact_sharded", "flat_sharded", "ivf_sharded"):
+        b = res[backend]
+        assert b["shards"] == 8, (backend, b)
+        assert b["scores_close"], (backend, b)
+        assert b["id_agree"] >= 0.95, (backend, b)
+        assert b["k_gt_pool"], (backend, b)
+    assert res["pod_data"]["shards"] == 8, res["pod_data"]
+    assert res["pod_data"]["scores_close"], res["pod_data"]
+    assert not res["pod_data"]["replicated"], res["pod_data"]
+
+
+def test_sharded_engine_refresh_without_recompile():
+    """search.Engine over ivf_sharded on 8 devices: one compile per
+    (bucket, k, nprobe) and a RotationDelta refresh that recompiles
+    nothing while scores stay put (rotation-invariant inner products)."""
+    res = _run(HEADER + textwrap.dedent("""
+        from repro import rotations, search
+        from repro.data import synthetic
+        from repro.launch.mesh import make_data_mesh
+
+        DIM, SUB, K, L, BS = 16, 4, 16, 8, 8
+        N = 2000
+        CFG = search.SearchConfig(num_lists=L, subspaces=SUB, codewords=K,
+                                  block_size=BS, nprobe=4)
+        X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+        R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+        Q = np.asarray(synthetic.sift_like(jax.random.PRNGKey(2), 16, DIM))
+        s = search.make("ivf_sharded", mesh=make_data_mesh())
+        state = s.build(jax.random.PRNGKey(3), X, R, CFG)
+        engine = search.Engine(s, state, k=10, nprobe=4, min_bucket=4)
+        for b in (3, 4, 7, 3):
+            engine.search(Q[:b])
+        compiles = engine.stats()["compiles"]
+        before = engine.search(Q[:8])
+
+        G = jax.random.normal(jax.random.PRNGKey(9), (DIM, DIM))
+        learner = rotations.make("subspace_gcd", sub=DIM // SUB)
+        _, delta = learner.update(learner.init_from(R), G, 1e-3,
+                                  jax.random.PRNGKey(0))
+        engine.refresh(delta)
+        after = engine.search(Q[:8])
+        st = engine.stats()
+        print(json.dumps({
+            "compiles_before": compiles,
+            "compiles_after": st["compiles"],
+            "refreshes": st["refreshes"],
+            "scores_stable": bool(np.allclose(np.asarray(before.scores),
+                                              np.asarray(after.scores),
+                                              atol=1e-4)),
+        }))
+    """))
+    assert res["compiles_before"] == 2          # buckets {4, 8}
+    assert res["compiles_after"] == res["compiles_before"]
+    assert res["refreshes"] == 1
+    assert res["scores_stable"]
+
+
+def test_sharded_kmeans_matches_single_device_fit():
+    """quant.kmeans.kmeans_sharded (per-shard assign + psum accumulate)
+    reaches the single-device fit's distortion — same Lloyd update, only
+    the partial-sum order differs."""
+    res = _run(HEADER + textwrap.dedent("""
+        from repro.data import synthetic
+        from repro.launch.mesh import make_data_mesh
+        from repro.quant import kmeans as km
+
+        X = synthetic.sift_like(jax.random.PRNGKey(0), 1027, 16)  # ragged
+        cb1 = km.vq_kmeans(jax.random.PRNGKey(7), X, 16, iters=8)
+        cb2 = km.vq_kmeans_sharded(jax.random.PRNGKey(7), X, 16,
+                                   mesh=make_data_mesh(), iters=8)
+        Xn = np.asarray(X)
+        def distortion(cb):
+            d = ((Xn[:, None, :] - np.asarray(cb)[None]) ** 2).sum(-1)
+            return float(d.min(axis=1).mean())
+        d1, d2 = distortion(cb1), distortion(cb2)
+        print(json.dumps({"d_single": d1, "d_sharded": d2,
+                          "shape_ok": np.asarray(cb2).shape == (16, 16)}))
+    """))
+    assert res["shape_ok"]
+    assert res["d_sharded"] <= res["d_single"] * 1.05, res
+
+
+def test_sharded_ingest_never_concatenates_corpus():
+    """index.ivf.build_sharded consumes per-shard chunks (the host-sharded
+    ingest path) and the attached state serves: recall in the same range
+    as the replicated build trained on the same sample budget."""
+    res = _run(HEADER + textwrap.dedent("""
+        from repro import rotations, search
+        from repro.data import synthetic
+        from repro.index import ivf as index_ivf
+        from repro.launch.mesh import make_data_mesh
+        from repro.metrics import recall_at_k
+
+        DIM, N = 16, 2000
+        cfg = search.SearchConfig(num_lists=8, subspaces=4, codewords=16,
+                                  block_size=8, nprobe=8)
+        X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+        R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+        Q = synthetic.sift_like(jax.random.PRNGKey(2), 16, DIM)
+        mesh = make_data_mesh()
+        chunks = [np.asarray(X)[s::8] for s in range(8)]
+        parts = index_ivf.build_sharded(
+            jax.random.PRNGKey(3), chunks, R, cfg.ivf_config(),
+            train_size=1024, mesh=mesh)
+        state = search.attach_shards(parts, mesh=mesh, nprobe=8)
+        res = search.make("ivf_sharded").search(state, Q, k=10)
+        # chunk-local ids -> original row ids for the recall check
+        order = np.concatenate([np.arange(N)[s::8] for s in range(8)])
+        got = np.asarray(res.ids)
+        remap = np.where(got >= 0, order[np.clip(got, 0, N - 1)], -1)
+        truth = np.argsort(-np.asarray(Q @ X.T), axis=1)[:, :10]
+        single = search.make("ivf").build(
+            jax.random.PRNGKey(3), X, R,
+            cfg._replace(train_size=1024))
+        r_single = recall_at_k(
+            np.asarray(search.make("ivf").search(
+                single, Q, k=10, nprobe=8).ids), truth)
+        # independently-fit per-chunk indexes do NOT share quantizers —
+        # attach_shards must refuse them, not serve silently wrong scores
+        rogue = index_ivf.build(jax.random.PRNGKey(11),
+                                jnp.asarray(chunks[0]), R, cfg.ivf_config())
+        try:
+            search.attach_shards([rogue] + parts[1:], mesh=mesh)
+            mismatch_raises = False
+        except ValueError:
+            mismatch_raises = True
+        print(json.dumps({
+            "recall": recall_at_k(remap, truth),
+            "recall_single": r_single,
+            "rows": int(search.make("ivf_sharded").stats(state)["rows"]),
+            "mismatch_raises": mismatch_raises,
+        }))
+    """))
+    assert res["rows"] == 2000
+    assert res["mismatch_raises"]
+    # different training sample (chunk heads vs corpus head) — same range
+    assert res["recall"] >= res["recall_single"] - 0.15, res
+
+
+def test_constrain_is_noop_outside_mesh_context():
+    """sharding.rules.constrain must pass arrays through untouched when no
+    mesh context is active (the compat.current_mesh probe returns None)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compat
+    from repro.sharding import rules as sh
+
+    assert compat.current_mesh() is None
+    x = jnp.arange(12.0).reshape(3, 4)
+    y = sh.constrain(x, ("act_batch", None), sh.IVF_RULES)
+    assert y is x                       # literally untouched, not a copy
+    # and under jit the constraint is absent, not an error
+    out = jax.jit(lambda a: sh.constrain(a, ("act_batch", None),
+                                         sh.IVF_RULES) * 2.0)(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2.0)
+
+
+def test_current_mesh_probe_sees_context():
+    """compat.current_mesh resolves the ambient mesh on this JAX version
+    (public get_abstract_mesh first, legacy thread_resources fallback)."""
+    from repro import compat
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    with mesh:
+        seen = compat.current_mesh()
+        assert seen is not None and not seen.empty
+        assert set(dict(seen.shape)) == {"data", "model"}
+    assert compat.current_mesh() is None
+
+
+def test_ivf_sharded_rule_table_row_shards():
+    """The ivf_sharded rule table maps corpus rows to ("pod", "data") and
+    is registered for config lookup."""
+    from repro.launch.mesh import make_mesh_compat
+    from repro.sharding import rules as sh
+
+    assert sh.RULE_REGISTRY["ivf_sharded"] is sh.IVF_SHARDED_RULES
+    assert sh.IVF_SHARDED_RULES["ivf_rows"] == ("pod", "data")
+    assert sh.IVF_SHARDED_RULES["ivf_cap"] == ("pod", "data")
+    # resolves on a data-only mesh: absent axes are filtered, and the spec
+    # actually partitions the leading (shard) axis
+    mesh = make_mesh_compat((1,), ("data",))
+    spec = sh.logical_to_spec(("ivf_rows", None, None),
+                              sh.IVF_SHARDED_RULES, mesh, (1, 64, 4))
+    assert spec[0] in ("data", ("data",))
+    # the replicated table still replicates rows (migration contract)
+    assert sh.IVF_RULES["ivf_cap"] is None
+
+
 def test_production_mesh_shapes():
     res = _run(HEADER + textwrap.dedent("""
         # make_mesh with 512 logical devices over 8 physical is not possible;

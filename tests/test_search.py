@@ -38,13 +38,23 @@ def data():
 @pytest.fixture(scope="module")
 def states(data):
     """One state per backend; flat_adc attached to the ivf build so both
-    serve the identical codes."""
+    serve the identical codes. The sharded twins attach the same artifacts
+    on the local data mesh (S = 1 in-process; the 8-fake-device parity runs
+    live in tests/test_distributed.py)."""
+    from repro.launch.mesh import make_data_mesh
+
     X, R, Q, _ = data
+    mesh = make_data_mesh()
     ivf_state = search.make("ivf").build(jax.random.PRNGKey(3), X, R, CFG)
     return {
         "exact": search.make("exact").build(jax.random.PRNGKey(3), X, R, CFG),
         "flat_adc": search.FlatADC.attach(ivf_state.index),
         "ivf": ivf_state,
+        "exact_sharded": search.make("exact_sharded", mesh=mesh).build(
+            jax.random.PRNGKey(3), X, R, CFG),
+        "flat_sharded": search.FlatSharded.attach(ivf_state.index, mesh=mesh),
+        "ivf_sharded": search.IVFSharded.attach(ivf_state.index, mesh=mesh,
+                                                nprobe=CFG.nprobe),
     }
 
 
@@ -98,8 +108,8 @@ def test_conformance_refresh(backend, data, states):
     res = searcher.search(moved, Q, k=10)
     np.testing.assert_allclose(np.asarray(before.scores),
                                np.asarray(res.scores), rtol=1e-4, atol=1e-4)
-    new_R = moved.R if backend == "exact" else moved.index.R
-    old_R = state.R if backend == "exact" else state.index.R
+    new_R = moved.R if hasattr(moved, "R") else moved.index.R
+    old_R = state.R if hasattr(state, "R") else state.index.R
     assert float(jnp.max(jnp.abs(new_R - old_R))) > 0
     assert float(rotations.orthogonality_error(new_R)) < 1e-4
 
@@ -115,9 +125,13 @@ def test_conformance_stats(backend, states):
 
 
 def test_registry_make_and_aliases():
-    assert set(search.names()) == {"exact", "flat_adc", "ivf"}
+    assert set(search.names()) == {"exact", "flat_adc", "ivf",
+                                   "exact_sharded", "flat_sharded",
+                                   "ivf_sharded"}
     assert isinstance(search.make("flat"), search.FlatADC)
     assert isinstance(search.make("bruteforce"), search.Exact)
+    assert isinstance(search.make("sharded"), search.IVFSharded)
+    assert isinstance(search.make("flat_adc_sharded"), search.FlatSharded)
     with pytest.raises(ValueError, match="unknown search backend"):
         search.make("faiss")
 
@@ -137,6 +151,22 @@ def test_ivf_full_probe_matches_flat_adc(data, states):
     assert np.mean(np.asarray(a.ids) == np.asarray(b.ids)) >= 0.95
     # and the flat backend scans strictly more rows
     assert np.all(np.asarray(b.scanned) >= np.asarray(a.scanned))
+
+
+def test_sharded_twins_match_replicated_backends(data, states):
+    """Each ``*_sharded`` backend serves the same artifacts as its
+    replicated twin, so scores/ids must agree (S = 1 here; the 8-device
+    parity including cross-shard merge lives in test_distributed.py)."""
+    _, _, Q, _ = data
+    for sharded, single in (("exact_sharded", "exact"),
+                            ("flat_sharded", "flat_adc"),
+                            ("ivf_sharded", "ivf")):
+        a = search.make(sharded).search(states[sharded], Q, k=10)
+        b = search.make(single).search(states[single], Q, k=10)
+        np.testing.assert_allclose(np.asarray(a.scores),
+                                   np.asarray(b.scores), rtol=1e-5,
+                                   atol=1e-5)
+        assert np.mean(np.asarray(a.ids) == np.asarray(b.ids)) >= 0.95, sharded
 
 
 def test_exact_beats_quantized_on_recall(data, states):
@@ -200,6 +230,45 @@ def test_direct_adcstate_construction_searches_exactly(data, states):
     np.testing.assert_allclose(np.asarray(eres.scores),
                                np.asarray(want.scores)[:8], rtol=1e-5,
                                atol=1e-5)
+
+
+def test_shard_split_balances_sparse_ids(data, states):
+    """shard_split partitions by id rank, so sparse/custom id spaces
+    (build(ids=...), maintain.add) still split evenly instead of
+    collapsing onto shard 0."""
+    from repro.index import ivf as index_ivf
+
+    X, R, _, _ = data
+    sparse_ids = jnp.arange(N, dtype=jnp.int32) * 9973 + 5  # sparse, ragged
+    index = index_ivf.build(jax.random.PRNGKey(3), X, R, CFG.ivf_config(),
+                            ids=sparse_ids, train_size=512)
+    parts = index_ivf.shard_split(index, 4)
+    counts = [int(np.sum(np.asarray(p.ids) >= 0)) for p in parts]
+    assert sum(counts) == N
+    assert max(counts) - min(counts) <= 1, counts
+    # and ids are preserved, not remapped
+    got = np.sort(np.concatenate(
+        [np.asarray(p.ids)[np.asarray(p.ids) >= 0] for p in parts]))
+    np.testing.assert_array_equal(got, np.sort(np.asarray(sparse_ids)))
+
+
+def test_direct_sharded_adcstate_prepared_path(data, states):
+    """A directly-constructed ShardedADCState (max_blocks −1) must serve
+    through search_prepared too, deriving the probe window like the
+    replicated twin does."""
+    _, _, Q, _ = data
+    src = states["ivf_sharded"]
+    bare = search.ShardedADCState(
+        R=src.R, coarse=src.coarse, quantizer=src.quantizer,
+        codes=src.codes, ids=src.ids, list_offsets=src.list_offsets,
+        mesh=src.mesh, block_size=src.block_size, nprobe=L, axes=src.axes)
+    assert bare.max_blocks == -1
+    searcher = search.make("ivf_sharded")
+    QR = searcher.rotate_queries(bare, Q)
+    got = searcher.search_prepared(bare, QR, searcher.luts(bare, QR), k=10)
+    want = searcher.search(states["ivf_sharded"], Q, k=10, nprobe=L)
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(want.scores), rtol=1e-5, atol=1e-5)
 
 
 def test_flat_single_list_build(data):
@@ -320,6 +389,32 @@ def test_engine_live_refresh_between_batches(data, states):
     # scores are rotation-invariant; the refreshed engine still serves them
     np.testing.assert_allclose(np.asarray(before.scores),
                                np.asarray(after.scores), rtol=1e-4, atol=1e-4)
+
+
+def test_engine_serves_sharded_backend(data, states):
+    """The sharded family behind the Engine, unchanged: one compile per
+    (bucket, k, nprobe), LUT cache live, refresh without recompiles."""
+    _, R, Q, _ = data
+    Qnp = np.asarray(Q)
+    engine = search.Engine(search.make("ivf_sharded"), states["ivf_sharded"],
+                           k=10, nprobe=4, min_bucket=4)
+    for b in (3, 4, 7, 3):                 # buckets {4, 8}
+        got = engine.search(Qnp[:b])
+        want = search.make("ivf_sharded").search(
+            states["ivf_sharded"], Q[:b], k=10, nprobe=4)
+        np.testing.assert_allclose(np.asarray(got.scores),
+                                   np.asarray(want.scores), rtol=1e-5,
+                                   atol=1e-5)
+    st = engine.stats()
+    assert st["compiles"] == 2
+    assert st["lut_misses"] > 0            # prepared path active
+    compiles = st["compiles"]
+    engine.refresh(_delta(R))
+    after = engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["refreshes"] == 1
+    assert st["compiles"] == compiles      # zero recompiles across refresh
+    assert after.ids.shape == (8, 10)
 
 
 def test_engine_plain_path_and_chunking(data, states):
