@@ -385,11 +385,25 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="run the sharded sweep on N forced host devices "
                          "(subprocess)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH_ivf_recall_qps.json destination dir "
+                         "(default $REPRO_BENCH_DIR; unset → print only)")
     args = ap.parse_args()
     depths = tuple(int(d) for d in args.depths.split(","))
-    run(n=args.n, dim=args.dim, queries=args.queries, lists=args.lists,
+    res, checks = run(
+        n=args.n, dim=args.dim, queries=args.queries, lists=args.lists,
         subspaces=args.subspaces, codewords=args.codewords, depths=depths,
         use_kernel=args.use_kernel, devices=args.devices)
+    from repro import obs
+
+    # --out > $REPRO_BENCH_DIR (no benchmarks.run import: this file also
+    # runs script-style as `python benchmarks/ivf_recall_qps.py`)
+    out_dir = args.out or os.environ.get("REPRO_BENCH_DIR")
+    if out_dir:
+        path = obs.write_bench(out_dir, "ivf_recall_qps",
+                               sections={"ivf": res}, checks=checks,
+                               config=vars(args))
+        print(f"# BENCH written: {path}")
 
 
 if __name__ == "__main__":

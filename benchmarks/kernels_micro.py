@@ -8,6 +8,8 @@ kernel at a production-ish shape.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,8 +20,16 @@ from repro.kernels import ops, ref
 
 
 def run(verbose=True):
+    """Returns ``{kernel: {"ok": bool, "us_per_call": float}}`` — the
+    numerics check plus the measured time, so the BENCH trajectory pins
+    both (a kernel that got fast by going wrong fails the check)."""
     key = jax.random.PRNGKey(0)
     results = {}
+
+    def record(name, ok, us, detail):
+        results[name] = {"ok": bool(ok), "us_per_call": float(us)}
+        if verbose:
+            emit(f"kernels/{name}", us, detail)
 
     # givens_rotate @ (m=8192, n=512)
     m, n = 8192, 512
@@ -33,27 +43,21 @@ def run(verbose=True):
     us = time_call(jax.jit(
         lambda x, a, b, t: ops.apply_pair_rotations(x, a, b, t, use_kernel=False)),
         X, pi, pj, theta)
-    results["givens_rotate"] = ok
-    if verbose:
-        emit("kernels/givens_rotate", us, f"allclose={ok}")
+    record("givens_rotate", ok, us, f"allclose={ok}")
 
     # gcd_score @ n=512
     G = jax.random.normal(key, (512, 512))
     R = jax.random.normal(jax.random.fold_in(key, 2), (512, 512))
     ok = np.allclose(ops.gcd_score(G, R), ref.gcd_score_ref(G, R), atol=1e-2)
     us = time_call(jax.jit(lambda g, r: ref.gcd_score_ref(g, r)), G, R)
-    results["gcd_score"] = ok
-    if verbose:
-        emit("kernels/gcd_score", us, f"allclose={ok}")
+    record("gcd_score", ok, us, f"allclose={ok}")
 
     # pq_assign @ (m=16384, n=512, D=64, K=256)
     Xq = jax.random.normal(key, (16384, 512))
     cb = jax.random.normal(jax.random.fold_in(key, 3), (64, 256, 8))
     ok = bool(jnp.all(ops.pq_assign(Xq, cb) == ref.pq_assign_ref(Xq, cb)))
     us = time_call(jax.jit(lambda x, c: ref.pq_assign_ref(x, c)), Xq, cb)
-    results["pq_assign"] = ok
-    if verbose:
-        emit("kernels/pq_assign", us, f"match={ok}")
+    record("pq_assign", ok, us, f"match={ok}")
 
     # adc_lookup @ (b=8, D=64, K=256, N=65536)
     lut = jax.random.normal(key, (8, 64, 256))
@@ -61,9 +65,7 @@ def run(verbose=True):
     ok = np.allclose(ops.adc_lookup(lut, codes),
                      ref.adc_lookup_ref(lut, codes), atol=1e-3)
     us = time_call(jax.jit(lambda l, c: ref.adc_lookup_ref(l, c)), lut, codes)
-    results["adc_lookup"] = ok
-    if verbose:
-        emit("kernels/adc_lookup", us, f"allclose={ok}")
+    record("adc_lookup", ok, us, f"allclose={ok}")
 
     # embedding_bag @ (V=100k, dim=64, L=16384)
     table = jax.random.normal(key, (100_000, 64))
@@ -74,11 +76,27 @@ def run(verbose=True):
     ok = np.allclose(got, want, atol=1e-3)
     us = time_call(jax.jit(
         lambda t, i, b: ref.embedding_bag_ref(t, i, b, 2048)), table, idx, bags)
-    results["embedding_bag"] = ok
-    if verbose:
-        emit("kernels/embedding_bag", us, f"allclose={ok}")
+    record("embedding_bag", ok, us, f"allclose={ok}")
     return results
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="BENCH_kernels.json destination dir "
+                         "(default $REPRO_BENCH_DIR; unset → print only)")
+    args = ap.parse_args()
+    results = run()
+    from repro import obs
+    from benchmarks.run import resolve_bench_dir
+
+    out_dir = resolve_bench_dir(args.out)
+    if out_dir:
+        path = obs.write_bench(
+            out_dir, "kernels", sections={"kernels": results},
+            checks={f"kernels/{k}": v["ok"] for k, v in results.items()})
+        print(f"# BENCH written: {path}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

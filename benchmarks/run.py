@@ -1,14 +1,36 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One section per paper table/figure (+ kernel microbench + roofline
-aggregation). Prints ``name,us_per_call,derived`` CSV. Use
-``--only fig2a,fig4`` to run a subset, ``--fast`` for the CI-sized pass.
+aggregation). Prints ``name,us_per_call,derived`` CSV while running, and
+emits one merged ``BENCH_<fast|full>.json`` run record through the
+``repro.obs`` trajectory writer — every section's results and claim checks
+in one schema-valid file, appended to the destination trajectory so perf
+history is pinned rather than scrolled away.
+
+Destination resolution: ``--out DIR`` > ``$REPRO_BENCH_DIR`` > (for
+``--fast`` only) the repo's ``benchmarks/`` directory — the committed
+trajectory a fast run extends by default. A full run without an explicit
+destination prints only. Use ``--only fig2a,fig4`` for a subset.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def resolve_bench_dir(cli_out: str | None,
+                      fast_default: bool = False) -> str | None:
+    """--out > $REPRO_BENCH_DIR > (--fast) the tracked benchmarks/ dir."""
+    if cli_out:
+        return cli_out
+    env = os.environ.get("REPRO_BENCH_DIR")
+    if env:
+        return env
+    return _BENCH_DIR if fast_default else None
 
 
 def main() -> None:
@@ -20,6 +42,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="ivf section: run the sharded sweep on N forced "
                          "host devices (subprocess)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH_*.json destination dir (default "
+                         "$REPRO_BENCH_DIR; --fast falls back to the "
+                         "tracked benchmarks/ trajectory)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -29,58 +55,86 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
+    sections: dict = {}
+    checks_all: dict = {}
+
+    def book(name: str, results, checks: dict | None = None) -> None:
+        sections[name] = results
+        for k, v in (checks or {}).items():
+            key = f"{name}/{k}"
+            checks_all[key] = bool(v)
+            if not v:
+                failures.append(key)
 
     if want("fig2a"):
         from benchmarks import fig2a_convergence
-        _res, checks = fig2a_convergence.run(
+        res, checks = fig2a_convergence.run(
             num=2048 if args.fast else 4096,
             iters=15 if args.fast else 25)
-        failures += [f"fig2a/{k}" for k, v in checks.items() if not v]
+        book("fig2a", res, checks)
 
     if want("fig2bc"):
         from benchmarks import fig2bc_stability
-        _out, stable = fig2bc_stability.run(
+        out, stable = fig2bc_stability.run(
             num=2048 if args.fast else 4096,
             runs=3 if args.fast else 5,
             iters=12 if args.fast else 20)
-        if not stable:
-            failures.append("fig2bc/stability")
+        book("fig2bc", out, {"stability": stable})
 
     if want("table1"):
         from benchmarks import fig3_table1_e2e
-        _res, checks = fig3_table1_e2e.run(
+        res, checks = fig3_table1_e2e.run(
             steps=60 if args.fast else 250,
             warmup=30 if args.fast else 40)
-        failures += [f"table1/{k}" for k, v in checks.items() if not v]
+        book("table1", res, checks)
 
     if want("fig4"):
         from benchmarks import fig4_runtime
-        _out, checks = fig4_runtime.run(
+        out, checks = fig4_runtime.run(
             dims=(64, 128, 256) if args.fast else (64, 128, 256, 512))
-        failures += [f"fig4/{k}" for k, v in checks.items() if not v]
+        book("fig4", out, checks)
 
     if want("ivf"):
         # searcher-registry sweep: exact vs flat_adc vs ivf on one harness
         from benchmarks import ivf_recall_qps
-        _res, checks = ivf_recall_qps.run(
+        res, checks = ivf_recall_qps.run(
             n=20_000 if args.fast else 100_000,
             queries=64 if args.fast else 256,
             lists=64 if args.fast else 256,
             depths=(1, 2),
             devices=args.devices)
-        failures += [f"ivf/{k}" for k, v in checks.items() if not v]
+        book("ivf", res, checks)
 
     if want("kernels"):
         from benchmarks import kernels_micro
         results = kernels_micro.run()
-        failures += [f"kernels/{k}" for k, v in results.items() if not v]
+        book("kernels", results,
+             {k: v["ok"] for k, v in results.items()})
 
     if want("roofline"):
         from benchmarks import roofline_table
-        roofline_table.run()
+        res = roofline_table.run()
+        book("roofline", res)
 
-    print(f"# total {time.time()-t0:.1f}s; claim-check failures: "
+    elapsed = time.time() - t0
+    print(f"# total {elapsed:.1f}s; claim-check failures: "
           f"{failures if failures else 'none'}")
+
+    out_dir = resolve_bench_dir(args.out, fast_default=args.fast)
+    if out_dir and sections:
+        from repro import obs
+
+        name = "fast" if args.fast else "full"
+        path = obs.write_bench(
+            out_dir, name, sections=sections, checks=checks_all,
+            config=dict(only=sorted(only) if only else None,
+                        fast=args.fast, devices=args.devices,
+                        elapsed_s=elapsed))
+        errs = obs.validate_bench(path)
+        print(f"# BENCH written: {path} "
+              f"({'schema-valid' if not errs else f'INVALID: {errs}'})")
+        if errs:
+            sys.exit(1)
     if failures:
         sys.exit(1)
 

@@ -37,10 +37,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import rotations
+from repro import obs, rotations
 from repro.core import givens
 from repro.index import ivf
 from repro.index.ivf import IVFPQIndex
+
+
+def refresh_health(R: jax.Array,
+                   delta: rotations.RotationDelta | None = None, *,
+                   registry: obs.Registry | None = None) -> dict:
+    """Host-side refresh health: the live signal for the paper's
+    train-while-serving story. Records two gauges on ``registry`` (default:
+    the global ``repro.obs`` registry):
+
+      * ``refresh.orthogonality_drift`` — ‖RᵀR − I‖ of the *post-refresh*
+        serving rotation: repeated float32 delta products slowly leave
+        SO(n), and drift here degrades every stored code at once.
+      * ``refresh.delta_norm`` — ‖θ‖ of the applied GivensDelta (Frobenius
+        norm over leaves for dense deltas): a spiking delta norm is a
+        runaway rotation learner, visible before recall moves.
+
+    One (n, n) host sync — call it per refresh, not per query. Tracer
+    inputs (accidentally called under a trace) are skipped, not crashed
+    on. Returns the measured dict either way ``repro.obs`` is toggled.
+    """
+    if isinstance(R, jax.core.Tracer):
+        return {}
+    reg = registry if registry is not None else obs.default_registry()
+    drift = float(rotations.orthogonality_error(jnp.asarray(R)))
+    norm = None
+    if delta is not None and not any(
+            isinstance(x, jax.core.Tracer)
+            for x in jax.tree_util.tree_leaves(delta)):
+        if isinstance(delta, rotations.GivensDelta):
+            norm = float(np.linalg.norm(np.asarray(delta.theta)))
+        else:
+            norm = float(np.sqrt(sum(
+                float(np.sum(np.square(np.asarray(leaf))))
+                for leaf in jax.tree_util.tree_leaves(delta))))
+        reg.gauge("refresh.delta_norm").set(norm)
+    reg.gauge("refresh.orthogonality_drift").set(drift)
+    reg.counter("refresh.count").inc()
+    reg.event("refresh", orthogonality_drift=drift, delta_norm=norm)
+    return dict(orthogonality_drift=drift, delta_norm=norm)
 
 
 def remove(index: IVFPQIndex, remove_ids: jax.Array) -> IVFPQIndex:

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, rotations
+from repro import configs, obs, rotations
 from repro.data import pipeline as pipe_lib
 from repro.data import synthetic
 from repro.launch import mesh as mesh_lib
@@ -115,14 +115,36 @@ def init_model(key, cfg, family):
     raise TypeError(type(cfg))
 
 
+def _rotation_health(params) -> float | None:
+    """Max orthogonality error over the manifold (SO(n)) leaves — the
+    trainer-side twin of ``maintain.refresh_health``'s drift gauge. One
+    host sync per call; callers gate on ``obs.enabled()``."""
+    errs = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+        if name in opt_lib.MANIFOLD_LEAVES and leaf.ndim >= 2 \
+                and leaf.shape[-1] == leaf.shape[-2]:
+            R = leaf.reshape(-1, leaf.shape[-1], leaf.shape[-1])
+            errs.extend(float(rotations.orthogonality_error(r)) for r in R)
+    return max(errs) if errs else None
+
+
 def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
           resume: bool = True, full: bool = False, seed: int = 0,
           ckpt_every: int = 50, watchdog_factor: float = 5.0,
           rotation: str = "gcd_greedy", log_every: int = 10,
-          stop_after: int | None = None):
+          stop_after: int | None = None, obs_log: str | None = None):
     """``stop_after``: checkpoint and exit after that many steps — simulates
     a crash for the resume tests (the schedule still targets ``steps``, so a
-    resumed run is bit-identical to an uninterrupted one)."""
+    resumed run is bit-identical to an uninterrupted one).
+
+    ``obs_log``: enable the global ``repro.obs`` registry with a JSONL
+    event log at that path — per-step spans/metrics (time, loss, grad
+    norm, rotation health every ``log_every``) stream there; the loop
+    stays metric-free when observability is off."""
+    if obs_log:
+        obs.enable(jsonl=obs_log)
+    reg = obs.default_registry()
     arch = configs.get(arch_id)
     cfg = arch.make_config() if full else arch.make_smoke()
     loss_fn = make_loss_fn(cfg, arch.family)
@@ -155,20 +177,34 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
     metrics_hist = []
     for i in range(start_step, steps):
         t0 = time.time()
-        batch_data = next(pipe)
-        state, metrics = step_fn(state, *batch_data)
-        loss = float(metrics["loss"])
+        with reg.span("train.step"):
+            batch_data = next(pipe)
+            state, metrics = step_fn(state, *batch_data)
+            loss = float(metrics["loss"])   # blocks: the span covers compute
         dt = time.time() - t0
         times.append(dt)
         metrics_hist.append(loss)
+        if obs.enabled():
+            reg.distribution("train.step_ms").observe(dt * 1e3)
+            reg.gauge("train.loss").set(loss)   # eq1 term included for
+            reg.gauge("train.grad_norm").set(   # quantization-aware archs
+                float(metrics["grad_norm"]))
         if len(times) > 8:
             med = statistics.median(times[-64:])
             if dt > watchdog_factor * med:
                 print(f"[watchdog] step {i} straggled: {dt:.2f}s vs median "
                       f"{med:.2f}s — would trigger pod health-check")
+                reg.counter("train.straggler_steps").inc()
         if i % log_every == 0:
             print(f"step {i:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            if obs.enabled():
+                health = _rotation_health(state.params)
+                if health is not None:
+                    reg.gauge("train.rotation_orthogonality").set(health)
+                reg.event("train_step", step=i, loss=loss,
+                          grad_norm=float(metrics["grad_norm"]),
+                          step_ms=dt * 1e3, rotation_orthogonality=health)
         if ckpt_dir and (i + 1) % ckpt_every == 0:
             ckpt.save_async(ckpt_dir, i + 1, (state, pipe.state()),
                             metadata={"arch": arch_id, "loss": loss})
@@ -199,11 +235,16 @@ def main():
     ap.add_argument("--rotation", default="gcd_greedy",
                     choices=[n for n in rotations.names()
                              if n != "subspace_gcd"])
+    ap.add_argument("--obs-log", default=None,
+                    help="enable repro.obs and stream step events to this "
+                         "JSONL file; a metrics report prints at exit")
     args = ap.parse_args()
     _, hist = train(args.arch, args.steps, args.batch, args.ckpt_dir,
                     resume=not args.no_resume, full=args.full,
-                    rotation=args.rotation)
+                    rotation=args.rotation, obs_log=args.obs_log)
     print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
+    if args.obs_log:
+        print(obs.report())
 
 
 if __name__ == "__main__":

@@ -9,13 +9,18 @@ def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray,
     """Mean fraction of each row's true top-k found in the predicted top-k.
 
     ``pred_ids`` may contain −1 padding (repro.index returns it when fewer
-    than k candidates survive); padding never counts as a hit.
+    than k candidates survive); padding never counts as a hit. Rows of
+    ``true_ids`` are assumed distinct within a row (they are top-k lists by
+    construction), which makes the broadcast membership test below equal to
+    the set-intersection definition |pred ∩ true| / k — the recall probe
+    calls this on every sample tick, so it is one (m, k, k) comparison
+    rather than a per-row Python set loop.
     """
     pred_ids = np.asarray(pred_ids)
     true_ids = np.asarray(true_ids)
     k = k if k is not None else true_ids.shape[1]
-    hits = []
-    for i in range(pred_ids.shape[0]):
-        pred = {p for p in pred_ids[i, :k].tolist() if p >= 0}
-        hits.append(len(pred & set(true_ids[i, :k].tolist())) / k)
-    return float(np.mean(hits))
+    pred = pred_ids[:, :k]
+    true = true_ids[:, :k]
+    # (m, k_true, k_pred): true id i matched by any non-padding prediction
+    hit = (true[:, :, None] == pred[:, None, :]) & (pred[:, None, :] >= 0)
+    return float(hit.any(axis=2).sum(axis=1).mean() / k)

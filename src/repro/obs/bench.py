@@ -1,0 +1,205 @@
+"""BENCH_*.json — the pinned benchmark trajectory (stable schema + CLI).
+
+Benchmark numbers that only scroll past in CI are anecdotes; this module
+makes them a *trajectory*: each benchmark run appends one structured run
+record to ``BENCH_<name>.json``, the file is committed (or uploaded as a CI
+artifact), and every future perf PR lands against the recorded history.
+
+Schema (``repro.bench/v1``)::
+
+    {
+      "schema": "repro.bench/v1",
+      "name": "fast",                      # trajectory name
+      "runs": [                            # append-only, oldest first
+        {
+          "created": "2026-08-08T12:00:00+00:00",   # ISO-8601 UTC
+          "host": {"backend": "cpu", "device_count": 1,
+                   "jax": "0.4.37", "python": "3.10.12"},
+          "config": {...},                 # the sweep's knobs (JSON scalars)
+          "sections": {"fig4": {...}, "kernels": {...}, ...},
+          "checks": {"fig4/gcd_r_faster_than_cayley_at_512": true, ...}
+        }
+      ]
+    }
+
+``sections`` holds each benchmark's result payload (numbers, tables);
+``checks`` is the flat claim-check map — every value MUST be a bool, so a
+trajectory file doubles as a pass/fail record. ``validate_bench`` enforces
+the schema (CI runs it on the emitted artifact: malformed bench output
+fails the build), and non-finite floats are serialized as null — a NaN can
+never masquerade as a measured number.
+
+CLI::
+
+    python -m repro.obs.bench --validate BENCH_fast.json   # schema check
+    python -m repro.obs.bench --show BENCH_fast.json       # trajectory view
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import platform
+import sys
+import tempfile
+
+import jax
+
+from repro.obs.export import jsonable
+
+SCHEMA = "repro.bench/v1"
+
+
+def host_info() -> dict:
+    return dict(
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        jax=jax.__version__,
+        python=platform.python_version(),
+    )
+
+
+def make_run(sections: dict, checks: dict, config: dict | None = None) -> dict:
+    """One schema-valid run record (timestamps in UTC, payloads coerced to
+    JSON-safe types)."""
+    return dict(
+        created=datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        host=host_info(),
+        config=jsonable(config or {}),
+        sections={str(k): jsonable(v) for k, v in sections.items()},
+        checks={str(k): bool(v) for k, v in checks.items()},
+    )
+
+
+def bench_path(out_dir: str, name: str) -> str:
+    return os.path.join(out_dir, f"BENCH_{name}.json")
+
+
+def load_bench(path: str) -> dict:
+    """Strict load: bare NaN/Infinity tokens are schema violations."""
+    def _reject(tok):
+        raise ValueError(f"non-finite literal {tok!r} in {path}")
+
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh, parse_constant=_reject)
+
+
+def write_bench(out_dir: str, name: str, sections: dict, checks: dict,
+                config: dict | None = None) -> str:
+    """Append one run to the ``BENCH_<name>.json`` trajectory (creating it
+    on first write). The write is atomic (tmp + rename) so a crash cannot
+    leave a truncated trajectory behind."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = bench_path(out_dir, name)
+    doc = {"schema": SCHEMA, "name": name, "runs": []}
+    if os.path.exists(path):
+        try:
+            prev = load_bench(path)
+            if not validate_bench(prev):
+                doc = prev
+        except (ValueError, json.JSONDecodeError):
+            pass  # corrupt trajectory: start fresh rather than crash the run
+    doc["runs"].append(make_run(sections, checks, config))
+    fd, tmp = tempfile.mkstemp(dir=out_dir, suffix=".tmp")
+    with os.fdopen(fd, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1, allow_nan=False)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def validate_bench(doc_or_path) -> list[str]:
+    """Schema check; returns the list of violations ([] == valid)."""
+    if isinstance(doc_or_path, str):
+        try:
+            doc = load_bench(doc_or_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            return [f"unreadable: {e}"]
+    else:
+        doc = doc_or_path
+
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    if not isinstance(doc.get("name"), str) or not doc.get("name"):
+        errs.append("name must be a non-empty string")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        return errs + ["runs must be a non-empty list"]
+    for i, run in enumerate(runs):
+        where = f"runs[{i}]"
+        if not isinstance(run, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        if not isinstance(run.get("created"), str):
+            errs.append(f"{where}.created must be an ISO timestamp string")
+        host = run.get("host")
+        if not isinstance(host, dict) or "backend" not in host \
+                or "device_count" not in host:
+            errs.append(f"{where}.host must carry backend + device_count")
+        sections = run.get("sections")
+        if not isinstance(sections, dict) or not sections:
+            errs.append(f"{where}.sections must be a non-empty object")
+        checks = run.get("checks")
+        if not isinstance(checks, dict):
+            errs.append(f"{where}.checks must be an object")
+        else:
+            for k, v in checks.items():
+                if not isinstance(v, bool):
+                    errs.append(
+                        f"{where}.checks[{k!r}] must be a bool, got "
+                        f"{type(v).__name__}")
+        try:
+            json.dumps(run, allow_nan=False)
+        except (TypeError, ValueError) as e:
+            errs.append(f"{where} not strictly JSON-serializable: {e}")
+    return errs
+
+
+def show(path: str) -> str:
+    """Compact trajectory view: one line per run (date, backend, checks)."""
+    doc = load_bench(path)
+    lines = [f"{path}: trajectory {doc['name']!r}, {len(doc['runs'])} run(s)"]
+    for run in doc["runs"]:
+        checks = run.get("checks", {})
+        bad = [k for k, v in checks.items() if not v]
+        status = "PASS" if not bad else f"FAIL({','.join(bad)})"
+        lines.append(
+            f"  {run.get('created', '?'):<26} "
+            f"{run.get('host', {}).get('backend', '?'):<5} "
+            f"sections={sorted(run.get('sections', {}))} "
+            f"checks={len(checks)} {status}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate / inspect BENCH_*.json trajectory files")
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check each file; non-zero exit on violation")
+    ap.add_argument("--show", action="store_true",
+                    help="print a one-line-per-run trajectory summary")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    for path in args.paths:
+        if args.show:
+            print(show(path))
+        errs = validate_bench(path)
+        if errs:
+            rc = 1
+            for e in errs:
+                print(f"{path}: INVALID: {e}")
+        elif args.validate:
+            doc = load_bench(path)
+            print(f"{path}: valid ({len(doc['runs'])} run(s))")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""Sampling recall probe: live retrieval *quality* as a gauge.
+
+Latency metrics catch a slow server; they cannot catch a server that got
+fast by returning the wrong neighbors. The failure mode unique to this
+paper's train-while-serving story is exactly that: a rotation refresh that
+drifts the serving transform away from the stored codes degrades recall
+while every latency and scan-work number stays green.
+
+``RecallProbe`` holds a small pinned query set and its exact-MIPS ground
+truth (rotation-invariant: for orthogonal R the exact backend's scores
+``(QR)(XR)ᵀ = QXᵀ`` do not depend on R, so truth computed once stays valid
+across every refresh). Replaying the probe set through the serving path
+every ``every``-th request and publishing ``<name>.recall_at_k`` as a gauge
+turns a bad refresh into a visible quality regression instead of a silent
+one. ``search.Engine`` runs an attached probe automatically; probe traffic
+flows through the normal serving path (bucketized, LUT-cached) and is
+counted in the Engine's request metrics like any other caller.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.metrics import recall_at_k
+from repro.obs import registry as reg_mod
+
+
+class RecallProbe:
+    """Replay a pinned query set and gauge recall@k against exact truth.
+
+    ``registry=None`` publishes to the global default registry (so the
+    gauge is a no-op until ``obs.enable()``); ``last`` always holds the
+    most recent measured recall regardless, so callers can alert on it
+    without enabling global metrics.
+    """
+
+    def __init__(self, queries, truth_ids, *, k: int = 10, every: int = 64,
+                 name: str = "probe", registry: reg_mod.Registry | None = None):
+        self.queries = np.asarray(queries)
+        truth_ids = np.asarray(truth_ids)
+        if truth_ids.shape[1] < k:
+            raise ValueError(
+                f"truth has {truth_ids.shape[1]} ids per row, need k={k}")
+        self.truth = truth_ids[:, :k]
+        self.k = k
+        self.every = max(1, every)
+        self.name = name
+        self.registry = registry
+        self.last: float | None = None
+        self._since = 0
+
+    @classmethod
+    def from_exact(cls, corpus, R, queries, *, k: int = 10, every: int = 64,
+                   tile_rows: int = 4096, name: str = "probe",
+                   registry: reg_mod.Registry | None = None) -> "RecallProbe":
+        """Build the ground truth by one exact-backend pass over the corpus
+        (the recall oracle; done once at probe construction)."""
+        from repro import search  # late: repro.search imports repro.obs
+
+        exact = search.make("exact")
+        state = exact.build(jax.random.PRNGKey(0), corpus, R,
+                            search.SearchConfig(tile_rows=tile_rows))
+        truth = np.asarray(exact.search(state, queries, k=k).ids)
+        return cls(queries, truth, k=k, every=every, name=name,
+                   registry=registry)
+
+    def _registry(self) -> reg_mod.Registry:
+        return self.registry or reg_mod.default_registry()
+
+    def run(self, search_fn: Callable) -> float:
+        """Measure now: ``search_fn(queries)`` returns a SearchResult (or a
+        raw ids array); the recall lands in ``last`` + the gauge."""
+        reg = self._registry()
+        with reg.span(f"{self.name}.replay"):
+            res = search_fn(self.queries)
+        ids = np.asarray(getattr(res, "ids", res))
+        recall = recall_at_k(ids, self.truth, self.k)
+        self.last = recall
+        reg.gauge(f"{self.name}.recall_at_k", k=self.k).set(recall)
+        reg.counter(f"{self.name}.runs").inc()
+        reg.event("recall_probe", name=self.name, k=self.k, recall=recall,
+                  queries=int(self.queries.shape[0]))
+        return recall
+
+    def maybe_run(self, search_fn: Callable) -> float | None:
+        """Sampling entry point: runs on every ``every``-th call (the first
+        call measures immediately so a fresh serving loop gets a baseline)."""
+        due = self._since == 0
+        self._since = (self._since + 1) % self.every
+        if due:
+            return self.run(search_fn)
+        return None

@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.quant.base import PQConfig
 from repro.quant.codebook import assign, distortion, split
 
@@ -53,15 +54,43 @@ def kmeans_update(X: jax.Array, codebooks: jax.Array) -> tuple[jax.Array, jax.Ar
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "iters"))
-def kmeans(key: jax.Array, X: jax.Array, cfg: PQConfig, iters: int = 10):
-    """Full k-means per subspace; returns (codebooks, distortion_trace)."""
+def _kmeans_jit(key: jax.Array, X: jax.Array, cfg: PQConfig, iters: int):
     cb0 = kmeans_init(key, X, cfg)
 
     def body(cb, _):
         cb, codes = kmeans_update(X, cb)
         return cb, distortion(X, cb, codes)
 
-    cb, trace = jax.lax.scan(body, cb0, None, length=iters)
+    return jax.lax.scan(body, cb0, None, length=iters)
+
+
+def kmeans(key: jax.Array, X: jax.Array, cfg: PQConfig, iters: int = 10):
+    """Full k-means per subspace; returns (codebooks, distortion_trace).
+
+    When the global ``repro.obs`` registry is enabled, each concrete fit
+    records its per-iteration distortion trace (distribution
+    ``kmeans.distortion`` + one ``kmeans_fit`` event carrying the whole
+    trace) — the convergence signal behind every codebook in the repo.
+    Calls traced under an outer jit skip the recording (tracers carry no
+    values to record).
+    """
+    cb, trace = _kmeans_jit(key, X, cfg, iters)
+    if obs.enabled() and not isinstance(trace, jax.core.Tracer):
+        import numpy as np
+
+        reg = obs.default_registry()
+        t = np.asarray(trace, dtype=np.float64)
+        dist = reg.distribution("kmeans.distortion",
+                                subspaces=cfg.num_subspaces,
+                                codewords=cfg.num_codewords)
+        for v in t.tolist():
+            dist.observe(v)
+        reg.gauge("kmeans.final_distortion",
+                  subspaces=cfg.num_subspaces,
+                  codewords=cfg.num_codewords).set(float(t[-1]))
+        reg.event("kmeans_fit", subspaces=cfg.num_subspaces,
+                  codewords=cfg.num_codewords, iters=int(iters),
+                  trace=t.tolist())
     return cb, trace
 
 

@@ -27,11 +27,16 @@ the hot path shape-stable:
     buffers are donated to the executable, so serving steady-state holds
     one in-flight copy instead of two (donation is skipped on CPU, where
     XLA would warn and ignore it).
-  * **serving stats** — per-request latency, batch/bucket, scan work, LUT
-    hit rate, and compile counts, aggregated by ``stats()``.
+  * **serving observability** — every request lands in a private, always-on
+    ``repro.obs.Registry`` (latency distribution with p50/p95/p99, scanned
+    rows, bucket pad waste, LUT hit rate, compile counts) aggregated by
+    ``stats()``; an attached ``obs.RecallProbe`` replays a pinned query set
+    through the serving path every N requests and gauges live recall@k.
   * **live refresh** — ``engine.refresh(delta)`` absorbs a rotation-learner
     step between batches: training and serving share the one
-    ``RotationDelta`` path end to end.
+    ``RotationDelta`` path end to end. When the global ``repro.obs``
+    registry is enabled the refresh also records health gauges (delta
+    norm, post-refresh orthogonality drift — ``maintain.refresh_health``).
 
 Typical loop::
 
@@ -45,14 +50,13 @@ from __future__ import annotations
 
 import collections
 import inspect
-import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import rotations
+from repro import obs, rotations
 from repro.search.base import SearchResult, Searcher
 
 
@@ -68,12 +72,17 @@ class Engine:
     reuse on repeats; for purely streaming traffic with no repeated
     queries, set ``lut_cache_rows=0`` to disable it (and the prepared
     path) and serve fully on-device.
+
+    ``probe`` (an ``obs.RecallProbe``) is replayed through ``search()``
+    every ``probe.every`` requests; probe traffic takes the normal serving
+    path and is counted in the request metrics like any other caller.
     """
 
     def __init__(self, searcher: Searcher, state: Any, *, k: int = 10,
                  nprobe: int | None = None, min_bucket: int = 8,
                  max_bucket: int = 4096, lut_cache_rows: int = 8192,
-                 donate: bool | None = None, history: int = 512):
+                 donate: bool | None = None, history: int = 512,
+                 probe: obs.RecallProbe | None = None):
         self.searcher = searcher
         if hasattr(searcher, "prepare_state"):
             # bake derived statics now: inside the compiled executables the
@@ -101,8 +110,19 @@ class Engine:
         self._compiled: dict[tuple, Any] = {}
         self._luts: collections.OrderedDict[bytes, np.ndarray] = \
             collections.OrderedDict()
-        self.requests: list[dict] = []
-        self.counters = collections.Counter()
+
+        # private always-on registry: the source of truth behind ``stats()``
+        # and the ``requests`` compat view (window = ``history`` requests)
+        self.obs = obs.Registry(enabled=True, window=max(1, history))
+        self._latency = self.obs.distribution("engine.latency_ms")
+        self._scanned = self.obs.distribution("engine.scanned_rows")
+        self._pad_waste = self.obs.distribution("engine.pad_waste")
+        self._counters = {
+            name: self.obs.counter(f"engine.{name}")
+            for name in ("requests", "queries", "compiles", "refreshes",
+                         "lut_hits", "lut_misses")}
+        self.probe = probe
+        self._in_probe = False
 
     # -- shape bucketing ---------------------------------------------------
     def _bucket(self, b: int) -> int:
@@ -135,9 +155,10 @@ class Engine:
         if key not in self._compiled:
             searcher = self.searcher
             kw = {} if nprobe is None else {"nprobe": nprobe}
+            compiles = self._counters["compiles"]
 
             def fn(state, Q):
-                self.counters["compiles"] += 1  # traced once per key
+                compiles.inc()  # traced once per key
                 return searcher.search(state, Q, k=k, **kw)
 
             self._compiled[key] = jax.jit(
@@ -149,9 +170,10 @@ class Engine:
         if key not in self._compiled:
             searcher = self.searcher
             kw = {} if nprobe is None else {"nprobe": nprobe}
+            compiles = self._counters["compiles"]
 
             def fn(state, QR, lut):
-                self.counters["compiles"] += 1  # traced once per key
+                compiles.inc()  # traced once per key
                 return searcher.search_prepared(state, QR, lut, k=k, **kw)
 
             self._compiled[key] = jax.jit(
@@ -224,44 +246,56 @@ class Engine:
         npb = self._nprobe_key(nprobe)
         bucket = self._bucket(b)
         pad = bucket - b
-        t0 = time.perf_counter()
-        compiled_before = self.counters["compiles"]
+        compiled_before = self._counters["compiles"].value
 
         lut_hits = lut_misses = 0
-        if self._prepared_ok:
-            # the LUT cache keys on raw query bytes — the one place the
-            # batch must visit the host (dtype preserved, matching the
-            # plain path and direct searcher calls); rotation reads the
-            # original array, so a device-resident Q is not re-uploaded
-            Qnp = np.asarray(Q)
-            QR = self.searcher.rotate_queries(self.state, Q)
-            lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
-            QR = jnp.pad(QR, ((0, pad), (0, 0)))
-            if isinstance(lut, np.ndarray):    # assembled from cached rows
-                lut = jnp.asarray(np.pad(lut, ((0, pad), (0, 0), (0, 0))))
-            else:                              # all-miss: still on device
-                lut = jnp.pad(lut, ((0, pad), (0, 0), (0, 0)))
-            res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
-        else:
-            # plain path: never leaves the device
-            Qp = jnp.pad(jnp.asarray(Q), ((0, pad), (0, 0)))
-            res = self._plain_fn(bucket, k, npb)(self.state, Qp)
+        with self.obs.span("engine.search") as sp:
+            if self._prepared_ok:
+                # the LUT cache keys on raw query bytes — the one place the
+                # batch must visit the host (dtype preserved, matching the
+                # plain path and direct searcher calls); rotation reads the
+                # original array, so a device-resident Q is not re-uploaded
+                Qnp = np.asarray(Q)
+                QR = self.searcher.rotate_queries(self.state, Q)
+                lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
+                QR = jnp.pad(QR, ((0, pad), (0, 0)))
+                if isinstance(lut, np.ndarray):  # assembled from cached rows
+                    lut = jnp.asarray(np.pad(lut,
+                                             ((0, pad), (0, 0), (0, 0))))
+                else:                            # all-miss: still on device
+                    lut = jnp.pad(lut, ((0, pad), (0, 0), (0, 0)))
+                res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
+            else:
+                # plain path: never leaves the device
+                Qp = jnp.pad(jnp.asarray(Q), ((0, pad), (0, 0)))
+                res = self._plain_fn(bucket, k, npb)(self.state, Qp)
 
-        res = SearchResult(scores=res.scores[:b], ids=res.ids[:b],
-                           scanned=res.scanned[:b])
-        jax.block_until_ready(res)
-        latency = time.perf_counter() - t0
+            res = SearchResult(scores=res.scores[:b], ids=res.ids[:b],
+                               scanned=res.scanned[:b])
+            sp.sync(res)  # latency includes the device work, as before
+        latency_ms = sp.elapsed_ms
 
-        self.counters.update(requests=1, queries=b, lut_hits=lut_hits,
-                             lut_misses=lut_misses)
-        self.requests.append(dict(
-            batch=b, bucket=bucket, k=k, nprobe=npb,
-            latency_ms=latency * 1e3,
-            scanned_rows=float(np.mean(np.asarray(res.scanned))),
+        scanned_rows = float(np.mean(np.asarray(res.scanned)))
+        self._counters["requests"].inc()
+        self._counters["queries"].inc(b)
+        self._counters["lut_hits"].inc(lut_hits)
+        self._counters["lut_misses"].inc(lut_misses)
+        self._latency.observe(latency_ms)
+        self._scanned.observe(scanned_rows)
+        self._pad_waste.observe(pad / bucket)
+        self.obs.event(
+            "request", batch=b, bucket=bucket, k=k, nprobe=npb,
+            latency_ms=latency_ms, scanned_rows=scanned_rows,
             lut_hits=lut_hits, lut_misses=lut_misses,
-            compiled=self.counters["compiles"] > compiled_before))
-        if len(self.requests) > self.history:
-            del self.requests[: len(self.requests) - self.history]
+            compiled=self._counters["compiles"].value > compiled_before)
+
+        if self.probe is not None and not self._in_probe:
+            self._in_probe = True
+            try:
+                self.probe.maybe_run(
+                    lambda pq: self.search(pq, k=self.probe.k))
+            finally:
+                self._in_probe = False
         return res
 
     # -- live rotation refresh --------------------------------------------
@@ -269,36 +303,75 @@ class Engine:
         """Absorb a rotation-learner step between batches. Cached LUTs are
         invalidated (they depend on R); compiled executables survive (the
         state pytree's structure and statics are refresh-invariant)."""
-        self.state = self.searcher.refresh(self.state, delta)
+        with self.obs.span("engine.refresh") as sp:
+            self.state = self.searcher.refresh(self.state, delta)
+            sp.sync(self.state)
         self._luts.clear()
-        self.counters["refreshes"] += 1
+        self._counters["refreshes"].inc()
+        if obs.enabled():
+            # refresh health (delta norm + orthogonality drift) on the
+            # global registry — a host sync on the (n, n) rotation, so only
+            # when someone is watching
+            from repro.index import maintain
+
+            # the serving rotation lives at state.R (exact/flat/sharded) or
+            # state.index.R (the replicated ivf backend wraps an IVFPQIndex)
+            R = getattr(self.state, "R", None)
+            if R is None:
+                R = getattr(getattr(self.state, "index", None), "R", None)
+            if R is not None:
+                maintain.refresh_health(R, delta)
 
     # -- observability -----------------------------------------------------
+    @property
+    def requests(self) -> list[dict]:
+        """Compat view: the retained per-request records (newest last, at
+        most ``history``), reconstructed from the registry's event window."""
+        return [{k: v for k, v in rec.items() if k not in ("kind", "t")}
+                for rec in self.obs.events("request")]
+
     def stats(self) -> dict:
         """Aggregate serving stats + the backend's static facts.
 
-        Counter keys (requests/queries/compiles/lut_*) are lifetime totals;
-        the latency/scanned aggregates cover the retained request window
-        (``window_requests``, at most ``history``)."""
-        lat = [r["latency_ms"] for r in self.requests]
-        looked = self.counters["lut_hits"] + self.counters["lut_misses"]
-        return dict(
-            requests=self.counters["requests"],
-            queries=self.counters["queries"],
-            compiles=self.counters["compiles"],
+        Two scopes, in one place: **lifetime totals** — every counter key
+        (``requests``, ``queries``, ``compiles``, ``executables``,
+        ``refreshes``, ``lut_hits``, ``lut_misses``, and the
+        ``lut_hit_rate`` derived from them) counts since Engine
+        construction and never resets. **Window-scoped** — every latency /
+        scanned-rows / pad-waste aggregate (mean, p50, p95, p99, max)
+        covers only the retained request window: the last
+        ``window["size"]`` requests, bounded by ``window["capacity"]``
+        (the ``history`` constructor arg). The ``window`` dict makes the
+        scope machine-readable so dashboards don't have to guess."""
+        lat = self._latency.summary()
+        c = {name: m.value for name, m in self._counters.items()}
+        looked = c["lut_hits"] + c["lut_misses"]
+        out = dict(
+            requests=c["requests"],
+            queries=c["queries"],
+            compiles=c["compiles"],
             executables=len(self._compiled),
-            refreshes=self.counters["refreshes"],
-            lut_hits=self.counters["lut_hits"],
-            lut_misses=self.counters["lut_misses"],
-            lut_hit_rate=(self.counters["lut_hits"] / looked
-                          if looked else 0.0),
+            refreshes=c["refreshes"],
+            lut_hits=c["lut_hits"],
+            lut_misses=c["lut_misses"],
+            lut_hit_rate=(c["lut_hits"] / looked if looked else 0.0),
             lut_cached_rows=len(self._luts),
-            window_requests=len(self.requests),
-            latency_ms_mean=float(np.mean(lat)) if lat else 0.0,
-            latency_ms_p50=float(np.median(lat)) if lat else 0.0,
-            latency_ms_max=float(np.max(lat)) if lat else 0.0,
-            scanned_rows_mean=float(np.mean(
-                [r["scanned_rows"] for r in self.requests]))
-            if self.requests else 0.0,
+            window=dict(size=lat.get("window", 0),
+                        capacity=self.history,
+                        scope="latency/scanned/pad aggregates"),
+            window_requests=lat.get("window", 0),
+            latency_ms_mean=lat.get("mean", 0.0),
+            latency_ms_p50=lat.get("p50", 0.0),
+            latency_ms_p95=lat.get("p95", 0.0),
+            latency_ms_p99=lat.get("p99", 0.0),
+            latency_ms_max=(max(self._latency.window_values())
+                            if lat.get("window") else 0.0),
+            scanned_rows_mean=self._scanned.summary().get("mean", 0.0),
+            pad_waste_mean=self._pad_waste.summary().get("mean", 0.0),
             searcher=self.searcher.stats(self.state),
         )
+        if self.probe is not None:
+            out["recall_probe"] = dict(k=self.probe.k,
+                                       recall=self.probe.last,
+                                       every=self.probe.every)
+        return out

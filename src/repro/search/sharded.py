@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import compat, quant, rotations
+from repro import compat, obs, quant, rotations
 from repro.index import ivf as index_ivf
 from repro.index import maintain
 from repro.index import search as index_search
@@ -151,10 +151,38 @@ def _shard_spec(axes: tuple[str, ...]) -> P:
 def _merge_local_topk(scores: jax.Array, ids: jax.Array, k: int,
                       axes: tuple[str, ...]) -> tuple[jax.Array, jax.Array]:
     """Inside shard_map: concatenate every shard's padded (b, k) run and
-    re-top-k. Static shapes — (b, S·k) — whatever the per-shard pools."""
-    g_scores = jax.lax.all_gather(scores, axes, axis=1, tiled=True)
-    g_ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
-    return kops.topk_merge(g_scores, g_ids, k)
+    re-top-k. Static shapes — (b, S·k) — whatever the per-shard pools.
+    The ``jax.named_scope`` labels the gather+merge stage in the HLO, so an
+    XLA profile (``obs.Registry.trace``) separates collective time from
+    scan time at zero runtime cost."""
+    with jax.named_scope("obs.gather_merge"):
+        g_scores = jax.lax.all_gather(scores, axes, axis=1, tiled=True)
+        g_ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
+        return kops.topk_merge(g_scores, g_ids, k)
+
+
+def _record_shard_gauges(backend: str, ids: np.ndarray) -> None:
+    """Per-shard row gauges + the imbalance gauge on the global registry
+    (``ids`` is the stacked (S, rows_s) id array, −1 = hole/padding). Host
+    data is already in hand at build/attach time, so this costs nothing on
+    the query path; gated on ``obs.enabled()`` by the callers."""
+    reg = obs.default_registry()
+    rows = (np.asarray(ids) >= 0).sum(axis=1)
+    for s, r in enumerate(rows.tolist()):
+        reg.gauge("index.shard_rows", backend=backend, shard=s).set(r)
+    imbalance = float(rows.max()) / max(float(rows.mean()), 1.0)
+    reg.gauge("index.shard_imbalance", backend=backend).set(imbalance)
+    reg.event("shard_layout", backend=backend, shards=int(rows.size),
+              rows=[int(r) for r in rows], imbalance=imbalance)
+
+
+def _shard_rows_stats(ids: np.ndarray) -> dict:
+    """The per-shard occupancy facts every sharded ``stats()`` reports."""
+    rows = (np.asarray(ids) >= 0).sum(axis=1)
+    return dict(
+        rows_per_shard=[int(r) for r in rows],
+        shard_imbalance=float(rows.max()) / max(float(rows.mean()), 1.0),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +215,8 @@ def _exact_sharded_search(state: ShardedExactState, Q: jax.Array,
     def local(R, XR_s, ids_s, Q):
         lstate = exact_mod.ExactState(R=R, XR=XR_s[0], ids=ids_s[0],
                                       tile_rows=state.tile_rows)
-        res = exact_mod._exact_search_impl(lstate, Q, k)
+        with jax.named_scope("obs.shard_scan"):
+            res = exact_mod._exact_search_impl(lstate, Q, k)
         scores, ids = _merge_local_topk(res.scores, res.ids, k, axes)
         return SearchResult(scores=scores, ids=ids,
                             scanned=jax.lax.psum(res.scanned, axes))
@@ -227,6 +256,8 @@ class ExactSharded:
             jnp.full((pad,), -1, jnp.int32),
         ]).reshape(S, rows_s)
         XR = jnp.pad(XR, ((0, pad), (0, 0))).reshape(S, rows_s, n)
+        if obs.enabled():
+            _record_shard_gauges(self.name, np.asarray(ids))
         return ShardedExactState(
             R=R, XR=_place_sharded(XR, mesh, axes),
             ids=_place_sharded(ids, mesh, axes),
@@ -261,6 +292,7 @@ class ExactSharded:
             memory_bytes_per_device=int(
                 state.XR.size * state.XR.dtype.itemsize) // S,
             compression=1.0,
+            **_shard_rows_stats(ids),
         )
 
 
@@ -359,6 +391,9 @@ def attach_shards(parts: list[IVFPQIndex], *, mesh: Mesh | None = None,
         codes.append(np.pad(np.asarray(p.codes), ((0, extra), (0, 0))))
         ids.append(np.pad(np.asarray(p.ids), (0, extra),
                           constant_values=-1))
+    if obs.enabled():
+        # one ShardedADCState serves both flat_sharded and ivf_sharded
+        _record_shard_gauges("adc_sharded", np.stack(ids))
     return ShardedADCState(
         R=head.R, coarse=head.coarse, quantizer=head.quantizer,
         codes=_place_sharded(jnp.asarray(np.stack(codes)), mesh, axes),
@@ -391,7 +426,8 @@ def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut: jax.Array,
     def local(R, coarse, quantizer, codes, ids, offs, QR, lut):
         idx = _local_index(R, coarse, quantizer, codes, ids, offs,
                            state.block_size)
-        res = local_body(idx, QR, lut)
+        with jax.named_scope("obs.shard_scan"):
+            res = local_body(idx, QR, lut)
         scores, out_ids = _merge_local_topk(
             res.scores, res.ids, res.scores.shape[1], axes)
         return SearchResult(scores=scores, ids=out_ids,
@@ -480,6 +516,7 @@ def _sharded_adc_stats(name: str, state: ShardedADCState) -> dict:
         memory_bytes=mem,
         memory_bytes_per_device=mem // S,
         use_kernel=state.use_kernel,
+        **_shard_rows_stats(ids),
     )
 
 

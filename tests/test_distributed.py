@@ -347,6 +347,55 @@ def test_ivf_sharded_rule_table_row_shards():
     assert sh.IVF_RULES["ivf_cap"] is None
 
 
+def test_sharded_backends_record_per_shard_metrics():
+    """With repro.obs enabled, build/attach on an 8-fake-device mesh records
+    one ``index.shard_rows`` gauge per shard plus the imbalance gauge, and
+    every sharded ``stats()`` reports per-shard occupancy — the signals the
+    ops story needs to catch a lopsided corpus before it skews latency."""
+    res = _run(HEADER + textwrap.dedent("""
+        from repro import obs, rotations, search
+        from repro.data import synthetic
+        from repro.launch.mesh import make_data_mesh
+
+        DIM, N = 16, 2000
+        CFG = search.SearchConfig(num_lists=8, subspaces=4, codewords=16,
+                                  block_size=8, nprobe=4, tile_rows=256)
+        X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+        R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+        mesh = make_data_mesh()
+        obs.enable()
+        exact = search.make("exact_sharded", mesh=mesh)
+        ex_state = exact.build(jax.random.PRNGKey(3), X, R, CFG)
+        ivf_state = search.make("ivf").build(jax.random.PRNGKey(3), X, R, CFG)
+        search.IVFSharded.attach(ivf_state.index, mesh=mesh, nprobe=4)
+        snap = obs.default_registry().snapshot()
+        gauges = snap["gauges"]
+        ex_rows = [gauges[f"index.shard_rows{{backend=exact_sharded,shard={s}}}"]
+                   for s in range(8)]
+        adc_rows = [gauges[f"index.shard_rows{{backend=adc_sharded,shard={s}}}"]
+                    for s in range(8)]
+        st = exact.stats(ex_state)
+        layouts = obs.default_registry().events("shard_layout")
+        print(json.dumps({
+            "ex_rows": ex_rows,
+            "adc_rows": adc_rows,
+            "ex_imbalance": gauges["index.shard_imbalance{backend=exact_sharded}"],
+            "adc_imbalance": gauges["index.shard_imbalance{backend=adc_sharded}"],
+            "stats_rows": st["rows_per_shard"],
+            "stats_imbalance": st["shard_imbalance"],
+            "layout_backends": sorted(e["backend"] for e in layouts),
+        }))
+    """))
+    assert sum(res["ex_rows"]) == 2000          # every row on exactly one shard
+    assert sum(res["adc_rows"]) == 2000
+    assert res["stats_rows"] == res["ex_rows"]
+    assert res["ex_imbalance"] >= 1.0 and res["adc_imbalance"] >= 1.0
+    assert res["ex_imbalance"] == res["stats_imbalance"]
+    # imbalance stays sane on a near-even split: max/mean < 2
+    assert res["ex_imbalance"] < 2.0, res
+    assert res["layout_backends"] == ["adc_sharded", "exact_sharded"]
+
+
 def test_production_mesh_shapes():
     res = _run(HEADER + textwrap.dedent("""
         # make_mesh with 512 logical devices over 8 physical is not possible;

@@ -1,0 +1,413 @@
+"""repro.obs — registry/span/exporter/probe semantics + instrumentation.
+
+Coverage demanded by ISSUE 6:
+  * counter/gauge/distribution semantics: labels, lifetime vs window
+    scoping, streaming percentiles;
+  * span nesting (dotted paths) + exception safety (timing records with
+    error=True, the stack unwinds, the exception propagates);
+  * disabled-mode zero-side-effects: null singletons, no metric objects,
+    no events, no sink writes;
+  * JSONL event-log round-trip and BENCH_*.json write/append/validate
+    round-trip (+ the validator rejecting malformed trajectories);
+  * the vectorized recall_at_k against the original per-row set-loop
+    reference (−1 padding semantics pinned);
+  * the sampling RecallProbe catching an injected bad rotation through
+    Engine.refresh while every latency metric stays green;
+  * Engine under an ENABLED global registry: zero extra compiles, and
+    stats() carrying the new p99/window keys.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs, rotations, search
+from repro.data import synthetic
+from repro.index import maintain
+from repro.metrics import recall_at_k
+from repro.obs import registry as reg_mod
+
+
+# ---------------------------------------------------------------------------
+# Registry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_lifetime_and_labels():
+    reg = obs.Registry()
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(4)
+    assert reg.counter("hits").value == 5           # same object, lifetime
+    reg.counter("hits", shard=0).inc()              # labels → distinct metric
+    assert reg.counter("hits", shard=0).value == 1
+    assert reg.counter("hits").value == 5
+    reg.gauge("recall", k=10).set(0.9)
+    reg.gauge("recall", k=10).set(0.7)              # last-write-wins
+    g = reg.gauge("recall", k=10)
+    assert g.value == 0.7 and g.updates == 2
+    snap = reg.snapshot()
+    assert snap["counters"]["hits"] == 5
+    assert snap["counters"]["hits{shard=0}"] == 1
+    assert snap["gauges"]["recall{k=10}"] == 0.7
+
+
+def test_distribution_window_vs_lifetime_percentiles():
+    reg = obs.Registry(window=100)
+    d = reg.distribution("lat")
+    for v in range(1, 1001):                        # 1..1000; window keeps
+        d.observe(float(v))                         # only the last 100
+    assert d.count == 1000                          # lifetime
+    assert d.min == 1.0 and d.max == 1000.0         # lifetime extrema
+    assert d.window_values() == [float(v) for v in range(901, 1001)]
+    # percentiles are window-scoped: p50 of 901..1000, not of 1..1000
+    assert d.percentile(50) == pytest.approx(950.5)
+    assert d.percentile(0) == 901.0 and d.percentile(100) == 1000.0
+    s = d.summary()
+    assert s["count"] == 1000 and s["window"] == 100
+    assert s["p99"] == pytest.approx(999.01)
+    assert s["mean"] == pytest.approx(950.5)
+    # empty distribution never divides by zero
+    empty = reg.distribution("never")
+    assert empty.percentile(99) == 0.0 and empty.summary()["mean"] == 0.0
+
+
+def test_span_nesting_paths_and_sync():
+    reg = obs.Registry()
+    with reg.span("serve"):
+        with reg.span("engine.search") as sp:
+            sp.sync(jax.numpy.ones((4,)))           # concrete: blocks fine
+    snap = reg.snapshot()
+    assert "span.serve.ms" in snap["distributions"]
+    assert "span.serve.engine.search.ms" in snap["distributions"]
+    names = [e["name"] for e in reg.events("span")]
+    assert names == ["serve.engine.search", "serve"]  # inner exits first
+    with reg.span("engine.search"):                   # stack unwound: no
+        pass                                          # stale "serve." prefix
+    assert reg.events("span")[-1]["name"] == "engine.search"
+
+
+def test_span_exception_safety():
+    reg = obs.Registry()
+    with pytest.raises(ValueError, match="boom"):
+        with reg.span("outer"):
+            with reg.span("inner"):
+                raise ValueError("boom")
+    evs = {e["name"]: e for e in reg.events("span")}
+    assert evs["outer.inner"]["error"] is True        # both spans recorded,
+    assert evs["outer"]["error"] is True              # both flagged
+    assert reg._span_stack() == []                    # stack fully unwound
+    with reg.span("after"):
+        pass
+    assert reg.events("span")[-1]["name"] == "after"
+
+
+def test_disabled_registry_has_zero_side_effects():
+    reg = obs.Registry(enabled=False)
+    c = reg.counter("x")
+    assert c is reg.gauge("y") is reg.distribution("z")  # shared null object
+    c.inc(10)
+    reg.gauge("y").set(1.0)
+    reg.distribution("z").observe(5.0)
+    reg.event("request", batch=8)
+    sp = reg.span("s")
+    assert sp is reg_mod._NULL_SPAN
+    with sp as s:
+        assert s.sync("v") == "v"                     # pass-through
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "distributions": {}}    # nothing materialized
+    assert reg.events() == []
+    assert reg.distribution("z").percentile(99) == 0.0
+
+
+def test_global_override_toggles_instrumentation():
+    assert not obs.enabled()                          # default: off
+    obs.counter("ignored").inc()
+    with obs.override(True) as reg:
+        assert obs.enabled()
+        obs.counter("seen").inc()
+        assert reg.counter("seen").value == 1
+    assert not obs.enabled()
+    obs.default_registry().reset()
+
+
+# ---------------------------------------------------------------------------
+# Exporters: JSONL round-trip, text report, BENCH trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    reg = obs.Registry()
+    reg.add_sink(obs.JsonlSink(path))
+    reg.event("request", batch=np.int64(8), latency_ms=np.float32(1.5))
+    reg.event("refresh", drift=float("nan"), arr=np.arange(3))
+    reg.reset()                                       # closes the sink
+    evs = obs.read_jsonl(path)
+    assert [e["kind"] for e in evs] == ["request", "refresh"]
+    assert evs[0]["batch"] == 8                       # numpy → plain JSON
+    assert evs[0]["latency_ms"] == 1.5
+    assert evs[1]["drift"] is None                    # NaN can't round-trip
+    assert evs[1]["arr"] == [0, 1, 2]
+    # every line is strict JSON (a crash mid-run leaves parseable lines)
+    for line in open(path):
+        json.loads(line)
+
+
+def test_text_report_lists_every_metric_kind():
+    reg = obs.Registry()
+    reg.counter("engine.requests").inc(3)
+    reg.gauge("probe.recall_at_k", k=10).set(0.93)
+    reg.distribution("engine.latency_ms").observe(2.0)
+    rep = obs.text_report(reg)
+    for needle in ("engine.requests", "probe.recall_at_k{k=10}",
+                   "engine.latency_ms", "p99"):
+        assert needle in rep
+    assert obs.text_report(obs.Registry()) == "(no metrics recorded)"
+
+
+def test_bench_write_append_validate_round_trip(tmp_path):
+    out = str(tmp_path)
+    path = obs.write_bench(out, "fast",
+                           sections={"kernels": {"us": np.float32(3.5)}},
+                           checks={"kernels/ok": np.bool_(True)},
+                           config={"fast": True})
+    assert path.endswith("BENCH_fast.json")
+    assert obs.validate_bench(path) == []
+    doc = obs.load_bench(path)
+    assert doc["schema"] == obs.BENCH_SCHEMA and len(doc["runs"]) == 1
+    run = doc["runs"][0]
+    assert run["checks"]["kernels/ok"] is True        # coerced to real bool
+    assert run["sections"]["kernels"]["us"] == 3.5
+    assert {"backend", "device_count", "jax", "python"} <= set(run["host"])
+    # second write APPENDS — a trajectory, not a snapshot
+    obs.write_bench(out, "fast", sections={"kernels": {"us": 3.1}},
+                    checks={"kernels/ok": True})
+    doc = obs.load_bench(path)
+    assert len(doc["runs"]) == 2
+    assert obs.validate_bench(path) == []
+    # non-finite section values serialize as null, never as bare NaN
+    obs.write_bench(out, "nan", sections={"s": {"v": float("inf")}},
+                    checks={})
+    assert obs.load_bench(obs.bench_path(out, "nan"))["runs"][0][
+        "sections"]["s"]["v"] is None
+
+
+def test_bench_validator_rejects_malformed(tmp_path):
+    out = str(tmp_path)
+    path = obs.write_bench(out, "fast", sections={"a": {}}, checks={"ok": True})
+    doc = obs.load_bench(path)
+    doc["runs"][0]["checks"]["ok"] = "yes"            # non-bool check
+    assert any("bool" in e for e in obs.validate_bench(doc))
+    doc["runs"][0]["checks"]["ok"] = True
+    doc["schema"] = "repro.bench/v0"
+    assert any("schema" in e for e in obs.validate_bench(doc))
+    assert obs.validate_bench({"schema": obs.BENCH_SCHEMA, "name": "x",
+                               "runs": []}) != []     # empty trajectory
+    # sections must be non-empty: a run that measured nothing is a bug
+    bad = obs.load_bench(path)
+    bad["runs"][0]["sections"] = {}
+    assert any("sections" in e for e in obs.validate_bench(bad))
+    # a raw-NaN file on disk fails the strict loader
+    nan_file = tmp_path / "BENCH_raw.json"
+    nan_file.write_text('{"schema": "repro.bench/v1", "name": "x", '
+                        '"runs": [{"v": NaN}]}')
+    assert any("unreadable" in e for e in obs.validate_bench(str(nan_file)))
+    assert obs.bench.main(["--validate", str(nan_file)]) == 1
+    assert obs.bench.main(["--validate", path]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Vectorized recall_at_k vs the original per-row set-loop reference
+# ---------------------------------------------------------------------------
+
+
+def _recall_reference(pred_ids, true_ids, k=None):
+    """The pre-vectorization implementation, verbatim (the semantic pin)."""
+    pred_ids = np.asarray(pred_ids)
+    true_ids = np.asarray(true_ids)
+    k = k if k is not None else true_ids.shape[1]
+    hits = []
+    for i in range(pred_ids.shape[0]):
+        pred = {p for p in pred_ids[i, :k].tolist() if p >= 0}
+        hits.append(len(pred & set(true_ids[i, :k].tolist())) / k)
+    return float(np.mean(hits))
+
+
+@pytest.mark.parametrize("k", [1, 3, 10, None])
+def test_recall_at_k_matches_set_loop_reference(k):
+    rng = np.random.RandomState(0)
+    m, width = 64, 10
+    true = np.stack([rng.choice(1000, size=width, replace=False)
+                     for _ in range(m)])
+    # predictions: partial overlap with truth + −1 padding tails
+    pred = np.stack([rng.choice(1000, size=width, replace=False)
+                     for _ in range(m)])
+    pred[:, :4] = true[:, :4][:, ::-1]                # guaranteed hits
+    pred[rng.rand(m, width) < 0.3] = -1               # padding never counts
+    got = recall_at_k(pred, true, k)
+    assert got == pytest.approx(_recall_reference(pred, true, k))
+    assert recall_at_k(true, true) == 1.0             # perfect prediction
+    assert recall_at_k(np.full_like(true, -1), true) == 0.0   # all padding
+
+
+# ---------------------------------------------------------------------------
+# Instrumented subsystems
+# ---------------------------------------------------------------------------
+
+DIM, SUB = 16, 4
+CFG = search.SearchConfig(num_lists=8, subspaces=SUB, codewords=64,
+                          block_size=8, nprobe=4, tile_rows=256)
+
+
+@pytest.fixture(scope="module")
+def serving():
+    X = synthetic.sift_like(jax.random.PRNGKey(0), 400, DIM)
+    R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+    Q = synthetic.sift_like(jax.random.PRNGKey(2), 16, DIM)
+    state = search.FlatADC.attach(
+        search.make("ivf").build(jax.random.PRNGKey(3), X, R, CFG).index)
+    return X, R, Q, state
+
+
+def test_engine_stats_has_percentiles_and_window(serving):
+    _, _, Q, state = serving
+    engine = search.Engine(search.make("flat_adc"), state, k=10,
+                           min_bucket=4, history=128)
+    for b in (3, 7, 16, 5):
+        engine.search(np.asarray(Q)[:b])
+    st = engine.stats()
+    assert st["requests"] == 4 and st["queries"] == 31
+    assert st["latency_ms_p50"] > 0.0
+    assert st["latency_ms_p99"] >= st["latency_ms_p95"] >= st["latency_ms_p50"]
+    assert st["latency_ms_max"] >= st["latency_ms_p99"]
+    assert st["window"] == {"size": 4, "capacity": 128,
+                            "scope": "latency/scanned/pad aggregates"}
+    assert st["window_requests"] == 4
+    # pad waste: b=3→bucket 4, b=7→8, b=16→16, b=5→8
+    assert st["pad_waste_mean"] == pytest.approx(
+        np.mean([1 / 4, 1 / 8, 0.0, 3 / 8]))
+    # requests compat view mirrors the event window, newest last
+    reqs = engine.requests
+    assert [r["batch"] for r in reqs] == [3, 7, 16, 5]
+    assert set(reqs[0]) == {"batch", "bucket", "k", "nprobe", "latency_ms",
+                            "scanned_rows", "lut_hits", "lut_misses",
+                            "compiled"}
+    assert reqs[0]["compiled"] and not reqs[-1]["compiled"]
+
+
+def test_engine_zero_extra_compiles_with_obs_enabled(serving):
+    """The acceptance gate: flipping the global registry ON changes no
+    compile behavior — same executables, same compile count, and the
+    refresh-health sync happens outside every traced function."""
+    _, R, Q, state = serving
+    Qnp = np.asarray(Q)
+
+    def drive(engine):
+        for b in (3, 7, 3, 16):
+            engine.search(Qnp[:b])
+        engine.refresh(_cross_subspace_delta(scale=1e-3))
+        for b in (3, 7, 16):
+            engine.search(Qnp[:b])
+        return engine.stats()
+
+    base = drive(search.Engine(search.make("flat_adc"), state, k=10,
+                               min_bucket=4))
+    with obs.override(True):
+        inst = drive(search.Engine(search.make("flat_adc"), state, k=10,
+                                   min_bucket=4))
+        # refresh health DID record on the global registry…
+        snap = obs.default_registry().snapshot()
+        assert snap["gauges"]["refresh.orthogonality_drift"] < 1e-3
+        assert snap["gauges"]["refresh.delta_norm"] > 0.0
+    obs.default_registry().reset()
+    # …and the serving behavior is bit-identical: zero extra compiles
+    assert inst["compiles"] == base["compiles"] == 3
+    assert inst["executables"] == base["executables"]
+    assert inst["requests"] == base["requests"]
+
+
+def _cross_subspace_delta(scale: float) -> rotations.GivensDelta:
+    """Planes that straddle PQ subspace boundaries: the serving rotation
+    absorbs them exactly, but ``maintain.rotate_components`` must drop them
+    from the codebooks — at large angles that mismatch destroys recall."""
+    sub = DIM // SUB
+    pi = np.arange(0, DIM // 2)
+    pj = pi + DIM // 2                       # always a different subspace
+    assert not np.any(pi // sub == pj // sub)
+    theta = np.full(pi.shape, scale, np.float32)
+    return rotations.GivensDelta(pi=jax.numpy.asarray(pi),
+                                 pj=jax.numpy.asarray(pj),
+                                 theta=jax.numpy.asarray(theta))
+
+
+def test_recall_probe_detects_injected_bad_rotation(serving):
+    X, R, Q, state = serving
+    probe = obs.RecallProbe.from_exact(X, R, np.asarray(Q), k=10, every=4)
+    engine = search.Engine(search.make("flat_adc"), state, k=10,
+                           min_bucket=4, probe=probe)
+    engine.search(np.asarray(Q))             # first request → baseline probe
+    base = probe.last
+    assert base is not None and base > 0.5   # full-scan ADC: healthy recall
+    assert engine.stats()["recall_probe"] == {"k": 10, "recall": base,
+                                              "every": 4}
+    # inject a BAD refresh: large cross-subspace planes the codebook
+    # rotation cannot absorb
+    engine.refresh(_cross_subspace_delta(scale=1.0))
+    for _ in range(4):                       # sampling cadence: every 4th
+        engine.search(np.asarray(Q)[:4])
+    bad = probe.last
+    assert probe.truth.shape == (16, 10)     # truth never re-derived
+    assert bad < base - 0.2, f"probe missed the bad rotation: {base}->{bad}"
+
+
+def test_recall_probe_sampling_cadence(serving):
+    _, R, Q, state = serving
+    probe = obs.RecallProbe(np.asarray(Q)[:4], np.zeros((4, 10), np.int64),
+                            k=10, every=3)
+    calls = []
+    for i in range(7):
+        probe.maybe_run(lambda q: (calls.append(i),
+                                   np.zeros((4, 10), np.int64))[1])
+    assert calls == [0, 3, 6]                # first call + every 3rd after
+
+
+def test_refresh_health_reports_drift_and_norm():
+    reg = obs.Registry()
+    R = rotations.random_rotation(jax.random.PRNGKey(0), DIM)
+    out = maintain.refresh_health(R, _cross_subspace_delta(1e-2),
+                                  registry=reg)
+    assert out["orthogonality_drift"] < 1e-4          # R is orthogonal
+    assert out["delta_norm"] == pytest.approx(
+        np.linalg.norm(np.full(DIM // 2, 1e-2)))
+    snap = reg.snapshot()
+    assert snap["gauges"]["refresh.orthogonality_drift"] == pytest.approx(
+        out["orthogonality_drift"])
+    assert snap["counters"]["refresh.count"] == 1
+    assert reg.events("refresh")[0]["delta_norm"] == out["delta_norm"]
+    # dense deltas take the Frobenius path
+    dense = rotations.DenseDelta(dR=jax.numpy.eye(DIM) * 2.0)
+    out2 = maintain.refresh_health(R, dense, registry=reg)
+    assert out2["delta_norm"] == pytest.approx(2.0 * np.sqrt(DIM))
+
+
+def test_kmeans_records_distortion_trace():
+    from repro.quant.base import PQConfig
+    from repro.quant.kmeans import kmeans
+
+    X = synthetic.sift_like(jax.random.PRNGKey(0), 256, DIM)
+    with obs.override(True):
+        _, trace = kmeans(jax.random.PRNGKey(1), X, PQConfig(SUB, 16),
+                          iters=6)
+        reg = obs.default_registry()
+        d = reg.distribution("kmeans.distortion", subspaces=SUB, codewords=16)
+        assert d.count == 6
+        assert d.window_values() == pytest.approx(
+            np.asarray(trace, np.float64).tolist())
+        ev = reg.events("kmeans_fit")[-1]
+        assert ev["iters"] == 6 and len(ev["trace"]) == 6
+        # Lloyd's never increases distortion
+        assert ev["trace"][-1] <= ev["trace"][0]
+        assert reg.gauge("kmeans.final_distortion", subspaces=SUB,
+                         codewords=16).value == pytest.approx(ev["trace"][-1])
+    obs.default_registry().reset()
