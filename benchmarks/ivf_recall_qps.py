@@ -179,6 +179,22 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
     out(f"exact,-,-,{n},1.0x,{queries/exact_dt:.0f},1.000,1.000")
     swept.add("exact")
 
+    # --- streaming exact twin: the same oracle past HBM scale; its
+    # double-buffered tile merge must be bit-identical to the resident scan
+    stream_s = search.make("exact_stream")
+    stream_state = stream_s.build(key, X, R,
+                                  search.SearchConfig(tile_rows=8192))
+    stream_res = stream_s.search(stream_state, Q, k=10)
+    stream_dt = _bench(lambda: stream_s.search(stream_state, Q, k=10).scores)
+    stream_exact = bool(np.array_equal(np.asarray(stream_res.ids), exact_ids))
+    out(f"exact_stream,-,-,{n},1.0x,{queries/stream_dt:.0f},"
+        f"{1.0 if stream_exact else 0.0:.3f},"
+        f"{1.0 if stream_exact else 0.0:.3f}")
+    swept.add("exact_stream")
+    checks["streaming_matches_exact"] = stream_exact
+    results["exact_stream"] = dict(qps=queries / stream_dt,
+                                   bit_identical=stream_exact)
+
     ivf_s = search.make("ivf")
     flat_s = search.make("flat_adc")
 
@@ -215,6 +231,18 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
         out(f"flat_adc,{name},-,{flat_scan},1.0x,{queries/flat_dt:.0f},"
             f"1.000,{r_flat_exact:.3f}")
         swept.add("flat_adc")
+
+        # --- int8 ADC LUT pack over the same index: the per-step LUT DMA
+        # shrinks 4× and recall must stay within 0.01 of the f32 tables
+        flat8_state = flat_s.attach(index, use_kernel=use_kernel,
+                                    lut_dtype="int8")
+        flat8_ids = np.asarray(flat_s.search(flat8_state, Q, k=10).ids)
+        flat8_dt = _bench(lambda: flat_s.search(flat8_state, Q, k=10).scores)
+        r_flat8 = recall_at_k(flat8_ids, exact_ids)
+        out(f"flat_adc[int8],{name},-,{flat_scan},1.0x,"
+            f"{queries/flat8_dt:.0f},-,{r_flat8:.3f}")
+        checks[f"{name}_int8_recall_within_0.01"] = (
+            r_flat8 >= r_flat_exact - 0.01)
 
         rows = []
         passed = False
@@ -256,6 +284,7 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
             f"recall@10 vs exact = {post_recall:.3f}")
 
         results[name] = dict(rows=rows, flat_recall_exact=r_flat_exact,
+                             int8_recall_exact=r_flat8,
                              compression=st["compression"],
                              refresh_mismatch=mismatch,
                              post_refresh_recall=post_recall,
@@ -283,6 +312,31 @@ def run(n: int = 100_000, dim: int = 64, queries: int = 256, lists: int = 256,
                 f"{sorted(buckets)} -> {es['compiles']} compiles, LUT hit "
                 f"rate {es['lut_hit_rate']:.2f}, p50 "
                 f"{es['latency_ms_p50']:.1f} ms")
+
+            # --- fused-refresh Engine: the live delta is absorbed on the
+            # query side, so refresh costs zero recompiles and zero
+            # LUT-cache invalidations (trace-counter verified), and the
+            # post-refresh batch reuses every cached LUT row
+            fstate = flat_s.attach(index, use_kernel=use_kernel,
+                                   lut_dtype="int8", fused_refresh=True)
+            feng = search.Engine(flat_s, fstate, k=10, min_bucket=32)
+            feng.search(np.asarray(Q))
+            fc0 = feng.stats()["compiles"]
+            feng.refresh(delta)
+            post_f = feng.search(np.asarray(Q))
+            fs = feng.stats()
+            fr = recall_at_k(np.asarray(post_f.ids), exact_ids)
+            checks["fused_refresh_no_recompile"] = fs["compiles"] == fc0
+            checks["fused_refresh_no_lut_invalidation"] = (
+                fs["lut_invalidations"] == 0 and fs["lut_epoch"] == 0)
+            results["fused_engine"] = dict(
+                compiles=fs["compiles"],
+                lut_invalidations=fs["lut_invalidations"],
+                lut_hits=fs["lut_hits"], post_refresh_recall=fr)
+            out(f"# [engine:fused int8] refresh -> recompiles "
+                f"{fs['compiles'] - fc0}, lut_invalidations "
+                f"{fs['lut_invalidations']}, lut_hits {fs['lut_hits']}, "
+                f"post-refresh recall@10 vs exact = {fr:.3f}")
 
         else:
             # RQ end-to-end: built, searched, refreshed; refresh stays exact

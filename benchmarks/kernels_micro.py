@@ -17,17 +17,34 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro import rotations
 from repro.kernels import ops, ref
+from repro.roofline import analysis
 
 
-def run(verbose=True):
-    """Returns ``{kernel: {"ok": bool, "us_per_call": float}}`` — the
+def _topk_agree(a_ids, b_ids):
+    """Mean per-row overlap of two (b, k) id sets."""
+    a, b = np.asarray(a_ids), np.asarray(b_ids)
+    k = a.shape[1]
+    return float(np.mean([len(set(a[i]) & set(b[i])) / k
+                          for i in range(a.shape[0])]))
+
+
+def run(verbose=True, lut_dtype="int8"):
+    """Returns ``{kernel: {"ok": bool, "us_per_call": float, ...}}`` — the
     numerics check plus the measured time, so the BENCH trajectory pins
-    both (a kernel that got fast by going wrong fails the check)."""
+    both (a kernel that got fast by going wrong fails the check). The PR 7
+    sections additionally book the roofline-model bytes/prediction next to
+    the measured time (``predicted_us`` is the TPU bound; on this CPU
+    container the measured number is the XLA-oracle path, so the pair is
+    recorded as data, not compared as a check).
+
+    ``lut_dtype`` selects the quantized-LUT pack ("int8" | "uint8") the
+    quantized sections exercise; the f32 sections always run.
+    """
     key = jax.random.PRNGKey(0)
     results = {}
 
-    def record(name, ok, us, detail):
-        results[name] = {"ok": bool(ok), "us_per_call": float(us)}
+    def record(name, ok, us, detail, **extra):
+        results[name] = {"ok": bool(ok), "us_per_call": float(us), **extra}
         if verbose:
             emit(f"kernels/{name}", us, detail)
 
@@ -77,6 +94,111 @@ def run(verbose=True):
     us = time_call(jax.jit(
         lambda t, i, b: ref.embedding_bag_ref(t, i, b, 2048)), table, idx, bags)
     record("embedding_bag", ok, us, f"allclose={ok}")
+
+    # ------------------------------------------------------------------
+    # PR 7: quantized-LUT scan, fused LUT build, streaming merge, and the
+    # Engine fused-refresh trace — each with a roofline prediction booked.
+    # ------------------------------------------------------------------
+
+    # adc_lookup with the int8/uint8 LUT pack @ the same scan shape. Parity
+    # (kernel == ref on the pack), quality (top-10 vs f32), and the modeled
+    # scan-traffic reduction the pack buys (the ≥2× acceptance bar).
+    b, Dp, K, N, blk = 8, 64, 256, 65536, 1024
+    codes8 = codes.astype(jnp.uint8)
+    qlut, scales = ops.quantize_luts(lut, lut_dtype)
+    got_q = ops.adc_lookup(qlut, codes8, scales)
+    want_q = ref.adc_lookup_ref(qlut, codes8, scales)
+    base = ref.adc_lookup_ref(lut, codes8)
+    agree = _topk_agree(
+        jax.lax.top_k(got_q, 10)[1], jax.lax.top_k(base, 10)[1])
+    bytes_f32 = analysis.adc_scan_traffic(
+        b, Dp, K, N // blk, blk, "float32", luts_per_step=b)
+    bytes_q = analysis.adc_scan_traffic(
+        b, Dp, K, N // blk, blk, lut_dtype, luts_per_step=b)
+    ratio = bytes_f32 / bytes_q
+    ok = (np.allclose(got_q, want_q, atol=1e-3) and agree >= 0.9
+          and ratio >= 2.0)
+    us = time_call(jax.jit(lambda l, c, s: ref.adc_lookup_ref(l, c, s)),
+                   qlut, codes8, scales)
+    pred = analysis.kernel_predicted(b * N * Dp + 2 * b * Dp * K, bytes_q)
+    record(f"adc_lookup_{lut_dtype}", ok, us,
+           f"top10_agree={agree:.2f} bytes_ratio={ratio:.2f}x",
+           topk_agree=agree, bytes_ratio=float(ratio),
+           predicted_us=pred["predicted_us"], bytes_model=pred["bytes"])
+
+    # fused rotation-aware LUT build @ (b=8, n=512, Dp=64, K=256, sub=8):
+    # the delta hits the query block inside the tile body, so refresh never
+    # touches corpus-side buffers. Parity vs the jnp oracle + prediction.
+    n, sub = 512, 8
+    Qf = jax.random.normal(jax.random.fold_in(key, 7), (8, n))
+    qdelta = jax.random.normal(jax.random.fold_in(key, 8), (n, n)) / np.sqrt(n)
+    cbf = jax.random.normal(jax.random.fold_in(key, 9), (Dp, K, sub))
+    colmap = jnp.eye(Dp)
+    got_f = ops.fused_lut(Qf, qdelta, cbf, colmap)
+    want_f = ref.fused_lut_ref(Qf, qdelta, cbf, colmap)
+    ok = np.allclose(got_f, want_f, atol=1e-3)
+    us = time_call(jax.jit(ref.fused_lut_ref), Qf, qdelta, cbf, colmap)
+    pred = analysis.kernel_predicted(
+        2 * 8 * n * n + 2 * 8 * Dp * K * sub,
+        analysis.fused_lut_traffic(8, n, Dp, K, sub))
+    record("fused_lut", ok, us, f"allclose={ok}",
+           predicted_us=pred["predicted_us"], bytes_model=pred["bytes"])
+
+    # streaming top-k merge: tile-order invariance of the fold the
+    # double-buffered exact scan uses (the recall oracle past HBM).
+    sc = jax.random.normal(jax.random.fold_in(key, 10), (8, 16384))
+    tiles = [(sc[:, i:i + 2048], jnp.arange(i, i + 2048, dtype=jnp.int32))
+             for i in range(0, 16384, 2048)]
+    s1, i1 = ref.streaming_topk_ref([t[0] for t in tiles],
+                                    [t[1] for t in tiles], 10)
+    perm = list(reversed(range(len(tiles))))
+    s2, i2 = ref.streaming_topk_ref([tiles[p][0] for p in perm],
+                                    [tiles[p][1] for p in perm], 10)
+    _, oneshot = jax.lax.top_k(sc, 10)
+    ok = (bool(jnp.array_equal(i1, i2)) and bool(jnp.array_equal(s1, s2))
+          and bool(jnp.array_equal(jnp.sort(i1), jnp.sort(oneshot))))
+    us = time_call(
+        jax.jit(lambda s: ref.streaming_topk_ref(
+            [s[:, i:i + 2048] for i in range(0, 16384, 2048)],
+            [jnp.arange(i, i + 2048, dtype=jnp.int32)
+             for i in range(0, 16384, 2048)], 10)[0]), sc)
+    record("stream_merge", ok, us, f"tile_order_invariant={ok}")
+
+    # Engine fused-refresh trace @ a small live index: a within-subspace
+    # delta must cost zero recompiles and zero LUT-cache invalidations,
+    # and the post-refresh search must reuse every cached LUT row.
+    import time as _time
+    from repro import search
+    dim, nrows = 64, 4096
+    Xs = jax.random.normal(jax.random.fold_in(key, 11), (nrows, dim))
+    Rs = rotations.random_rotation(jax.random.fold_in(key, 12), dim)
+    cfg = search.SearchConfig(subspaces=8, codewords=16,
+                              lut_dtype=lut_dtype, fused_refresh=True)
+    searcher = search.make("flat_adc")
+    state = searcher.build(jax.random.PRNGKey(2), Xs, Rs, cfg)
+    eng = search.Engine(searcher, state, k=10, min_bucket=4)
+    Qs = np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 13), (8, dim)))
+    eng.search(Qs)
+    compiles0 = eng.stats()["compiles"]
+    learner = rotations.make("subspace_gcd", sub=dim // 8)
+    G = jax.random.normal(jax.random.fold_in(key, 14), (dim, dim))
+    _, delta = learner.update(learner.init_from(Rs), G, 1e-3,
+                              jax.random.PRNGKey(5))
+    t0 = _time.perf_counter()
+    eng.refresh(delta)
+    refresh_us = (_time.perf_counter() - t0) * 1e6
+    eng.search(Qs)
+    st = eng.stats()
+    ok = (st["compiles"] == compiles0 and st["lut_invalidations"] == 0
+          and st["lut_hits"] >= 8)
+    record("fused_refresh", ok, refresh_us,
+           f"recompiles=0:{st['compiles'] == compiles0} "
+           f"lut_invalidations={st['lut_invalidations']} "
+           f"lut_hits={st['lut_hits']}",
+           compiles=int(st["compiles"]),
+           lut_invalidations=int(st["lut_invalidations"]),
+           lut_hits=int(st["lut_hits"]))
     return results
 
 
@@ -85,8 +207,10 @@ def main() -> None:
     ap.add_argument("--out", default=None,
                     help="BENCH_kernels.json destination dir "
                          "(default $REPRO_BENCH_DIR; unset → print only)")
+    ap.add_argument("--lut-dtype", default="int8", choices=("int8", "uint8"),
+                    help="quantized-LUT pack the int8 sections exercise")
     args = ap.parse_args()
-    results = run()
+    results = run(lut_dtype=args.lut_dtype)
     from repro import obs
     from benchmarks.run import resolve_bench_dir
 
@@ -96,6 +220,10 @@ def main() -> None:
             out_dir, "kernels", sections={"kernels": results},
             checks={f"kernels/{k}": v["ok"] for k, v in results.items()})
         print(f"# BENCH written: {path}")
+    bad = [k for k, v in results.items() if not v["ok"]]
+    if bad:  # CI gate: an int8 parity / bytes-ratio regression fails the job
+        print(f"# FAILED: {bad}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -65,5 +65,54 @@ def markdown_table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+BENCH_FAST = os.path.join(os.path.dirname(__file__), "BENCH_fast.json")
+
+
+def kernel_table(bench_path: str = BENCH_FAST) -> str:
+    """Predicted-vs-measured table for the scan-hot-path kernels (PR 7).
+
+    Reads the latest booked ``kernels`` section of a BENCH trajectory:
+    ``predicted_us`` is the TPU roofline bound from the modeled grid traffic
+    (``roofline.analysis.kernel_predicted``); ``us_per_call`` is the measured
+    wall-clock of the XLA-oracle path on the machine that ran the bench (CPU
+    in this container — the two columns are booked side by side, not
+    compared)."""
+    from repro.obs import bench as obs_bench
+
+    doc = obs_bench.load_bench(bench_path)
+    kernels = {}
+    for run_ in doc["runs"]:  # latest run wins
+        sec = run_.get("sections", {}).get("kernels")
+        if sec:
+            kernels = sec
+    lines = [
+        "| kernel | ok | measured µs | predicted µs (TPU) | model bytes |"
+        " detail |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name in sorted(kernels):
+        v = kernels[name]
+        pred = (f"{v['predicted_us']:.1f}" if "predicted_us" in v else "—")
+        byts = (f"{v['bytes_model']/2**20:.2f} MiB"
+                if "bytes_model" in v else "—")
+        extra = []
+        if "bytes_ratio" in v:
+            extra.append(f"bytes moved ÷{v['bytes_ratio']:.2f} vs f32 LUTs")
+        if "topk_agree" in v:
+            extra.append(f"top-10 agree {v['topk_agree']:.2f}")
+        if "lut_invalidations" in v:
+            extra.append(f"refresh: {v['lut_invalidations']} LUT rebuilds, "
+                         f"{v.get('lut_hits', 0)} cached rows reused")
+        lines.append(
+            f"| {name} | {'yes' if v.get('ok') else 'NO'} |"
+            f" {v.get('us_per_call', float('nan')):.1f} | {pred} | {byts} |"
+            f" {'; '.join(extra)} |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--kernels" in sys.argv:
+        print(kernel_table())
+    else:
+        run()

@@ -53,12 +53,16 @@ class IVFPQConfig(NamedTuple):
     (M·D code bytes/item for strictly lower distortion).
     ``block_size``: CSR alignment = Pallas tile rows; lists are padded to a
     multiple of it.
+    ``lut_dtype``: ADC-table precision streamed by the scan kernels
+    ("float32" | "int8" | "uint8"; integer dtypes carry per-subspace scales
+    and dequantize in VMEM — 4× less LUT HBM traffic per tile).
     """
 
     num_lists: int
     pq: quant.PQConfig
     block_size: int = 128
     depth: int = 1
+    lut_dtype: str = "float32"
 
 
 @jax.tree_util.register_pytree_node_class

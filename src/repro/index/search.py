@@ -73,6 +73,29 @@ def topk_padded(scores: jax.Array, cand_ids: jax.Array,
     return kref.topk_merge_ref(scores, cand_ids, k)
 
 
+def build_luts(quantizer, QR: jax.Array, lut_dtype: str = "float32"):
+    """Build ADC tables for rotated queries, optionally quantized.
+
+    Returns the **LUT pack** convention every scan path downstream accepts:
+    a plain (b, Dp, K) float32 array for ``lut_dtype="float32"``, or a
+    ``(qlut, scales)`` tuple from ``kernels.quantize_luts`` for
+    int8/uint8 — a pytree, so packs flow through jit, shard_map, and the
+    Engine's LUT cache unchanged.
+    """
+    lut = quantizer.adc_tables(QR)
+    if lut_dtype == "float32":
+        return lut
+    return kops.quantize_luts(lut, lut_dtype)
+
+
+def split_lut_pack(lut):
+    """LUT pack -> (lut, scales | None) for the kernel call sites."""
+    if isinstance(lut, tuple):
+        qlut, scales = lut
+        return qlut, scales
+    return lut, None
+
+
 def probe(index: IVFPQIndex, QR: jax.Array,
           nprobe: int) -> tuple[jax.Array, jax.Array]:
     """Top-``nprobe`` lists per rotated query: ((b, p) lists, (b, p) coarse
@@ -101,10 +124,11 @@ def candidate_blocks(index: IVFPQIndex, lists: jax.Array,
     return jnp.where(valid, blk, index.sentinel_block).astype(jnp.int32), valid
 
 
-def _search_core(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+def _search_core(index: IVFPQIndex, QR: jax.Array, lut, *,
                  nprobe: int, k: int, max_blocks: int,
                  use_kernel: bool) -> SearchResult:
-    """Probe + scan + top-k over already-rotated queries and built LUTs."""
+    """Probe + scan + top-k over already-rotated queries and built LUTs.
+    ``lut`` is a LUT pack (plain f32 array or (qlut, scales))."""
     b = QR.shape[0]
     bs = index.block_size
     QR = sh.constrain(QR, ("act_batch", None), sh.IVF_RULES)
@@ -118,8 +142,9 @@ def _search_core(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
         jnp.arange(b, dtype=jnp.int32), nprobe * max_blocks
     )
 
+    lut, scales = split_lut_pack(lut)
     res_scores = kops.ivf_adc(
-        lut, index.codes, block_idx, block_query,
+        lut, index.codes, block_idx, block_query, scales,
         block_size=bs, use_kernel=use_kernel,
     ).reshape(b, nprobe, max_blocks, bs)
     scores = res_scores + cscores[:, :, None, None]            # + coarse term
@@ -139,16 +164,18 @@ def _search_core(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
+    jax.jit,
+    static_argnames=("nprobe", "k", "max_blocks", "use_kernel", "lut_dtype"),
 )
 def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
-                 max_blocks: int, use_kernel: bool = True) -> SearchResult:
+                 max_blocks: int, use_kernel: bool = True,
+                 lut_dtype: str = "float32") -> SearchResult:
     """Jit-friendly core: ``max_blocks`` (the per-list probe window in tiles,
     ≥ index.max_list_blocks() for exactness) is passed statically."""
     # constrain before the LUT build so the (b, Dp, K) tables inherit the
     # act_batch annotation at their producer under an active mesh
     QR = sh.constrain(Q @ index.R, ("act_batch", None), sh.IVF_RULES)
-    lut = index.quantizer.adc_tables(QR)                       # (b, Dp, K)
+    lut = build_luts(index.quantizer, QR, lut_dtype)           # (b, Dp, K)
     return _search_core(index, QR, lut, nprobe=nprobe, k=k,
                         max_blocks=max_blocks, use_kernel=use_kernel)
 
@@ -156,18 +183,18 @@ def search_fixed(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
 @functools.partial(
     jax.jit, static_argnames=("nprobe", "k", "max_blocks", "use_kernel")
 )
-def search_prepared(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+def search_prepared(index: IVFPQIndex, QR: jax.Array, lut, *,
                     nprobe: int, k: int = 10, max_blocks: int,
                     use_kernel: bool = True) -> SearchResult:
     """``search_fixed`` with the rotate + LUT-build steps hoisted out: the
-    caller supplies ``QR = Q·R`` and ``lut = quantizer.adc_tables(QR)``.
+    caller supplies ``QR = Q·R`` and a LUT pack (``build_luts`` output).
     The ``search.Engine`` uses this to reuse cached per-query LUTs."""
     return _search_core(index, QR, lut, nprobe=nprobe, k=k,
                         max_blocks=max_blocks, use_kernel=use_kernel)
 
 
 def search(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
-           use_kernel: bool = True) -> SearchResult:
+           use_kernel: bool = True, lut_dtype: str = "float32") -> SearchResult:
     """Batched ANN search: (b, n) queries -> top-k (scores, ids, scanned).
 
     Convenience wrapper that reads the probe-window size off the concrete
@@ -177,25 +204,30 @@ def search(index: IVFPQIndex, Q: jax.Array, *, nprobe: int, k: int = 10,
     return search_fixed(
         index, Q, nprobe=nprobe, k=k,
         max_blocks=index.max_list_blocks(), use_kernel=use_kernel,
+        lut_dtype=lut_dtype,
     )
 
 
 def flat_adc_scores(index: IVFPQIndex, Q: jax.Array, *,
-                    use_kernel: bool = False) -> tuple[jax.Array, jax.Array]:
+                    use_kernel: bool = False,
+                    lut_dtype: str = "float32") -> tuple[jax.Array, jax.Array]:
     """Flat baseline over the same quantized representation: score every CSR
     row (coarse term + residual ADC). Returns ((b, cap) scores with holes at
     −inf, (cap,) ids) — the exactness oracle for nprobe = num_lists and the
     scan-work baseline for the recall/QPS benchmark."""
     QR = Q @ index.R
-    lut = index.quantizer.adc_tables(QR)
+    lut = build_luts(index.quantizer, QR, lut_dtype)
     return flat_adc_prepared(index, QR, lut, use_kernel=use_kernel)
 
 
-def flat_adc_prepared(index: IVFPQIndex, QR: jax.Array, lut: jax.Array, *,
+def flat_adc_prepared(index: IVFPQIndex, QR: jax.Array, lut, *,
                       use_kernel: bool = False) -> tuple[jax.Array, jax.Array]:
     """``flat_adc_scores`` with rotate + LUT-build hoisted out (Engine LUT
-    cache entry point, mirroring ``search_prepared``)."""
-    res = kops.adc_lookup(lut, index.codes, use_kernel=use_kernel)  # (b, cap)
+    cache entry point, mirroring ``search_prepared``). ``lut`` is a LUT
+    pack."""
+    lut, scales = split_lut_pack(lut)
+    res = kops.adc_lookup(lut, index.codes, scales,
+                          use_kernel=use_kernel)  # (b, cap)
     # coarse term per row: row r belongs to list l iff offsets[l] ≤ r < offsets[l+1]
     row_list = jnp.searchsorted(
         index.list_offsets, jnp.arange(index.capacity), side="right"

@@ -27,31 +27,49 @@ def _kernel(codes_ref, lut_ref, out_ref):
     out_ref[...] = scores.T[None].astype(out_ref.dtype)
 
 
+def _kernel_q(codes_ref, lut_ref, scales_ref, out_ref):
+    # quantized path: the group's r LUTs ride in int8/uint8 + (r, Dp, 2)
+    # scales; dequant happens in VMEM
+    scores = adc_tile_scores(codes_ref[0], lut_ref[0], scales_ref[0])
+    out_ref[...] = scores.T[None].astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def adc_batch(
     lut: jax.Array,
     codes: jax.Array,
+    scales: jax.Array | None = None,
     *,
     block_s: int = 1024,
     interpret: bool = INTERPRET,
 ) -> jax.Array:
     """lut (g, r, Dp, K) float, codes (g, S, Dp) integer
-    ->  scores (g, r, S) float32."""
+    ->  scores (g, r, S) float32.
+
+    With ``scales`` (g, r, Dp, 2) the lut is an int8/uint8 quantize_luts
+    pack — the per-step LUT DMA moves 4× fewer bytes."""
     g, r, Dp, K = lut.shape
     S = codes.shape[1]
     bs = min(block_s, S)
     grid = (g, cdiv(S, bs))
+    in_specs = [
+        pl.BlockSpec((1, bs, Dp), lambda gi, i: (gi, i, 0)),
+        pl.BlockSpec((1, r, Dp, K), lambda gi, i: (gi, 0, 0, 0)),
+    ]
+    operands = [codes, lut]
+    kernel = _kernel
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((1, r, Dp, 2), lambda gi, i: (gi, 0, 0, 0)))
+        operands.append(scales)
+        kernel = _kernel_q
     # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
     # VMEM — the shared tile body widens per tile; widening here would
     # materialize a 4× int32 copy of the whole code cache per decode step.
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bs, Dp), lambda gi, i: (gi, i, 0)),
-            pl.BlockSpec((1, r, Dp, K), lambda gi, i: (gi, 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, r, bs), lambda gi, i: (gi, 0, i)),
         out_shape=jax.ShapeDtypeStruct((g, r, S), jnp.float32),
         interpret=interpret,
-    )(codes, lut)
+    )(*operands)

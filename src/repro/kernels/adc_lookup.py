@@ -25,31 +25,49 @@ def _kernel(codes_ref, lut_ref, out_ref):
     out_ref[...] = scores.astype(out_ref.dtype)
 
 
+def _kernel_q(codes_ref, lut_ref, scales_ref, out_ref):
+    # quantized path: int8/uint8 LUT bytes cross HBM, dequant happens here
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...], scales_ref[...])
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def adc_lookup(
     lut: jax.Array,
     codes: jax.Array,
+    scales: jax.Array | None = None,
     *,
     block_n: int = 1024,
     interpret: bool = INTERPRET,
 ) -> jax.Array:
-    """lut (b, Dp, K) float, codes (N, Dp) integer  ->  scores (b, N) float32."""
+    """lut (b, Dp, K) float, codes (N, Dp) integer  ->  scores (b, N) float32.
+
+    With ``scales`` (b, Dp, 2) the lut is an int8/uint8 pack from
+    ``adc_common.quantize_luts``; the tile body dequantizes in VMEM so the
+    per-step LUT DMA moves 4× fewer bytes."""
     b, Dp, K = lut.shape
     N = codes.shape[0]
     bn = min(block_n, N)
     grid = (cdiv(N, bn),)
+    in_specs = [
+        pl.BlockSpec((bn, Dp), lambda i: (i, 0)),
+        pl.BlockSpec((b, Dp, K), lambda i: (0, 0, 0)),
+    ]
+    operands = [codes, lut]
+    kernel = _kernel
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((b, Dp, 2), lambda i: (0, 0, 0)))
+        operands.append(scales)
+        kernel = _kernel_q
     # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
     # VMEM — the shared tile body widens per tile; widening here would
     # materialize a 4× int32 copy of the whole corpus per call.
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, Dp), lambda i: (i, 0)),
-            pl.BlockSpec((b, Dp, K), lambda i: (0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, b), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, b), jnp.float32),
         interpret=interpret,
-    )(codes, lut)
+    )(*operands)
     return out.T

@@ -42,12 +42,22 @@ def _kernel(bi_ref, bq_ref, codes_ref, lut_ref, out_ref):
     out_ref[...] = scores.reshape(1, bn).astype(out_ref.dtype)
 
 
+def _kernel_q(bi_ref, bq_ref, codes_ref, lut_ref, scales_ref, out_ref):
+    del bi_ref, bq_ref  # consumed by the index_maps
+    bn = codes_ref.shape[0]
+    # quantized path: this step's LUT row rides in as int8/uint8 + its
+    # (1, Dp, 2) scale row; dequant happens in VMEM
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...], scales_ref[...])
+    out_ref[...] = scores.reshape(1, bn).astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
 def ivf_adc(
     lut: jax.Array,
     codes: jax.Array,
     block_idx: jax.Array,
     block_query: jax.Array,
+    scales: jax.Array | None = None,
     *,
     block_size: int = 128,
     interpret: bool = INTERPRET,
@@ -55,24 +65,33 @@ def ivf_adc(
     """lut (b, Dp, K) float, codes (cap, Dp) int (cap % block_size == 0),
     block_idx / block_query (S,) int32  ->  scores (S, block_size) float32.
 
-    Residual depth rides in the Dp column dimension (Dp = M·D for RQ)."""
+    Residual depth rides in the Dp column dimension (Dp = M·D for RQ).
+    With ``scales`` (b, Dp, 2) the lut is an int8/uint8 quantize_luts pack —
+    the per-step LUT-row DMA moves 4× fewer bytes."""
     b, Dp, K = lut.shape
     S = block_idx.shape[0]
+    in_specs = [
+        pl.BlockSpec((block_size, Dp), lambda i, bi, bq: (bi[i], 0)),
+        pl.BlockSpec((1, Dp, K), lambda i, bi, bq: (bq[i], 0, 0)),
+    ]
+    operands = [codes, lut]
+    kernel = _kernel
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((1, Dp, 2), lambda i, bi, bq: (bq[i], 0, 0)))
+        operands.append(scales)
+        kernel = _kernel_q
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(S,),
-        in_specs=[
-            pl.BlockSpec((block_size, Dp), lambda i, bi, bq: (bi[i], 0)),
-            pl.BlockSpec((1, Dp, K), lambda i, bi, bq: (bq[i], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_size), lambda i, bi, bq: (i, 0)),
     )
     # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
     # VMEM — the kernel widens per tile; widening here would materialize a
     # 4× int32 copy of the whole corpus per call.
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S, block_size), jnp.float32),
         interpret=interpret,
-    )(block_idx.astype(jnp.int32), block_query.astype(jnp.int32), codes, lut)
+    )(block_idx.astype(jnp.int32), block_query.astype(jnp.int32), *operands)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: rotation-fused ADC-LUT build.
+
+The serving hot path rebuilds per-query LUTs on every request, and after a
+live ``refresh(delta)`` the naive pipeline would *also* re-rotate corpus
+state (XR on the exact path, codebooks + cached LUTs on the ADC paths).
+This kernel moves the whole rotation story to the query side: the composed
+query transform ``qdelta = R₀·Δ·Wᵀ`` (see search.flat fused refresh — R₀ the
+frozen index rotation, Δ the accumulated delta, W its within-subspace part)
+is applied to the query block *inside the tile body*, and the LUT is built
+against the frozen flattened codebooks. Refresh then only swaps one (n, n)
+matrix; corpus-side buffers are never touched and cached LUTs stay valid
+whenever the delta is purely within-subspace.
+
+``colmap`` (Dp, D) is a one-hot column map from code column → query
+subspace: identity for PQ, and for a depth-M level-major RQ the column
+l·D + d maps to subspace d. Keeping it an explicit operand lets one kernel
+serve every quantizer layout — the Dp axis of the codebooks is the true
+code-column axis, so per-column int8 scale groups stay correct for RQ.
+
+Grid (b/bb,): each step rotates one query block on the MXU and contracts it
+against the whole (Dp, K, sub) codebook block resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+
+
+def _kernel(q_ref, qd_ref, cb_ref, cm_ref, out_ref):
+    # rotate the query block in VMEM: (bb, n) @ (n, n)
+    QL = jnp.dot(q_ref[...].astype(jnp.float32),
+                 qd_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    bb = QL.shape[0]
+    Dp, K, sub = cb_ref.shape
+    D = cm_ref.shape[1]
+    QLs = QL.reshape(bb, D, sub)
+    # expand query subspaces to code columns via the one-hot map: (Dp, bb, sub)
+    Qexp = jax.lax.dot_general(
+        cm_ref[...].astype(jnp.float32), QLs,
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # batched contraction over sub against the codebooks: (Dp, bb, K)
+    lut = jax.lax.dot_general(
+        Qexp, cb_ref[...].astype(jnp.float32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.transpose(lut, (1, 0, 2)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fused_lut(
+    Q: jax.Array,
+    qdelta: jax.Array,
+    cb_flat: jax.Array,
+    colmap: jax.Array,
+    *,
+    block_b: int = 8,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """Q (b, n) raw queries, qdelta (n, n), cb_flat (Dp, K, sub) frozen
+    flattened codebooks, colmap (Dp, D) one-hot column map
+    ->  lut (b, Dp, K) float32 with
+    lut[b, p, k] = ⟨(Q·qdelta) subspace of column p, cb_flat[p, k]⟩."""
+    b, n = Q.shape
+    Dp, K, sub = cb_flat.shape
+    D = colmap.shape[1]
+    bb = min(block_b, b)
+    bpad = cdiv(b, bb) * bb
+    if bpad != b:
+        Q = jnp.pad(Q, ((0, bpad - b), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bpad // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((Dp, K, sub), lambda i: (0, 0, 0)),
+            pl.BlockSpec((Dp, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, Dp, K), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bpad, Dp, K), jnp.float32),
+        interpret=interpret,
+    )(Q, qdelta, cb_flat, colmap.astype(jnp.float32))
+    return out[:b]

@@ -19,8 +19,17 @@ from repro.kernels import embedding_bag as _bag
 from repro.kernels import gcd_score as _score
 from repro.kernels import givens_rotate as _rot
 from repro.kernels import ivf_adc as _ivf
+from repro.kernels import lut_build as _lut
 from repro.kernels import pq_assign as _assign
 from repro.kernels import ref
+from repro.kernels.adc_common import (LUT_DTYPES, dequantize_luts,
+                                      quantize_luts)
+
+__all__ = [
+    "apply_pair_rotations", "gcd_score", "pq_assign", "adc_lookup",
+    "adc_batch", "ivf_adc", "fused_lut", "embedding_bag", "topk_merge",
+    "quantize_luts", "dequantize_luts", "LUT_DTYPES",
+]
 
 
 def _apply_impl(pi, pj, X, theta, use_kernel: bool):
@@ -96,34 +105,49 @@ def pq_assign(X, codebooks, *, use_kernel: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
-def adc_lookup(lut, codes, *, use_kernel: bool = True):
+def adc_lookup(lut, codes, scales=None, *, use_kernel: bool = True):
     """Flat ADC scores (b, Dp, K) × (N, Dp) -> (b, N). Residual depth is the
-    Dp column dimension (Dp = M·D for a depth-M RQ)."""
+    Dp column dimension (Dp = M·D for a depth-M RQ). With ``scales``
+    (b, Dp, 2) the lut is an int8/uint8 ``quantize_luts`` pack, dequantized
+    in the tile body."""
     if use_kernel:
-        return _adc.adc_lookup(lut, codes)
-    return ref.adc_lookup_ref(lut, codes)
+        return _adc.adc_lookup(lut, codes, scales)
+    return ref.adc_lookup_ref(lut, codes, scales)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
-def adc_batch(lut, codes, *, use_kernel: bool = True):
+def adc_batch(lut, codes, scales=None, *, use_kernel: bool = True):
     """Grouped ADC scores (g, r, Dp, K) × (g, S, Dp) -> (g, r, S) — the
     KV-cache decode scorer (group = one (batch, kv-head) pair, r = GQA
-    repetition)."""
+    repetition). ``scales`` (g, r, Dp, 2): quantized-LUT pack."""
     if use_kernel:
-        return _adcb.adc_batch(lut, codes)
-    return ref.adc_batch_ref(lut, codes)
+        return _adcb.adc_batch(lut, codes, scales)
+    return ref.adc_batch_ref(lut, codes, scales)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "use_kernel"))
-def ivf_adc(lut, codes, block_idx, block_query, *, block_size: int = 128,
-            use_kernel: bool = True):
+def ivf_adc(lut, codes, block_idx, block_query, scales=None, *,
+            block_size: int = 128, use_kernel: bool = True):
     """Selected-block IVF-ADC scan: (b, D, K) LUTs × (cap, D) CSR codes ×
-    (S,) block schedule -> (S, block_size) scores."""
+    (S,) block schedule -> (S, block_size) scores. ``scales`` (b, D, 2):
+    quantized-LUT pack, the per-step LUT-row DMA shrinks 4×."""
     if use_kernel:
-        return _ivf.ivf_adc(lut, codes, block_idx, block_query,
+        return _ivf.ivf_adc(lut, codes, block_idx, block_query, scales,
                             block_size=block_size)
     return ref.ivf_adc_ref(lut, codes, block_idx, block_query,
-                           block_size=block_size)
+                           block_size=block_size, scales=scales)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def fused_lut(Q, qdelta, cb_flat, colmap, *, use_kernel: bool = True):
+    """Rotation-fused ADC-LUT build: raw queries (b, n) × composed query
+    transform (n, n) × frozen flattened codebooks (Dp, K, sub) × one-hot
+    column map (Dp, D) -> (b, Dp, K) tables. The delta is applied to the
+    query block inside the tile body, so refresh never touches corpus-side
+    buffers (see kernels/lut_build.py)."""
+    if use_kernel:
+        return _lut.fused_lut(Q, qdelta, cb_flat, colmap)
+    return ref.fused_lut_ref(Q, qdelta, cb_flat, colmap)
 
 
 @functools.partial(jax.jit, static_argnames=("num_bags", "use_kernel"))

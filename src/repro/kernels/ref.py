@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.adc_common import dequantize_luts
+
 
 def givens_rotate_ref(xe: jax.Array, xo: jax.Array, c: jax.Array, s: jax.Array):
     """Rotate paired column planes: (m, p) × 2, cos/sin (p,) -> (ye, yo).
@@ -37,14 +39,43 @@ def pq_assign_ref(X: jax.Array, codebooks: jax.Array) -> jax.Array:
     return jnp.argmin(cn[None] - 2.0 * dots, axis=-1).astype(jnp.int32)
 
 
-def adc_lookup_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
-    """ADC score sum. lut (b, D, K), codes (N, D) -> (b, N)."""
+def adc_lookup_ref(lut: jax.Array, codes: jax.Array,
+                   scales: jax.Array | None = None) -> jax.Array:
+    """ADC score sum. lut (b, D, K), codes (N, D) -> (b, N).
+
+    With ``scales`` (b, D, 2) the lut is an int8/uint8 pack from
+    ``adc_common.quantize_luts`` and is dequantized first (semantic ground
+    truth for the in-VMEM dequant the kernels do)."""
+    if scales is not None:
+        lut = dequantize_luts(lut, scales)
     D = lut.shape[1]
     g = lut[:, jnp.arange(D)[None, :], codes.astype(jnp.int32)]  # (b, N, D)
     return jnp.sum(g, axis=-1)
 
 
-def adc_batch_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+def fused_lut_ref(Q: jax.Array, qdelta: jax.Array, cb_flat: jax.Array,
+                  colmap: jax.Array) -> jax.Array:
+    """Rotation-fused ADC-LUT build. Q (b, n) raw queries, qdelta (n, n)
+    composed query-side transform (R₀·Δ·Wᵀ — see search.flat fused refresh),
+    cb_flat (Dp, K, sub) frozen flattened codebooks, colmap (Dp, D) one-hot
+    mapping code column → query subspace (identity for PQ; for a depth-M RQ
+    the level-major column l·D+d maps to subspace d) -> (b, Dp, K) with
+    lut[b, p, k] = ⟨(Q·qdelta) subspace of column p, cb_flat[p, k]⟩.
+
+    This is the oracle for kernels/lut_build.py: the delta is applied to the
+    query block inside the tile body, so refresh never rebuilds corpus-side
+    state."""
+    QL = Q.astype(jnp.float32) @ qdelta.astype(jnp.float32)        # (b, n)
+    b, n = QL.shape
+    Dp, K, sub = cb_flat.shape
+    D = colmap.shape[1]
+    QLs = QL.reshape(b, D, sub)
+    Qexp = jnp.einsum("pd,bds->bps", colmap.astype(jnp.float32), QLs)
+    return jnp.einsum("bps,pks->bpk", Qexp, cb_flat.astype(jnp.float32))
+
+
+def adc_batch_ref(lut: jax.Array, codes: jax.Array,
+                  scales: jax.Array | None = None) -> jax.Array:
     """Grouped ADC score sum (KV-cache scoring). lut (g, r, Dp, K),
     codes (g, S, Dp) -> (g, r, S) with
     out[g, r, s] = Σ_d lut[g, r, d, codes[g, s, d]].
@@ -53,7 +84,11 @@ def adc_batch_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
     O(g·r·S) instead of O(g·r·S·Dp) — at S=524288 decode shapes the all-Dp
     gather costs GiBs/device (the Pallas adc_batch kernel tiles a one-hot
     matmul instead; this is the XLA-safe reference path).
+
+    ``scales`` (g, r, Dp, 2): quantized-LUT pack, dequantized up front.
     """
+    if scales is not None:
+        lut = dequantize_luts(lut, scales)
     g, r, Dp, K = lut.shape
     S = codes.shape[1]
     lut_d = jnp.moveaxis(lut.astype(jnp.float32), -2, 0)    # (Dp, g, r, K)
@@ -69,11 +104,16 @@ def adc_batch_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
 
 
 def ivf_adc_ref(lut: jax.Array, codes: jax.Array, block_idx: jax.Array,
-                block_query: jax.Array, *, block_size: int = 128) -> jax.Array:
+                block_query: jax.Array, *, block_size: int = 128,
+                scales: jax.Array | None = None) -> jax.Array:
     """Selected-block ADC scan. lut (b, D, K), codes (cap, D),
     block_idx/block_query (S,) -> (S, block_size): the scores of tile
     ``block_idx[s]`` of the CSR codes array under query ``block_query[s]``'s
-    LUT (gather formulation; the Pallas kernel must match)."""
+    LUT (gather formulation; the Pallas kernel must match).
+
+    ``scales`` (b, D, 2): quantized-LUT pack, dequantized up front."""
+    if scales is not None:
+        lut = dequantize_luts(lut, scales)
     D = lut.shape[1]
     rows = block_idx[:, None] * block_size + jnp.arange(block_size)  # (S, bn)
     c = codes[rows].astype(jnp.int32)  # gather in storage dtype, widen after
@@ -119,3 +159,30 @@ def topk_merge_ref(scores: jax.Array, ids: jax.Array,
         top_ids = jnp.pad(top_ids, ((0, 0), (0, k - kk)),
                           constant_values=-1)
     return top_scores, top_ids
+
+
+def streaming_topk_ref(tile_scores, tile_ids,
+                       k: int) -> tuple[jax.Array, jax.Array]:
+    """Incremental top-k merge over a stream of corpus tiles.
+
+    tile_scores: sequence of (b, t_i) score blocks; tile_ids: matching
+    (t_i,) global row ids (−1 = padding — masked to −inf here, exactly
+    like the scan's merge body). Folds each tile into a (b, k) carry via
+    topk_merge_ref — the semantic ground truth for the streaming exact
+    scan in search/exact.py.
+
+    With distinct scores the result is invariant to tile order and equal to
+    a one-shot top_k over the full concatenation (the tile-order-invariance
+    test in tests/test_kernels.py pins exactly that).
+    """
+    b = tile_scores[0].shape[0]
+    acc_s = jnp.full((b, k), -jnp.inf, jnp.float32)
+    acc_i = jnp.full((b, k), -1, jnp.int32)
+    for s, ids in zip(tile_scores, tile_ids):
+        ids = ids.astype(jnp.int32)
+        s = jnp.where(ids[None, :] >= 0, s.astype(jnp.float32), -jnp.inf)
+        cs = jnp.concatenate([acc_s, s], axis=1)
+        ci = jnp.concatenate(
+            [acc_i, jnp.broadcast_to(ids[None, :], s.shape)], axis=1)
+        acc_s, acc_i = topk_merge_ref(cs, ci, k)
+    return acc_s, acc_i

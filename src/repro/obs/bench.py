@@ -160,8 +160,40 @@ def validate_bench(doc_or_path) -> list[str]:
     return errs
 
 
+def _numeric_leaves(obj, prefix="") -> dict[str, float]:
+    """Flatten nested dicts to dot-path → float (bools excluded: those are
+    the job of ``checks``, not the delta view)."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_numeric_leaves(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def section_deltas(prev: dict, last: dict) -> dict[str, list[tuple]]:
+    """Per-section numeric deltas between two run records: section →
+    [(leaf, old, new, pct_change)] over the leaves both runs carry."""
+    out: dict[str, list[tuple]] = {}
+    for sec, payload in last.get("sections", {}).items():
+        a = _numeric_leaves(prev.get("sections", {}).get(sec, {}))
+        b = _numeric_leaves(payload)
+        rows = []
+        for leaf in sorted(set(a) & set(b)):
+            old, new = a[leaf], b[leaf]
+            pct = ((new - old) / abs(old) * 100.0) if old else float("inf")
+            rows.append((leaf, old, new, pct))
+        if rows:
+            out[sec] = rows
+    return out
+
+
 def show(path: str) -> str:
-    """Compact trajectory view: one line per run (date, backend, checks)."""
+    """Compact trajectory view: one line per run (date, backend, checks),
+    then the per-section delta of the latest run vs the previous one —
+    every numeric leaf both runs carry, old → new with % change, so a perf
+    PR's BENCH diff reads as a table instead of two JSON blobs."""
     doc = load_bench(path)
     lines = [f"{path}: trajectory {doc['name']!r}, {len(doc['runs'])} run(s)"]
     for run in doc["runs"]:
@@ -173,6 +205,15 @@ def show(path: str) -> str:
             f"{run.get('host', {}).get('backend', '?'):<5} "
             f"sections={sorted(run.get('sections', {}))} "
             f"checks={len(checks)} {status}")
+    if len(doc["runs"]) >= 2:
+        prev, last = doc["runs"][-2], doc["runs"][-1]
+        lines.append(f"  delta: {last.get('created', '?')} vs "
+                     f"{prev.get('created', '?')}")
+        for sec, rows in section_deltas(prev, last).items():
+            lines.append(f"    [{sec}]")
+            for leaf, old, new, pct in rows:
+                lines.append(f"      {leaf:<52} {old:>14.4g} -> "
+                             f"{new:>14.4g}  ({pct:+.1f}%)")
     return "\n".join(lines)
 
 

@@ -85,6 +85,14 @@ class PQ:
     def adc_tables(self, Q: jax.Array) -> jax.Array:
         return cb.adc_lut(Q, self.codebooks)  # (b, D, K)
 
+    def lut_operands(self) -> tuple[jax.Array, jax.Array]:
+        """Operands for the rotation-fused LUT-build kernel
+        (kernels/lut_build.py): flattened codebooks (Dp, K, sub) and the
+        one-hot code-column → query-subspace map (Dp, D). For PQ the map is
+        the identity (Dp == D)."""
+        D = self.num_subspaces
+        return self.codebooks, jnp.eye(D, dtype=jnp.float32)
+
     def distortion(self, X: jax.Array,
                    codes: jax.Array | None = None) -> jax.Array:
         if codes is not None:

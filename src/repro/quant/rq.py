@@ -125,6 +125,16 @@ class RQ:
                 for lvl in range(self.num_levels)]
         return jnp.concatenate(luts, axis=1)
 
+    def lut_operands(self) -> tuple[jax.Array, jax.Array]:
+        """Operands for the rotation-fused LUT-build kernel: codebooks
+        flattened level-major to (M·D, K, sub) — matching the code-column
+        layout — and the one-hot column map sending column l·D+d to query
+        subspace d (every level reads the same query slice)."""
+        M, D, K, sub = self.codebooks.shape
+        cols = jnp.arange(M * D)
+        colmap = jnp.zeros((M * D, D), jnp.float32).at[cols, cols % D].set(1.0)
+        return self.codebooks.reshape(M * D, K, sub), colmap
+
     def distortion(self, X: jax.Array,
                    codes: jax.Array | None = None) -> jax.Array:
         if codes is None:

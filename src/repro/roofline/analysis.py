@@ -157,3 +157,54 @@ def analyze(compiled, lowered=None, model_flops_total: float | None = None,
         out["model_flops_per_device"] = model_flops_total / n_chips
         out["useful_compute_ratio"] = (model_flops_total / n_chips) / flops
     return out
+
+# ---------------------------------------------------------------------------
+# kernel-level predicted-vs-measured (PR 7)
+# ---------------------------------------------------------------------------
+
+def kernel_predicted(flops: float, bytes_moved: float,
+                     collective_bytes: float = 0.0) -> dict[str, Any]:
+    """Roofline bound for a single kernel launch, in µs.
+
+    Kernels (unlike train cells) are small enough to model their traffic in
+    closed form, so the benchmark harness computes ``bytes_moved`` from the
+    grid schedule (see :func:`adc_scan_traffic`) and books this prediction
+    next to the measured wall-clock — the "predicted vs measured" entry every
+    kernel section of ``benchmarks/kernels_micro.py`` must carry.
+    """
+    t = roofline_terms(flops, bytes_moved, collective_bytes)
+    return {
+        "predicted_us": max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+        "dominant": t["dominant"],
+        "flops": flops,
+        "bytes": bytes_moved,
+    }
+
+
+def adc_scan_traffic(b: int, Dp: int, K: int, steps: int, block: int,
+                     lut_dtype: str = "float32", code_bytes: int = 1,
+                     luts_per_step: int = 1) -> float:
+    """Modeled HBM traffic (bytes) of one ADC scan launch.
+
+    Per grid step the scan DMAs ``luts_per_step`` LUT rows (the whole
+    (b, Dp, K) table for the flat scan, one query's row for the selected-block
+    scan), one (block, Dp) code tile, and writes one (b, block) f32 score
+    tile; ``steps`` is the number of scheduled grid steps. Integer LUT packs
+    move 1 byte/entry plus the f32 (Dp, 2) scale/offset sidecar — the per-step
+    LUT stream shrinks 4×, which is where the ≥2× total-bytes win of the int8
+    pack comes from (codes are uint8 for K ≤ 256, so the corpus-side stream
+    is already thin).
+    """
+    lut_entry = 4 if lut_dtype == "float32" else 1
+    scales = 0 if lut_dtype == "float32" else Dp * 2 * 4
+    lut_row = luts_per_step * (Dp * K * lut_entry + scales)
+    codes_blk = block * Dp * code_bytes
+    out_blk = b * block * 4
+    return float(steps) * (lut_row + codes_blk + out_blk)
+
+
+def fused_lut_traffic(b: int, n: int, Dp: int, K: int, sub: int) -> float:
+    """Modeled HBM traffic (bytes) of one fused rotation-aware LUT build:
+    queries (b, n) + delta product (n, n) + flat codebooks (Dp, K, sub) +
+    one-hot column map (Dp, n) in, (b, Dp, K) f32 table out."""
+    return 4.0 * (b * n + n * n + Dp * K * sub + Dp * n + b * Dp * K)

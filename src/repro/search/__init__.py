@@ -54,7 +54,12 @@ from repro.search.base import (  # noqa: F401
     topk_padded,
 )
 from repro.search.engine import Engine  # noqa: F401
-from repro.search.exact import Exact, ExactState  # noqa: F401
+from repro.search.exact import (  # noqa: F401
+    Exact,
+    ExactState,
+    ExactStreaming,
+    StreamingExactState,
+)
 from repro.search.flat import ADCState, FlatADC  # noqa: F401
 from repro.search.ivf import IVF  # noqa: F401
 from repro.search.registry import make, names  # noqa: F401

@@ -66,6 +66,14 @@ class SearchConfig(NamedTuple):
     per-call override exists). ``exact`` only reads ``tile_rows`` — the
     corpus tile of its streaming brute-force scan. ``use_kernel`` toggles
     the Pallas kernels (False = jnp reference path, the CPU/CI default).
+
+    ``lut_dtype`` quantizes the ADC lookup tables the scan kernels stream
+    ("float32" | "int8" | "uint8" — integer dtypes store per-subspace
+    scales alongside and dequantize in VMEM, quartering LUT bytes moved).
+    ``fused_refresh`` makes the ADC/exact backends absorb rotation deltas
+    into the *query-side* transform only: corpus buffers are frozen at
+    build time, ``refresh(delta)`` swaps one (n, n) matrix, and cached
+    LUTs stay valid for within-subspace deltas (kernels/lut_build.py).
     """
 
     subspaces: int = 8
@@ -77,6 +85,8 @@ class SearchConfig(NamedTuple):
     tile_rows: int = 4096
     train_size: int | None = None
     use_kernel: bool = False
+    lut_dtype: str = "float32"
+    fused_refresh: bool = False
 
     def ivf_config(self):
         """The ``IVFPQConfig`` slice consumed by the quantized backends."""
@@ -87,6 +97,7 @@ class SearchConfig(NamedTuple):
             pq=quant.PQConfig(self.subspaces, self.codewords),
             block_size=self.block_size,
             depth=self.depth,
+            lut_dtype=self.lut_dtype,
         )
 
 

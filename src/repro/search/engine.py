@@ -18,11 +18,16 @@ the hot path shape-stable:
     zero recompiles.
   * **per-query ADC LUT cache** — for quantized backends the (code_width,
     K) LUT is the per-query setup cost; hot/repeated queries reuse their
-    cached LUT (keyed by raw query bytes, LRU-evicted, invalidated on
-    refresh since LUTs depend on R) and only cache misses pay
-    ``quantizer.adc_tables``. Served through the backend's
+    cached LUT pack (keyed by raw query bytes + ``lut_dtype`` + the
+    invalidation epoch, LRU-evicted) and only cache misses pay the LUT
+    build. A refresh normally invalidates the cache (LUTs depend on R),
+    but a backend that proves its LUTs exactly invariant across the delta
+    (``luts_refresh_invariant`` — fused refresh + within-subspace
+    rotations) keeps the whole cache warm; ``stats()["lut_invalidations"]``
+    counts the actual clears. Served through the backend's
     ``search_prepared`` capability; backends without it (``exact``) take
-    the plain path.
+    the plain path, and host-loop backends (``exact_stream``,
+    ``engine_jit = False``) run eagerly without an outer jit.
   * **buffer donation** — on accelerator backends the padded query/LUT
     buffers are donated to the executable, so serving steady-state holds
     one in-flight copy instead of two (donation is skipped on CPU, where
@@ -58,6 +63,40 @@ import numpy as np
 
 from repro import obs, rotations
 from repro.search.base import SearchResult, Searcher
+
+
+def _lut_to_host(lut):
+    """Host copy of a LUT pack (plain (b, Dp, K) array or (qlut, scales)
+    tuple — see index/search.py ``split_lut_pack``)."""
+    if isinstance(lut, tuple):
+        return tuple(np.asarray(p) for p in lut)
+    return np.asarray(lut)
+
+
+def _lut_row(lut_host, i: int):
+    """Row ``i`` of a host LUT pack — the per-query cache value."""
+    if isinstance(lut_host, tuple):
+        return tuple(p[i] for p in lut_host)
+    return lut_host[i]
+
+
+def _stack_lut_rows(rows):
+    """Reassemble cached per-query rows into a batch pack."""
+    if isinstance(rows[0], tuple):
+        return tuple(np.stack([r[j] for r in rows])
+                     for j in range(len(rows[0])))
+    return np.stack(rows)
+
+
+def _pad_lut(lut, pad: int):
+    """Zero-pad a LUT pack's query axis up to the bucket and land it on
+    device (host rows assembled from the cache arrive as numpy)."""
+    if isinstance(lut, tuple):
+        return tuple(_pad_lut(p, pad) for p in lut)
+    pads = ((0, pad),) + ((0, 0),) * (lut.ndim - 1)
+    if isinstance(lut, np.ndarray):
+        return jnp.asarray(np.pad(lut, pads))
+    return jnp.pad(lut, pads)
 
 
 class Engine:
@@ -104,12 +143,20 @@ class Engine:
             raise ValueError(
                 f"{type(searcher).__name__} does not take nprobe — an "
                 "nprobe setting on this Engine would be silently ignored")
-        self._prepared_ok = lut_cache_rows > 0 and all(
+        # backends whose search is a host-side loop (exact_stream) opt out
+        # of jit wrapping — their executables are the per-tile jits inside
+        self._jit = bool(getattr(searcher, "engine_jit", True))
+        self._prepared_ok = self._jit and lut_cache_rows > 0 and all(
             hasattr(searcher, m)
             for m in ("rotate_queries", "luts", "search_prepared"))
         self._compiled: dict[tuple, Any] = {}
-        self._luts: collections.OrderedDict[bytes, np.ndarray] = \
+        # per-query LUT rows (or (qlut, scales) row tuples), keyed by
+        # (raw query bytes, lut_dtype, epoch) — the epoch advances whenever
+        # a refresh actually invalidates LUTs, so stale entries can never
+        # alias a fresh query even if a clear is ever skipped
+        self._luts: collections.OrderedDict[tuple, Any] = \
             collections.OrderedDict()
+        self._epoch = 0
 
         # private always-on registry: the source of truth behind ``stats()``
         # and the ``requests`` compat view (window = ``history`` requests)
@@ -120,7 +167,7 @@ class Engine:
         self._counters = {
             name: self.obs.counter(f"engine.{name}")
             for name in ("requests", "queries", "compiles", "refreshes",
-                         "lut_hits", "lut_misses")}
+                         "lut_hits", "lut_misses", "lut_invalidations")}
         self.probe = probe
         self._in_probe = False
 
@@ -155,6 +202,13 @@ class Engine:
         if key not in self._compiled:
             searcher = self.searcher
             kw = {} if nprobe is None else {"nprobe": nprobe}
+            if not self._jit:
+                # eager backend (engine_jit=False): the host-side search
+                # loop runs as-is — no outer trace, no donation, and no
+                # compile tick (the backend jits its own inner steps)
+                self._compiled[key] = \
+                    lambda state, Q: searcher.search(state, Q, k=k, **kw)
+                return self._compiled[key]
             compiles = self._counters["compiles"]
 
             def fn(state, Q):
@@ -181,14 +235,24 @@ class Engine:
         return self._compiled[key]
 
     # -- per-query LUT cache -----------------------------------------------
+    def _lut_key(self, row: np.ndarray) -> tuple:
+        """Cache key for one query row: raw bytes + the LUT precision knob
+        + the invalidation epoch. ``lut_dtype`` is in the key because the
+        cached rows ARE dtype-specific (an int8 (qlut, scales) row is not a
+        f32 row); the epoch is bumped by non-invariant refreshes."""
+        return (row.tobytes(),
+                getattr(self.state, "lut_dtype", "float32"),
+                self._epoch)
+
     def _gather_luts(self, Qnp: np.ndarray,
-                     QR: jax.Array) -> tuple[np.ndarray, int, int]:
-        """LUT rows for every query, cached by raw query bytes. ``QR`` is
-        the already-rotated batch (rows sliced for the misses, so the
-        rotation runs once per request). Returns (lut (b, Dp, K), hits,
-        misses) — both counted per served row; duplicate rows inside one
-        batch pay ``adc_tables`` only once."""
-        keys = [row.tobytes() for row in Qnp]
+                     QR: jax.Array) -> tuple[Any, int, int]:
+        """LUT rows for every query, cached by raw query bytes (+ dtype,
+        epoch). ``QR`` is the already-rotated batch (rows sliced for the
+        misses, so the rotation runs once per request). Returns (lut pack
+        (b, Dp, K) or ((b, Dp, K) qlut, (b, Dp, 2) scales), hits, misses)
+        — both counted per served row; duplicate rows inside one batch pay
+        the LUT build only once."""
+        keys = [self._lut_key(row) for row in Qnp]
         hits = 0
         need, seen = [], set()
         for i, kb in enumerate(keys):
@@ -203,20 +267,20 @@ class Engine:
             # all-miss, all-distinct: serve the device LUTs directly (skip
             # the host round-trip); the host copy below only feeds the cache
             lut_dev = self.searcher.luts(self.state, QR)
-            lut_host = np.asarray(lut_dev)
+            lut_host = _lut_to_host(lut_dev)
             for i, kb in enumerate(keys):
-                self._luts[kb] = lut_host[i]
+                self._luts[kb] = _lut_row(lut_host, i)
             self._evict()
             return lut_dev, hits, misses
         if need:
-            lut_m = np.asarray(self.searcher.luts(
+            lut_m = _lut_to_host(self.searcher.luts(
                 self.state, QR[np.asarray(need)]))
             for j, i in enumerate(need):
-                self._luts[keys[i]] = lut_m[j]
+                self._luts[keys[i]] = _lut_row(lut_m, j)
         # read every row BEFORE evicting: a batch wider than the cache (or
         # one whose misses push out nothing-but-this-batch entries) must
         # still assemble — eviction only trims for the NEXT request
-        rows = np.stack([self._luts[kb] for kb in keys])
+        rows = _stack_lut_rows([self._luts[kb] for kb in keys])
         self._evict()
         return rows, hits, misses
 
@@ -259,11 +323,9 @@ class Engine:
                 QR = self.searcher.rotate_queries(self.state, Q)
                 lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
                 QR = jnp.pad(QR, ((0, pad), (0, 0)))
-                if isinstance(lut, np.ndarray):  # assembled from cached rows
-                    lut = jnp.asarray(np.pad(lut,
-                                             ((0, pad), (0, 0), (0, 0))))
-                else:                            # all-miss: still on device
-                    lut = jnp.pad(lut, ((0, pad), (0, 0), (0, 0)))
+                # pack-aware: cached host rows and all-miss device packs
+                # both pad up to the bucket and land on device
+                lut = _pad_lut(lut, pad)
                 res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
             else:
                 # plain path: never leaves the device
@@ -301,12 +363,21 @@ class Engine:
     # -- live rotation refresh --------------------------------------------
     def refresh(self, delta: rotations.RotationDelta) -> None:
         """Absorb a rotation-learner step between batches. Cached LUTs are
-        invalidated (they depend on R); compiled executables survive (the
-        state pytree's structure and statics are refresh-invariant)."""
+        invalidated (they depend on R) — UNLESS the backend proves them
+        exactly invariant across this delta (fused refresh + purely
+        within-subspace rotations: ``luts_refresh_invariant``), in which
+        case the whole cache and its epoch survive. Compiled executables
+        survive either way (the state pytree's structure and statics are
+        refresh-invariant)."""
+        keep = (hasattr(self.searcher, "luts_refresh_invariant")
+                and self.searcher.luts_refresh_invariant(self.state, delta))
         with self.obs.span("engine.refresh") as sp:
             self.state = self.searcher.refresh(self.state, delta)
             sp.sync(self.state)
-        self._luts.clear()
+        if not keep:
+            self._luts.clear()
+            self._epoch += 1
+            self._counters["lut_invalidations"].inc()
         self._counters["refreshes"].inc()
         if obs.enabled():
             # refresh health (delta norm + orthogonality drift) on the
@@ -314,9 +385,13 @@ class Engine:
             # when someone is watching
             from repro.index import maintain
 
-            # the serving rotation lives at state.R (exact/flat/sharded) or
-            # state.index.R (the replicated ivf backend wraps an IVFPQIndex)
-            R = getattr(self.state, "R", None)
+            # the LIVE rotation lives at state.rot (fused quantized modes —
+            # state.R / state.index.R are frozen at R₀ there), else state.R
+            # (exact/flat/sharded) or state.index.R (the replicated ivf
+            # backend wraps an IVFPQIndex)
+            R = getattr(self.state, "rot", None)
+            if R is None:
+                R = getattr(self.state, "R", None)
             if R is None:
                 R = getattr(getattr(self.state, "index", None), "R", None)
             if R is not None:
@@ -356,6 +431,8 @@ class Engine:
             lut_misses=c["lut_misses"],
             lut_hit_rate=(c["lut_hits"] / looked if looked else 0.0),
             lut_cached_rows=len(self._luts),
+            lut_invalidations=c["lut_invalidations"],
+            lut_epoch=self._epoch,
             window=dict(size=lat.get("window", 0),
                         capacity=self.history,
                         scope="latency/scanned/pad aggregates"),

@@ -1,24 +1,37 @@
-"""Exact brute-force searcher: tiled streaming MIPS over the rotated corpus.
+"""Exact brute-force searchers: tiled streaming MIPS over the rotated corpus.
 
-The ground-truth backend of the registry — no quantization, no probing,
+The ground-truth backends of the registry — no quantization, no probing,
 every query scores every live row. The corpus is stored *rotated*
 (XR = X·R) so the backend serves the same transform as the compressed
 ones: search computes (Q·R)·(X·R)ᵀ, which equals Q·Xᵀ exactly because R is
 orthogonal — making this the recall oracle the quantized backends are
 measured against.
 
-The scan streams over fixed (tile_rows, n) corpus tiles with a running
-top-k merge (a ``lax.scan``), so peak memory is O(b·(k + tile_rows))
-instead of the O(b·N) of the naive ``Q @ corpus.T``
-materialization the examples used to hand-roll — at N = 10⁷ and b = 256
-the full score matrix would be 10 GiB; a 4096-row tile is 4 MiB.
+Two backends share one tile-merge body (``_merge_tile``, oracle:
+``kernels.ref.streaming_topk_ref``):
 
-``refresh`` right-multiplies R *and* the stored rotated corpus by the
-delta. Scores are invariant (rotations preserve inner products), so a
-refresh provably never moves this backend's results — the conformance
-suite checks that — but the served transform stays bit-consistent with the
-trainer, and dense Cayley/Procrustes deltas are absorbed just as well as
-Givens ones (unlike the ADC backends, which need the Givens factorization).
+``exact`` keeps the padded corpus resident on device and scans fixed
+(tile_rows, n) tiles with a running top-k merge (a ``lax.scan``), so peak
+memory is O(b·(k + tile_rows)) instead of the O(b·N) of the naive
+``Q @ corpus.T`` materialization — at N = 10⁷ and b = 256 the full score
+matrix would be 10 GiB; a 4096-row tile is 4 MiB.
+
+``exact_stream`` keeps the corpus tiles in **host** memory and
+double-buffers them through the device: while tile t scores, tile t+1's
+H2C copy is already in flight (``jax.device_put`` is async), so the oracle
+scales past HBM at the cost of PCIe/DMA bandwidth. The per-tile merge step
+is a single jitted function; the host loop is not traceable, so the
+backend opts out of the Engine's jit wrap (``engine_jit = False``).
+
+``refresh`` semantics: in the default (eager) mode it right-multiplies R
+*and* the stored rotated corpus by the delta. Scores are invariant
+(rotations preserve inner products), so a refresh provably never moves
+results — the conformance suite checks that. Under
+``SearchConfig.fused_refresh`` the corpus is frozen at build rotation R₀
+and only R tracks the trainer: because ⟨q·R₀Δ, x·R₀Δ⟩ = ⟨q·R₀, x·R₀⟩ the
+delta cancels against the frozen corpus exactly, so search scores queries
+with R₀ and ``refresh`` is one (n, n) matmul — corpus-side buffers are
+never touched (the roofline win benchmarks/kernels_micro.py pins).
 """
 from __future__ import annotations
 
@@ -38,36 +51,58 @@ from repro.search.base import NEG_INF, SearchConfig, SearchResult
 @dataclasses.dataclass(frozen=True)
 class ExactState:
     """Rotated corpus padded to whole tiles; ``tile_rows`` is static so jit
-    specializes on the tile shape (padding rows carry id −1)."""
+    specializes on the tile shape (padding rows carry id −1).
 
-    R: jax.Array        # (n, n) serving rotation
+    ``R0`` is the frozen build rotation of fused-refresh mode (None = eager
+    mode). When present, XR stays at X·R₀ forever and search rotates
+    queries by R₀ — exact because the live delta cancels (module docstring);
+    R keeps tracking the trained rotation for stats/health."""
+
+    R: jax.Array        # (n, n) serving rotation (tracks the trainer)
     XR: jax.Array       # (T·tile_rows, n) rotated corpus, zero-padded
     ids: jax.Array      # (T·tile_rows,) int32 item ids, −1 = padding
     tile_rows: int = dataclasses.field(default=4096, metadata={"static": True})
+    R0: jax.Array | None = None  # frozen build rotation (fused mode)
+
+
+def _merge_tile(carry, s, ids, k: int):
+    """Fold one (b, t) score tile into the (b, k) running top-k carry.
+
+    Rows with id −1 are padding and score −inf before the merge — the one
+    merge body shared by the resident scan, the streaming scan, and (via
+    kernels.ref.streaming_topk_ref) the tile-order-invariance oracle."""
+    best_s, best_i = carry
+    s = jnp.where(ids[None, :] >= 0, s, NEG_INF)
+    cat_s = jnp.concatenate([best_s, s], axis=1)
+    cat_i = jnp.concatenate(
+        [best_i, jnp.broadcast_to(ids[None, :], s.shape)], axis=1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    top_i = jnp.take_along_axis(cat_i, pos, axis=1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    return top_s, top_i
+
+
+def _query_rotation(state) -> jax.Array:
+    """R₀ when the state is fused-frozen, else the live R."""
+    R0 = getattr(state, "R0", None)
+    return state.R if R0 is None else R0
 
 
 def _exact_search_impl(state: ExactState, Q: jax.Array,
                        k: int) -> SearchResult:
     """The tiled scan body, un-jit'd — also the per-shard local scan of the
     ``exact_sharded`` backend (called inside shard_map)."""
-    QR = Q @ state.R.astype(Q.dtype)
+    R = _query_rotation(state)
+    QR = Q @ R.astype(Q.dtype)
     n = state.XR.shape[1]
     tiles = state.XR.reshape(-1, state.tile_rows, n)
     tile_ids = state.ids.reshape(-1, state.tile_rows)
     b = Q.shape[0]
 
     def merge(carry, tile):
-        best_s, best_i = carry
         xr, ids = tile
         s = QR @ xr.T                                   # (b, tile_rows)
-        s = jnp.where(ids[None, :] >= 0, s, NEG_INF)
-        cat_s = jnp.concatenate([best_s, s], axis=1)
-        cat_i = jnp.concatenate(
-            [best_i, jnp.broadcast_to(ids[None, :], s.shape)], axis=1)
-        top_s, pos = jax.lax.top_k(cat_s, k)
-        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
-        top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
-        return (top_s, top_i), None
+        return _merge_tile(carry, s, ids, k), None
 
     init = (jnp.full((b, k), NEG_INF, QR.dtype),
             jnp.full((b, k), -1, jnp.int32))
@@ -78,6 +113,16 @@ def _exact_search_impl(state: ExactState, Q: jax.Array,
 
 _exact_search = functools.partial(jax.jit, static_argnames=("k",))(
     _exact_search_impl)
+
+
+def _pad_to_tiles(XR: jax.Array, tile: int) -> tuple[jax.Array, jax.Array]:
+    n_rows = XR.shape[0]
+    pad = (-n_rows) % tile
+    ids = jnp.concatenate([
+        jnp.arange(n_rows, dtype=jnp.int32),
+        jnp.full((pad,), -1, jnp.int32),
+    ])
+    return jnp.pad(XR, ((0, pad), (0, 0))), ids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,15 +136,10 @@ class Exact:
         del key  # deterministic build
         R = jnp.asarray(R)
         XR = jnp.asarray(corpus) @ R.astype(corpus.dtype)
-        n_rows = XR.shape[0]
-        tile = max(1, min(cfg.tile_rows, n_rows))
-        pad = (-n_rows) % tile
-        ids = jnp.concatenate([
-            jnp.arange(n_rows, dtype=jnp.int32),
-            jnp.full((pad,), -1, jnp.int32),
-        ])
-        XR = jnp.pad(XR, ((0, pad), (0, 0)))
-        return ExactState(R=R, XR=XR, ids=ids, tile_rows=tile)
+        tile = max(1, min(cfg.tile_rows, XR.shape[0]))
+        XR, ids = _pad_to_tiles(XR, tile)
+        return ExactState(R=R, XR=XR, ids=ids, tile_rows=tile,
+                          R0=R if cfg.fused_refresh else None)
 
     def search(self, state: ExactState, Q: jax.Array, *,
                k: int = 10) -> SearchResult:
@@ -107,6 +147,11 @@ class Exact:
 
     def refresh(self, state: ExactState,
                 delta: rotations.RotationDelta) -> ExactState:
+        if state.R0 is not None:
+            # fused: the frozen corpus cancels the delta exactly — only the
+            # trainer-tracking R moves, XR is never re-materialized
+            return dataclasses.replace(
+                state, R=rotations.apply(state.R, delta))
         return dataclasses.replace(
             state,
             R=rotations.apply(state.R, delta),
@@ -124,4 +169,121 @@ class Exact:
             scan_rows_per_query=rows,
             memory_bytes=int(state.XR.size * state.XR.dtype.itemsize),
             compression=1.0,
+            fused_refresh=state.R0 is not None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingExactState:
+    """Host-resident corpus tiles (NOT a jax pytree — the tile list lives in
+    host RAM and is streamed through the device per search)."""
+
+    R: jax.Array                 # (n, n) serving rotation (device)
+    tiles: tuple                 # T × (tile_rows, n) np.ndarray, zero-padded
+    tile_ids: tuple              # T × (tile_rows,) np.int32, −1 = padding
+    tile_rows: int
+    rows: int                    # live row count
+    R0: jax.Array | None = None  # frozen build rotation (fused mode)
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(3,))
+def _stream_step(QR: jax.Array, xr: jax.Array, ids: jax.Array, carry,
+                 k: int):
+    """Score one device-resident tile and fold it into the carry (the
+    carry buffer is donated — the merge runs in place)."""
+    s = QR @ xr.T.astype(QR.dtype)
+    return _merge_tile(carry, s, ids, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactStreaming:
+    """Registry backend ``"exact_stream"`` — the out-of-HBM recall oracle.
+
+    Same scores as ``exact`` (bit-identical merge: the tile-order-invariance
+    test pins it against ``streaming_topk_ref``), but the corpus lives in
+    host memory and tiles are double-buffered through the device: the next
+    tile's async ``device_put`` is issued *before* the current tile's merge
+    step, so transfer overlaps compute. The host loop is untraceable, so
+    ``engine_jit = False`` tells the Engine to call search eagerly.
+    """
+
+    name: ClassVar[str] = "exact_stream"
+    engine_jit: ClassVar[bool] = False
+
+    def build(self, key: jax.Array, corpus: jax.Array, R: jax.Array,
+              cfg: SearchConfig) -> StreamingExactState:
+        del key  # deterministic build
+        R = jnp.asarray(R)
+        corpus = np.asarray(corpus)
+        n_rows, n = corpus.shape
+        tile = max(1, min(cfg.tile_rows, n_rows))
+        Rh = np.asarray(R, dtype=corpus.dtype)
+        tiles, tile_ids = [], []
+        # rotate per tile so the full corpus never materializes on device
+        for start in range(0, n_rows, tile):
+            chunk = corpus[start:start + tile]
+            xr = np.asarray(
+                jnp.asarray(chunk) @ jnp.asarray(Rh))
+            ids = np.arange(start, start + chunk.shape[0], dtype=np.int32)
+            if chunk.shape[0] < tile:
+                pad = tile - chunk.shape[0]
+                xr = np.pad(xr, ((0, pad), (0, 0)))
+                ids = np.concatenate([ids, np.full(pad, -1, np.int32)])
+            tiles.append(xr)
+            tile_ids.append(ids)
+        return StreamingExactState(
+            R=R, tiles=tuple(tiles), tile_ids=tuple(tile_ids),
+            tile_rows=tile, rows=n_rows,
+            R0=R if cfg.fused_refresh else None)
+
+    def search(self, state: StreamingExactState, Q: jax.Array, *,
+               k: int = 10) -> SearchResult:
+        R = _query_rotation(state)
+        QR = jnp.asarray(Q) @ R.astype(Q.dtype)
+        b = QR.shape[0]
+        carry = (jnp.full((b, k), NEG_INF, QR.dtype),
+                 jnp.full((b, k), -1, jnp.int32))
+        T = len(state.tiles)
+        # double buffer: slot t's compute overlaps slot t+1's H2D copy
+        buf = (jax.device_put(state.tiles[0]),
+               jax.device_put(state.tile_ids[0]))
+        for t in range(T):
+            nxt = None
+            if t + 1 < T:
+                nxt = (jax.device_put(state.tiles[t + 1]),
+                       jax.device_put(state.tile_ids[t + 1]))
+            carry = _stream_step(QR, buf[0], buf[1], carry, k)
+            buf = nxt
+        scores, ids = carry
+        scanned = jnp.full((b,), state.rows, dtype=jnp.int32)
+        return SearchResult(scores=scores, ids=ids, scanned=scanned)
+
+    def refresh(self, state: StreamingExactState,
+                delta: rotations.RotationDelta) -> StreamingExactState:
+        R = rotations.apply(state.R, delta)
+        if state.R0 is not None:
+            # fused: frozen host tiles cancel the delta — nothing streams
+            return dataclasses.replace(state, R=R)
+        # eager: re-rotate tile by tile through the device (the expensive
+        # path fused_refresh exists to avoid)
+        tiles = tuple(
+            np.asarray(rotations.apply(jnp.asarray(t), delta))
+            for t in state.tiles)
+        return dataclasses.replace(state, R=R, tiles=tiles)
+
+    def stats(self, state: StreamingExactState) -> dict:
+        n = state.tiles[0].shape[1] if state.tiles else 0
+        host_bytes = sum(t.nbytes for t in state.tiles)
+        return dict(
+            backend=self.name,
+            rows=state.rows,
+            capacity=state.tile_rows * len(state.tiles),
+            dim=n,
+            tile_rows=state.tile_rows,
+            scan_rows_per_query=state.rows,
+            memory_bytes=host_bytes,
+            device_bytes=2 * state.tile_rows * n * 4,  # double buffer
+            compression=1.0,
+            streaming=True,
+            fused_refresh=state.R0 is not None,
         )

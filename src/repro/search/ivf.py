@@ -40,16 +40,20 @@ class IVF:
         index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
                                 train_size=cfg.train_size)
         return self.attach(index, nprobe=cfg.nprobe,
-                           use_kernel=cfg.use_kernel)
+                           use_kernel=cfg.use_kernel,
+                           lut_dtype=cfg.lut_dtype,
+                           fused_refresh=cfg.fused_refresh)
 
     @staticmethod
     def attach(index: IVFPQIndex, *, nprobe: int = 8,
-               use_kernel: bool = False) -> ADCState:
+               use_kernel: bool = False, lut_dtype: str = "float32",
+               fused_refresh: bool = False) -> ADCState:
         """State over an existing index (captures the static probe window)."""
-        return ADCState(index=index,
-                        nprobe=min(nprobe, index.num_lists),
-                        max_blocks=index.max_list_blocks(),
-                        use_kernel=use_kernel)
+        state = ADCState(index=index,
+                         nprobe=min(nprobe, index.num_lists),
+                         max_blocks=index.max_list_blocks(),
+                         use_kernel=use_kernel, lut_dtype=lut_dtype)
+        return flat._fused_state(state) if fused_refresh else state
 
     def effective_nprobe(self, state: ADCState, nprobe: int | None) -> int:
         """The probe width actually served: the request's (or the state's
@@ -79,19 +83,30 @@ class IVF:
 
     def search(self, state: ADCState, Q: jax.Array, *, k: int = 10,
                nprobe: int | None = None) -> SearchResult:
+        if state.qdelta is not None:
+            # fused mode: the LUT build must route through the accumulated
+            # query-side transform, so go via the prepared path
+            QR = flat._rotate_queries(state, Q)
+            return self.search_prepared(state, QR, flat._luts(state, QR),
+                                        k=k, nprobe=nprobe)
         return index_search.search_fixed(
             state.index, Q, nprobe=self.effective_nprobe(state, nprobe), k=k,
-            max_blocks=self._max_blocks(state), use_kernel=state.use_kernel)
+            max_blocks=self._max_blocks(state), use_kernel=state.use_kernel,
+            lut_dtype=state.lut_dtype)
 
     # -- Engine LUT-cache capabilities -------------------------------------
     def rotate_queries(self, state: ADCState, Q: jax.Array) -> jax.Array:
         return flat._rotate_queries(state, Q)
 
-    def luts(self, state: ADCState, QR: jax.Array) -> jax.Array:
+    def luts(self, state: ADCState, QR: jax.Array):
         return flat._luts(state, QR)
 
+    def luts_refresh_invariant(self, state: ADCState,
+                               delta: rotations.RotationDelta) -> bool:
+        return flat._luts_refresh_invariant(state, delta)
+
     def search_prepared(self, state: ADCState, QR: jax.Array,
-                        lut: jax.Array, *, k: int = 10,
+                        lut, *, k: int = 10,
                         nprobe: int | None = None) -> SearchResult:
         return index_search.search_prepared(
             state.index, QR, lut, nprobe=self.effective_nprobe(state, nprobe),

@@ -5,9 +5,10 @@ idioms: free functions in ``index/search.py`` (IVF), ``flat_adc_scores``
 (flat ADC), and hand-rolled ``Q @ corpus.T`` scans duplicated across
 examples and benchmarks. Now every retrieval call resolves a spec string:
 
-    search.make("exact")       # tiled brute force — the recall oracle
-    search.make("flat_adc")    # PQ/RQ full scan via kernels/adc_lookup
-    search.make("ivf")         # probe + fused selected-block Pallas scan
+    search.make("exact")        # tiled brute force — the recall oracle
+    search.make("exact_stream") # same oracle, corpus streamed from host RAM
+    search.make("flat_adc")     # PQ/RQ full scan via kernels/adc_lookup
+    search.make("ivf")          # probe + fused selected-block Pallas scan
 
 plus the row-sharded twins — same transform, same SearchResult contract,
 corpus partitioned over the mesh's "data" axis with an all_gather +
@@ -27,6 +28,7 @@ from repro.search import base, exact, flat, ivf, sharded
 
 _REGISTRY: dict[str, type] = {
     "exact": exact.Exact,
+    "exact_stream": exact.ExactStreaming,
     "flat_adc": flat.FlatADC,
     "ivf": ivf.IVF,
     "exact_sharded": sharded.ExactSharded,
@@ -38,6 +40,8 @@ _ALIASES = {
     "flat": "flat_adc",
     "brute_force": "exact",
     "bruteforce": "exact",
+    "exact_streaming": "exact_stream",
+    "streaming": "exact_stream",
     "flat_adc_sharded": "flat_sharded",
     "sharded": "ivf_sharded",
 }

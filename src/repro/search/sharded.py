@@ -64,6 +64,7 @@ from repro.index import search as index_search
 from repro.index.ivf import IVFPQIndex
 from repro.kernels import ops as kops
 from repro.search import exact as exact_mod
+from repro.search import flat as flat_mod
 from repro.search.base import SearchConfig, SearchResult, topk_padded
 from repro.sharding import rules as sh
 
@@ -205,12 +206,17 @@ class ShardedExactState:
                                        metadata={"static": True})
     axes: tuple[str, ...] = dataclasses.field(default=("data",),
                                               metadata={"static": True})
+    R0: jax.Array | None = None  # frozen build rotation (fused refresh)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _exact_sharded_search(state: ShardedExactState, Q: jax.Array,
                           k: int) -> SearchResult:
     axes = state.axes
+    # fused mode scores with the frozen R₀ (delta cancels against the frozen
+    # shards — see search/exact.py); resolved here so the shard-local body
+    # is mode-agnostic
+    Rq = exact_mod._query_rotation(state)
 
     def local(R, XR_s, ids_s, Q):
         lstate = exact_mod.ExactState(R=R, XR=XR_s[0], ids=ids_s[0],
@@ -227,7 +233,7 @@ def _exact_sharded_search(state: ShardedExactState, Q: jax.Array,
         out_specs=SearchResult(scores=P(), ids=P(), scanned=P()),
         check_vma=False,
     )
-    return f(state.R, state.XR, state.ids, Q)
+    return f(Rq, state.XR, state.ids, Q)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,7 +267,8 @@ class ExactSharded:
         return ShardedExactState(
             R=R, XR=_place_sharded(XR, mesh, axes),
             ids=_place_sharded(ids, mesh, axes),
-            mesh=mesh, tile_rows=tile, axes=axes)
+            mesh=mesh, tile_rows=tile, axes=axes,
+            R0=R if cfg.fused_refresh else None)
 
     def search(self, state: ShardedExactState, Q: jax.Array, *,
                k: int = 10) -> SearchResult:
@@ -269,6 +276,11 @@ class ExactSharded:
 
     def refresh(self, state: ShardedExactState,
                 delta: rotations.RotationDelta) -> ShardedExactState:
+        if state.R0 is not None:
+            # fused: the frozen shards cancel the delta exactly — no
+            # cross-device XR re-materialization, only R tracks the trainer
+            return dataclasses.replace(
+                state, R=rotations.apply(state.R, delta))
         return dataclasses.replace(
             state,
             R=rotations.apply(state.R, delta),
@@ -292,6 +304,7 @@ class ExactSharded:
             memory_bytes_per_device=int(
                 state.XR.size * state.XR.dtype.itemsize) // S,
             compression=1.0,
+            fused_refresh=state.R0 is not None,
             **_shard_rows_stats(ids),
         )
 
@@ -329,6 +342,11 @@ class ShardedADCState:
                                          metadata={"static": True})
     axes: tuple[str, ...] = dataclasses.field(default=("data",),
                                               metadata={"static": True})
+    lut_dtype: str = dataclasses.field(default="float32",
+                                       metadata={"static": True})
+    rot: jax.Array | None = None     # fused refresh: live rotation R₀·Δ
+    wacc: jax.Array | None = None    # fused refresh: within-subspace W
+    qdelta: jax.Array | None = None  # fused refresh: query transform Δ·Wᵀ
 
     @property
     def num_shards(self) -> int:
@@ -339,9 +357,18 @@ class ShardedADCState:
         return self.list_offsets.shape[1] - 1
 
 
+def _fused_sharded_state(state: ShardedADCState) -> ShardedADCState:
+    """Initialize the fused-refresh matrices at the build rotation
+    (Δ = W = I: rot = R₀, qdelta = I — mirrors ``flat._fused_state``)."""
+    n = state.R.shape[0]
+    eye = jnp.eye(n, dtype=state.R.dtype)
+    return dataclasses.replace(state, rot=state.R, wacc=eye, qdelta=eye)
+
+
 def attach_shards(parts: list[IVFPQIndex], *, mesh: Mesh | None = None,
                   axis: AxisSpec = "auto", nprobe: int = 8,
-                  use_kernel: bool = False) -> ShardedADCState:
+                  use_kernel: bool = False, lut_dtype: str = "float32",
+                  fused_refresh: bool = False) -> ShardedADCState:
     """Stack per-shard indexes (``ivf.shard_split`` or ``ivf.build_sharded``
     output) into one servable sharded state.
 
@@ -394,7 +421,7 @@ def attach_shards(parts: list[IVFPQIndex], *, mesh: Mesh | None = None,
     if obs.enabled():
         # one ShardedADCState serves both flat_sharded and ivf_sharded
         _record_shard_gauges("adc_sharded", np.stack(ids))
-    return ShardedADCState(
+    state = ShardedADCState(
         R=head.R, coarse=head.coarse, quantizer=head.quantizer,
         codes=_place_sharded(jnp.asarray(np.stack(codes)), mesh, axes),
         ids=_place_sharded(jnp.asarray(np.stack(ids)), mesh, axes),
@@ -404,8 +431,9 @@ def attach_shards(parts: list[IVFPQIndex], *, mesh: Mesh | None = None,
         mesh=mesh, block_size=head.block_size,
         nprobe=min(nprobe, head.num_lists),
         max_blocks=max(max(p.max_list_blocks() for p in parts), 1),
-        use_kernel=use_kernel, axes=axes,
+        use_kernel=use_kernel, axes=axes, lut_dtype=lut_dtype,
     )
+    return _fused_sharded_state(state) if fused_refresh else state
 
 
 def _local_index(R, coarse, quantizer, codes_s, ids_s, offs_s,
@@ -417,7 +445,7 @@ def _local_index(R, coarse, quantizer, codes_s, ids_s, offs_s,
                       list_offsets=offs_s[0], block_size=block_size)
 
 
-def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut: jax.Array,
+def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut,
                   local_body):
     """Run ``local_body(local_index, QR, lut) -> SearchResult`` on every
     shard and merge (body already emits a padded local top-k)."""
@@ -438,7 +466,7 @@ def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut: jax.Array,
         in_specs=(P(), _replicated_specs(state.coarse),
                   _replicated_specs(state.quantizer),
                   _shard_spec(axes), _shard_spec(axes), _shard_spec(axes),
-                  P(), P()),
+                  P(), _replicated_specs(lut)),
         out_specs=SearchResult(scores=P(), ids=P(), scanned=P()),
         check_vma=False,
     )
@@ -471,14 +499,14 @@ def _ivf_local_body(k: int, nprobe: int, max_blocks: int, use_kernel: bool):
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _flat_sharded_prepared(state: ShardedADCState, QR: jax.Array,
-                           lut: jax.Array, k: int) -> SearchResult:
+                           lut, k: int) -> SearchResult:
     return _sharded_scan(state, QR, lut,
                          _flat_local_body(k, state.use_kernel))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe"))
 def _ivf_sharded_prepared(state: ShardedADCState, QR: jax.Array,
-                          lut: jax.Array, k: int,
+                          lut, k: int,
                           nprobe: int) -> SearchResult:
     return _sharded_scan(
         state, QR, lut,
@@ -489,13 +517,35 @@ def _sharded_refresh(state: ShardedADCState,
                      delta: rotations.RotationDelta) -> ShardedADCState:
     """Broadcast the (small, replicated) delta: rotate R/coarse/codebooks
     in place, leave every shard's CSR untouched — structure and statics are
-    refresh-invariant, so compiled executables survive."""
+    refresh-invariant, so compiled executables survive. In fused mode even
+    R/coarse/codebooks are frozen and only the three query-side matrices
+    advance (see ``flat._fused_refresh_mats``)."""
     maintain.check_refreshable(delta)
+    if state.rot is not None:
+        rot, wacc, qdelta = flat_mod._fused_refresh_mats(
+            state.R, state.rot, state.wacc,
+            delta.pi, delta.pj, delta.theta, state.quantizer.sub)
+        return dataclasses.replace(state, rot=rot, wacc=wacc, qdelta=qdelta)
     R, coarse, quantizer = maintain.rotate_components(
         state.R, state.coarse, state.quantizer,
         delta.pi, delta.pj, delta.theta)
     return dataclasses.replace(state, R=R, coarse=coarse,
                                quantizer=quantizer)
+
+
+def _sharded_luts_refresh_invariant(state: ShardedADCState,
+                                    delta: rotations.RotationDelta) -> bool:
+    """Sharded twin of ``flat._luts_refresh_invariant`` — same criterion
+    (fused mode + purely within-subspace disjoint GivensDelta), reading the
+    shared quantizer directly off the sharded state."""
+    if state.rot is None:
+        return False
+    if not isinstance(delta, rotations.GivensDelta) or delta.overlapping:
+        return False
+    sub = state.quantizer.sub
+    pi = np.asarray(delta.pi)
+    pj = np.asarray(delta.pj)
+    return bool(np.all((pi // sub) == (pj // sub)))
 
 
 def _sharded_adc_stats(name: str, state: ShardedADCState) -> dict:
@@ -516,27 +566,45 @@ def _sharded_adc_stats(name: str, state: ShardedADCState) -> dict:
         memory_bytes=mem,
         memory_bytes_per_device=mem // S,
         use_kernel=state.use_kernel,
+        lut_dtype=state.lut_dtype,
+        fused_refresh=state.rot is not None,
         **_shard_rows_stats(ids),
     )
 
 
 def _shard_existing(index: IVFPQIndex, mesh: Mesh | None, axis: AxisSpec, *,
-                    nprobe: int, use_kernel: bool) -> ShardedADCState:
+                    nprobe: int, use_kernel: bool,
+                    lut_dtype: str = "float32",
+                    fused_refresh: bool = False) -> ShardedADCState:
     mesh = resolve_mesh(mesh, axis)
     axes = resolve_axes(mesh, axis)
     parts = index_ivf.shard_split(index, _num_shards(mesh, axes))
     return attach_shards(parts, mesh=mesh, axis=axes, nprobe=nprobe,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, lut_dtype=lut_dtype,
+                         fused_refresh=fused_refresh)
 
 
 # Engine LUT-cache capabilities, shared by both sharded ADC backends (the
 # replicated pair shares these the same way — see flat.py):
 def _rotate_queries(state: ShardedADCState, Q: jax.Array) -> jax.Array:
+    # fused mode freezes R at R₀ and the coarse term is exactly invariant,
+    # so Q @ state.R is the correct query rotation in both modes
     return Q @ state.R
 
 
-def _luts(state: ShardedADCState, QR: jax.Array) -> jax.Array:
-    return state.quantizer.adc_tables(QR)
+def _luts(state: ShardedADCState, QR: jax.Array):
+    """Per-query ADC LUT pack over the shared residual quantizer — fused
+    LUT-build and integer quantization mirror ``flat._luts``; the pack is
+    replicated, so the shard_map in_specs tree-map over it."""
+    if state.qdelta is not None:
+        cb_flat, colmap = state.quantizer.lut_operands()
+        lut = kops.fused_lut(QR, state.qdelta, cb_flat, colmap,
+                             use_kernel=state.use_kernel)
+    else:
+        lut = state.quantizer.adc_tables(QR)
+    if state.lut_dtype != "float32":
+        return kops.quantize_luts(lut, state.lut_dtype)
+    return lut
 
 
 @dataclasses.dataclass(frozen=True)
@@ -552,17 +620,21 @@ class FlatSharded:
         index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
                                 train_size=cfg.train_size)
         return self.attach(index, mesh=self.mesh, axis=self.axis,
-                           use_kernel=cfg.use_kernel)
+                           use_kernel=cfg.use_kernel,
+                           lut_dtype=cfg.lut_dtype,
+                           fused_refresh=cfg.fused_refresh)
 
     @staticmethod
     def attach(index: IVFPQIndex, *, mesh: Mesh | None = None,
                axis: AxisSpec = "auto", nprobe: int = 8,
-               use_kernel: bool = False) -> ShardedADCState:
+               use_kernel: bool = False, lut_dtype: str = "float32",
+               fused_refresh: bool = False) -> ShardedADCState:
         """Shard an existing replicated index across the mesh — the very
         codes the single-device backends serve, redistributed (the parity
         and migration entry point)."""
         return _shard_existing(index, mesh, axis, nprobe=nprobe,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, lut_dtype=lut_dtype,
+                               fused_refresh=fused_refresh)
 
     def search(self, state: ShardedADCState, Q: jax.Array, *,
                k: int = 10) -> SearchResult:
@@ -574,11 +646,15 @@ class FlatSharded:
                        Q: jax.Array) -> jax.Array:
         return _rotate_queries(state, Q)
 
-    def luts(self, state: ShardedADCState, QR: jax.Array) -> jax.Array:
+    def luts(self, state: ShardedADCState, QR: jax.Array):
         return _luts(state, QR)
 
+    def luts_refresh_invariant(self, state: ShardedADCState,
+                               delta: rotations.RotationDelta) -> bool:
+        return _sharded_luts_refresh_invariant(state, delta)
+
     def search_prepared(self, state: ShardedADCState, QR: jax.Array,
-                        lut: jax.Array, *, k: int = 10) -> SearchResult:
+                        lut, *, k: int = 10) -> SearchResult:
         return _flat_sharded_prepared(state, QR, lut, k)
 
     def refresh(self, state: ShardedADCState,
@@ -606,17 +682,21 @@ class IVFSharded:
         index = index_ivf.build(key, corpus, R, cfg.ivf_config(),
                                 train_size=cfg.train_size)
         return self.attach(index, mesh=self.mesh, axis=self.axis,
-                           nprobe=cfg.nprobe, use_kernel=cfg.use_kernel)
+                           nprobe=cfg.nprobe, use_kernel=cfg.use_kernel,
+                           lut_dtype=cfg.lut_dtype,
+                           fused_refresh=cfg.fused_refresh)
 
     @staticmethod
     def attach(index: IVFPQIndex, *, mesh: Mesh | None = None,
                axis: AxisSpec = "auto", nprobe: int = 8,
-               use_kernel: bool = False) -> ShardedADCState:
+               use_kernel: bool = False, lut_dtype: str = "float32",
+               fused_refresh: bool = False) -> ShardedADCState:
         """Shard an existing replicated index across the mesh (see
         ``FlatSharded.attach`` — one state serves both sharded ADC
         backends, like ``ADCState`` does for the replicated pair)."""
         return _shard_existing(index, mesh, axis, nprobe=nprobe,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, lut_dtype=lut_dtype,
+                               fused_refresh=fused_refresh)
 
     def effective_nprobe(self, state: ShardedADCState,
                          nprobe: int | None) -> int:
@@ -647,11 +727,15 @@ class IVFSharded:
                        Q: jax.Array) -> jax.Array:
         return _rotate_queries(state, Q)
 
-    def luts(self, state: ShardedADCState, QR: jax.Array) -> jax.Array:
+    def luts(self, state: ShardedADCState, QR: jax.Array):
         return _luts(state, QR)
 
+    def luts_refresh_invariant(self, state: ShardedADCState,
+                               delta: rotations.RotationDelta) -> bool:
+        return _sharded_luts_refresh_invariant(state, delta)
+
     def search_prepared(self, state: ShardedADCState, QR: jax.Array,
-                        lut: jax.Array, *, k: int = 10,
+                        lut, *, k: int = 10,
                         nprobe: int | None = None) -> SearchResult:
         # prepare_state is a no-op on an attach_shards state (max_blocks
         # baked as a STATIC, concrete even under a jit trace); the host

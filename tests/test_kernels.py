@@ -95,3 +95,153 @@ def test_kernel_wrappers_jit_under_transforms():
 
     g = jax.jit(jax.grad(f))(X)
     assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# PR 7: int8/uint8 LUT packs, rotation-fused LUT build, streaming merge
+# ---------------------------------------------------------------------------
+
+
+def _topk_ids(scores, k=10):
+    return np.argsort(-np.asarray(scores), axis=-1)[..., :k]
+
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8"])
+def test_quantize_luts_roundtrip_and_guard(dtype):
+    lut = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 16))
+    qlut, scales = ops.quantize_luts(lut, dtype)
+    assert qlut.dtype == jnp.dtype(dtype)
+    assert scales.shape == (4, 8, 2)
+    deq = ops.dequantize_luts(qlut, scales)
+    # worst-case rounding error is half a quantization step per entry
+    step = np.asarray(scales[..., 0])[..., None]
+    assert np.all(np.abs(np.asarray(deq - lut)) <= 0.5001 * step + 1e-7)
+    # a constant (zero-range) subspace must not divide by zero: the pack
+    # dequantizes to the exact constant, not NaN
+    const = lut.at[:, 3, :].set(0.0)
+    qc, sc = ops.quantize_luts(const, dtype)
+    deqc = np.asarray(ops.dequantize_luts(qc, sc))
+    assert np.all(np.isfinite(deqc))
+    np.testing.assert_allclose(deqc[:, 3, :], 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8"])
+@pytest.mark.parametrize("Dp", [4, 16])   # PQ-ish and RQ-2-ish code widths
+def test_adc_lookup_int8_parity(dtype, Dp):
+    """Quantized flat scan: kernel == ref on the same pack, and the top-k
+    order stays monotone vs the f32 scores (same LUT, coarser steps)."""
+    key = jax.random.PRNGKey(Dp)
+    lut = jax.random.normal(key, (4, Dp, 16))
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (256, Dp), 0, 16)
+    qlut, scales = ops.quantize_luts(lut, dtype)
+    got = np.asarray(ops.adc_lookup(qlut, codes, scales))
+    want = np.asarray(ref.adc_lookup_ref(qlut, codes, scales))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    f32 = np.asarray(ops.adc_lookup(lut, codes))
+    # quantization error bound: Dp columns × half-step each
+    bound = Dp * 0.5001 * float(np.max(np.asarray(scales[..., 0]))) + 1e-5
+    assert np.max(np.abs(got - f32)) <= bound
+    # top-10 agreement within the error bound (monotone order preserved
+    # wherever score gaps exceed the bound)
+    agree = np.mean([len(set(a) & set(b)) / 10 for a, b in
+                     zip(_topk_ids(got), _topk_ids(f32))])
+    assert agree >= 0.8
+
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8"])
+def test_ivf_adc_int8_parity(dtype):
+    """Quantized probed scan: kernel == ref on the same pack."""
+    key = jax.random.PRNGKey(3)
+    b, D, K, bs, nblocks = 3, 8, 16, 8, 12
+    lut = jax.random.normal(key, (b, D, K))
+    codes = jax.random.randint(jax.random.fold_in(key, 1),
+                               (bs * nblocks, D), 0, K)
+    block_idx = jnp.arange(nblocks, dtype=jnp.int32)[::-1]
+    block_query = jnp.asarray(np.resize(np.arange(b), nblocks), jnp.int32)
+    qlut, scales = ops.quantize_luts(lut, dtype)
+    got = np.asarray(ops.ivf_adc(qlut, codes, block_idx, block_query,
+                                 scales, block_size=bs))
+    want = np.asarray(ref.ivf_adc_ref(qlut, codes, block_idx, block_query,
+                                      block_size=bs, scales=scales))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8"])
+def test_adc_batch_int8_parity(dtype):
+    """Quantized grouped (KV-cache) scan: kernel == ref on the same pack."""
+    key = jax.random.PRNGKey(5)
+    g, r, Dp, K, S = 2, 3, 4, 16, 64
+    lut = jax.random.normal(key, (g, r, Dp, K))
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (g, S, Dp), 0, K)
+    qlut, scales = ops.quantize_luts(lut, dtype)
+    got = np.asarray(ops.adc_batch(qlut, codes, scales))
+    want = np.asarray(ref.adc_batch_ref(qlut, codes, scales))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    f32 = np.asarray(ops.adc_batch(lut, codes))
+    bound = Dp * 0.5001 * float(np.max(np.asarray(scales[..., 0]))) + 1e-5
+    assert np.max(np.abs(got - f32)) <= bound
+
+
+@pytest.mark.parametrize("b,n,D,K,sub", [(3, 16, 4, 8, 4),   # PQ identity
+                                         (17, 32, 8, 16, 4)])
+def test_fused_lut_pq_kernel_matches_ref(b, n, D, K, sub):
+    key = jax.random.PRNGKey(b)
+    Q = jax.random.normal(key, (b, n))
+    qdelta = jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    cb = jax.random.normal(jax.random.fold_in(key, 2), (D, K, sub))
+    colmap = jnp.eye(D, dtype=jnp.float32)
+    got = np.asarray(ops.fused_lut(Q, qdelta, cb, colmap))
+    want = np.asarray(ref.fused_lut_ref(Q, qdelta, cb, colmap))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    # and the ref itself equals the unfused two-step build
+    QL = np.asarray(Q @ qdelta).reshape(b, D, sub)
+    direct = np.einsum("bds,dks->bdk", QL, np.asarray(cb))
+    np.testing.assert_allclose(want, direct, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_lut_rq_colmap():
+    """Depth-2 RQ level-major columns: column l·D+d reads query subspace d
+    through the one-hot colmap — both levels score the same subspace."""
+    key = jax.random.PRNGKey(9)
+    b, n, D, K, M = 5, 16, 4, 8, 2
+    sub = n // D
+    Q = jax.random.normal(key, (b, n))
+    qdelta = jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    cb = jax.random.normal(jax.random.fold_in(key, 2), (M * D, K, sub))
+    cols = np.arange(M * D)
+    colmap = jnp.asarray(np.eye(D, dtype=np.float32)[cols % D])
+    got = np.asarray(ops.fused_lut(Q, qdelta, cb, colmap))
+    want = np.asarray(ref.fused_lut_ref(Q, qdelta, cb, colmap))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    QL = np.asarray(Q @ qdelta).reshape(b, D, sub)
+    for p in range(M * D):
+        direct = np.einsum("bs,ks->bk", QL[:, p % D], np.asarray(cb[p]))
+        np.testing.assert_allclose(want[:, p], direct, atol=1e-4, rtol=1e-4)
+
+
+def test_streaming_topk_ref_tile_order_invariance():
+    """The streamed merge is bit-identical to a one-shot top-k over the
+    concatenated scores, whatever order the tiles arrive in."""
+    rng = np.random.RandomState(0)
+    b, T, t, k = 4, 6, 32, 10
+    scores = jnp.asarray(rng.randn(T, b, t).astype(np.float32))
+    ids = jnp.asarray(
+        np.arange(T * t, dtype=np.int32).reshape(T, t))
+    ids = ids.at[-1, -5:].set(-1)                 # padding rows in last tile
+    want_s, want_i = ref.streaming_topk_ref(scores, ids, k)
+    flat = np.concatenate([np.asarray(scores[i]) for i in range(T)], axis=1)
+    flat_ids = np.concatenate([np.asarray(ids[i]) for i in range(T)])
+    flat[:, flat_ids < 0] = -np.inf
+    order = np.argsort(-flat, axis=1)[:, :k]
+    np.testing.assert_array_equal(np.asarray(want_i),
+                                  flat_ids[order])
+    np.testing.assert_array_equal(np.asarray(want_s),
+                                  np.take_along_axis(flat, order, axis=1))
+    # permute the tiles: same result set (ties broken by id order here
+    # because all scores are distinct floats)
+    perm = rng.permutation(T)
+    got_s, got_i = ref.streaming_topk_ref(scores[perm], ids[perm], k)
+    np.testing.assert_array_equal(np.sort(np.asarray(got_i)),
+                                  np.sort(np.asarray(want_i)))
+    np.testing.assert_allclose(np.sort(np.asarray(got_s)),
+                               np.sort(np.asarray(want_s)))

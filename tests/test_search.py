@@ -48,6 +48,8 @@ def states(data):
     ivf_state = search.make("ivf").build(jax.random.PRNGKey(3), X, R, CFG)
     return {
         "exact": search.make("exact").build(jax.random.PRNGKey(3), X, R, CFG),
+        "exact_stream": search.make("exact_stream").build(
+            jax.random.PRNGKey(3), X, R, CFG),
         "flat_adc": search.FlatADC.attach(ivf_state.index),
         "ivf": ivf_state,
         "exact_sharded": search.make("exact_sharded", mesh=mesh).build(
@@ -125,11 +127,13 @@ def test_conformance_stats(backend, states):
 
 
 def test_registry_make_and_aliases():
-    assert set(search.names()) == {"exact", "flat_adc", "ivf",
-                                   "exact_sharded", "flat_sharded",
+    assert set(search.names()) == {"exact", "exact_stream", "flat_adc",
+                                   "ivf", "exact_sharded", "flat_sharded",
                                    "ivf_sharded"}
     assert isinstance(search.make("flat"), search.FlatADC)
     assert isinstance(search.make("bruteforce"), search.Exact)
+    assert isinstance(search.make("streaming"), search.ExactStreaming)
+    assert isinstance(search.make("exact_streaming"), search.ExactStreaming)
     assert isinstance(search.make("sharded"), search.IVFSharded)
     assert isinstance(search.make("flat_adc_sharded"), search.FlatSharded)
     with pytest.raises(ValueError, match="unknown search backend"):
@@ -434,3 +438,175 @@ def test_engine_plain_path_and_chunking(data, states):
         engine.search(np.asarray(Q)[:4], nprobe=4)
     with pytest.raises(ValueError, match="does not take nprobe"):
         search.Engine(search.make("exact"), states["exact"], nprobe=4)
+
+
+# ---------------------------------------------------------------------------
+# PR 7: streaming exact scan, int8 LUTs, fused refresh (trace-counter checks)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_exact_matches_resident_exact(data, states):
+    """The double-buffered host-streamed scan is the same oracle: scores
+    bit-identical to the resident ``exact`` backend, through the Engine's
+    eager (engine_jit=False) path included."""
+    _, _, Q, _ = data
+    want = search.make("exact").search(states["exact"], Q, k=10)
+    got = search.make("exact_stream").search(states["exact_stream"], Q, k=10)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.scores),
+                                  np.asarray(got.scores))
+    engine = search.Engine(search.make("exact_stream"),
+                           states["exact_stream"], k=10, min_bucket=4)
+    eres = engine.search(np.asarray(Q))
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(eres.ids))
+    # the host loop is never wrapped in an outer jit: zero Engine compiles
+    assert engine.stats()["compiles"] == 0
+    assert engine.stats()["searcher"]["streaming"] is True
+
+
+def test_streaming_exact_fused_refresh_moves_no_tiles(data):
+    """Fused mode: refresh touches only R — host tiles stay byte-identical
+    and results stay exact (the delta cancels against the frozen corpus)."""
+    X, R, Q, truth = data
+    searcher = search.make("exact_stream")
+    state = searcher.build(jax.random.PRNGKey(3), X, R,
+                           CFG._replace(fused_refresh=True))
+    tiles_before = [t.copy() for t in state.tiles]
+    moved = searcher.refresh(state, _delta(R))
+    for a, b in zip(tiles_before, moved.tiles):
+        np.testing.assert_array_equal(a, b)      # zero corpus-side movement
+    assert float(jnp.max(jnp.abs(moved.R - state.R))) > 0
+    res = searcher.search(moved, Q, k=10)
+    assert recall_at_k(np.asarray(res.ids), truth) >= 0.999
+    assert searcher.stats(moved)["fused_refresh"] is True
+
+
+@pytest.mark.parametrize("lut_dtype", ["int8", "uint8"])
+def test_int8_luts_preserve_recall(data, states, lut_dtype):
+    """Quantized ADC tables keep recall@10 within 0.01 of f32 on the same
+    codes, for both the flat scan and the probed scan."""
+    _, _, Q, truth = data
+    index = states["ivf"].index
+    for backend, attach_kw in (("flat_adc", {}), ("ivf", {"nprobe": L})):
+        searcher = search.make(backend)
+        f32 = searcher.attach(index, **attach_kw)
+        q8 = searcher.attach(index, lut_dtype=lut_dtype, **attach_kw)
+        r_f32 = searcher.search(f32, Q, k=10)
+        r_q8 = searcher.search(q8, Q, k=10)
+        rec_f32 = recall_at_k(np.asarray(r_f32.ids), truth)
+        rec_q8 = recall_at_k(np.asarray(r_q8.ids), truth)
+        assert rec_q8 >= rec_f32 - 0.01, (backend, lut_dtype)
+
+
+def test_engine_lut_cache_keys_on_dtype(data, states):
+    """Two Engines over the same index at different lut_dtypes must not
+    alias cache entries: the key includes the dtype, so a dtype change is
+    a miss, never a silently-wrong hit."""
+    _, _, Q, _ = data
+    Qnp = np.asarray(Q)
+    searcher = search.make("flat_adc")
+    state8 = searcher.attach(states["ivf"].index, lut_dtype="int8")
+    engine = search.Engine(searcher, state8, k=10, min_bucket=4)
+    engine.search(Qnp[:8])
+    assert engine.stats()["lut_misses"] == 8
+    engine.search(Qnp[:8])
+    assert engine.stats()["lut_hits"] == 8
+    # swap the state to f32 under the same Engine: same queries MISS
+    engine.state = searcher.attach(states["ivf"].index)
+    engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["lut_misses"] == 16 and st["lut_hits"] == 8
+    key = engine._lut_key(Qnp[0])
+    assert key[1] == "float32"                 # dtype is part of the key
+
+
+def test_engine_fused_refresh_keeps_cache_and_executables(data, states):
+    """The PR 7 acceptance trace: a fused within-subspace refresh costs the
+    Engine zero recompiles AND zero LUT-cache invalidations — the epoch,
+    the cached rows, and every executable survive; a cross-subspace delta
+    still invalidates."""
+    _, R, Q, _ = data
+    Qnp = np.asarray(Q)
+    searcher = search.make("flat_adc")
+    state = searcher.attach(states["ivf"].index, lut_dtype="int8",
+                            fused_refresh=True)
+    engine = search.Engine(searcher, state, k=10, min_bucket=4)
+    engine.search(Qnp[:8])
+    compiles = engine.stats()["compiles"]
+    assert engine.stats()["lut_invalidations"] == 0
+
+    # subspace_gcd emits purely within-subspace pairs: LUTs provably valid
+    engine.refresh(_delta(R))
+    after = engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["refreshes"] == 1
+    assert st["compiles"] == compiles          # zero recompiles
+    assert st["lut_invalidations"] == 0        # zero cache rebuilds
+    assert st["lut_hits"] == 8                 # the cached rows were REUSED
+    assert st["lut_epoch"] == 0
+    assert after.ids.shape == (8, 10)
+
+    # a cross-subspace pair breaks the invariance proof: epoch advances
+    cross = rotations.GivensDelta(pi=jnp.array([0]),
+                                  pj=jnp.array([DIM - 1]),
+                                  theta=jnp.array([1e-3]))
+    engine.refresh(cross)
+    engine.search(Qnp[:8])
+    st = engine.stats()
+    assert st["lut_invalidations"] == 1
+    assert st["lut_epoch"] == 1
+    assert st["lut_misses"] == 16
+    assert st["compiles"] == compiles          # executables still survive
+
+
+def test_fused_refresh_matches_eager_refresh(data):
+    """Fused (query-side) and eager (corpus-side) refresh are the same
+    math: after identical delta sequences the two states serve matching
+    top-k on PQ and on depth-2 RQ."""
+    X, R, Q, _ = data
+    for depth in (1, 2):
+        cfg = CFG._replace(depth=depth)
+        searcher = search.make("flat_adc")
+        eager = searcher.build(jax.random.PRNGKey(3), X, R, cfg)
+        fused = searcher.build(jax.random.PRNGKey(3), X, R,
+                               cfg._replace(fused_refresh=True))
+        for i in range(3):
+            d = _delta(R, key=i)
+            eager = searcher.refresh(eager, d)
+            fused = searcher.refresh(fused, d)
+        r_e = searcher.search(eager, Q, k=10)
+        r_f = searcher.search(fused, Q, k=10)
+        np.testing.assert_allclose(np.asarray(r_e.scores),
+                                   np.asarray(r_f.scores), rtol=1e-4,
+                                   atol=1e-4)
+        assert np.mean(np.asarray(r_e.ids) == np.asarray(r_f.ids)) >= 0.95
+
+
+def test_sharded_fused_refresh_and_int8(data, states):
+    """The sharded quantized twins inherit fused refresh + int8 LUTs: the
+    frozen-index fused sharded state matches its REPLICATED fused twin
+    after the same refresh (the shard merge only reorders candidates), and
+    the invariance capability reports like the replicated one."""
+    from repro.launch.mesh import make_data_mesh
+
+    _, R, Q, _ = data
+    mesh = make_data_mesh()
+    index = states["ivf"].index
+    searcher = search.make("flat_sharded")
+    fused = searcher.attach(index, mesh=mesh, lut_dtype="int8",
+                            fused_refresh=True)
+    eager = searcher.attach(index, mesh=mesh)
+    replicated = search.make("flat_adc").attach(index, lut_dtype="int8",
+                                                fused_refresh=True)
+    d = _delta(R)
+    assert searcher.luts_refresh_invariant(fused, d) is True
+    assert searcher.luts_refresh_invariant(eager, d) is False
+    fused = searcher.refresh(fused, d)
+    replicated = search.make("flat_adc").refresh(replicated, d)
+    r_f = searcher.search(fused, Q, k=10)
+    r_r = search.make("flat_adc").search(replicated, Q, k=10)
+    np.testing.assert_allclose(np.asarray(r_r.scores),
+                               np.asarray(r_f.scores), rtol=1e-5, atol=1e-5)
+    assert np.mean(np.asarray(r_r.ids) == np.asarray(r_f.ids)) >= 0.95
+    st = searcher.stats(fused)
+    assert st["lut_dtype"] == "int8" and st["fused_refresh"] is True
