@@ -36,12 +36,12 @@ def resolve_bench_dir(cli_out: str | None,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2a,fig2bc,table1,fig4,ivf,kernels,"
-                         "roofline")
+                    help="comma list: fig2a,fig2bc,table1,fig4,ivf,churn,"
+                         "kernels,roofline")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--devices", type=int, default=1,
-                    help="ivf section: run the sharded sweep on N forced "
-                         "host devices (subprocess)")
+                    help="ivf/churn sections: run the sharded cells on N "
+                         "forced host devices (subprocess)")
     ap.add_argument("--out", default=None,
                     help="BENCH_*.json destination dir (default "
                          "$REPRO_BENCH_DIR; --fast falls back to the "
@@ -104,6 +104,19 @@ def main() -> None:
             depths=(1, 2),
             devices=args.devices)
         book("ivf", res, checks)
+
+    if want("churn"):
+        # live mutations under query load: staged adds, in-kernel
+        # tombstones, compaction — zero recompiles, recall pinned
+        from benchmarks import churn as churn_bench
+        if args.fast:
+            res, checks = churn_bench.run(
+                n=8000, dim=32, queries=64, lists=32, subspaces=8,
+                codewords=32, steps=6, batch=64, nprobe=8,
+                staging_rows=512, devices=args.devices)
+        else:
+            res, checks = churn_bench.run(devices=args.devices)
+        book("churn", res, checks)
 
     if want("kernels"):
         from benchmarks import kernels_micro

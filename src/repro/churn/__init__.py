@@ -1,0 +1,31 @@
+"""repro.churn: live mutations for servable indexes.
+
+Streaming ingest, tombstone deletes, and background compaction over the
+search stack's states — built so the serving hot path never changes shape:
+
+  * ``buffer``     — fixed-capacity append buffers + the flat-ADC side
+                     pass that serves staged rows (device-side).
+  * ``ops``        — the mutation primitives: with_staging / stage /
+                     flush / tombstone / compact / shard_rebalance
+                     (host-side, state-in state-out).
+  * ``controller`` — ``ChurnController``: sequences stage→flush→compact
+                     between Engine batches, instrumented via repro.obs.
+
+Deletes are O(1) id flips honored inside the Pallas scan kernels; adds are
+visible to the next query via the staging side pass; compaction repacks at
+preserved shapes in steady state, so sustained churn costs zero recompiles.
+"""
+from repro.churn.buffer import (StagingBuffer, empty, merge_staged,
+                                staged_topk)
+from repro.churn.controller import ChurnController
+from repro.churn.ops import (compact, flush, free_slots, ingest_index,
+                             live_rows, shard_rebalance, stage, staged_rows,
+                             tombstone, tombstone_index, with_staging)
+
+__all__ = [
+    "StagingBuffer", "empty", "merge_staged", "staged_topk",
+    "ChurnController",
+    "with_staging", "stage", "flush", "tombstone", "compact",
+    "shard_rebalance", "tombstone_index", "ingest_index",
+    "staged_rows", "free_slots", "live_rows",
+]

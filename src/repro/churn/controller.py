@@ -1,0 +1,170 @@
+"""ChurnController: sequence stage → flush → compact between Engine batches.
+
+The policy layer over ``churn.ops``: owns WHEN the primitives run so the
+serving loop just interleaves ``engine.search`` with ``controller.step``.
+The controller's one structural move happens at construction — it installs
+the staging buffer (``ops.with_staging``) BEFORE the first search, so every
+executable the Engine compiles is traced with staging attached and the
+whole add/delete/flush/compact cycle after that is shape-preserving:
+zero recompiles in steady state. ``engine.state`` is swapped wholesale
+after each mutation (the Engine re-reads it per batch).
+
+Thresholds:
+
+  flush_at     staging occupancy fraction that triggers a flush after the
+               mutations of a ``step`` (keeps the side pass small).
+  compact_at   tombstone fraction of live capacity that triggers a
+               compaction (reclaims dead blocks before they dominate scan
+               work). Compaction also absorbs staged rows that flushes
+               could not place (their lists had no holes).
+  imbalance_threshold
+               max/mean shard-occupancy ratio beyond which a sharded state
+               is rebalanced (``ops.shard_rebalance`` — the live
+               generalization of ``ivf.shard_split``).
+
+Instrumented through ``repro.obs`` on the Engine's own always-on registry,
+so ``Engine.stats()`` reports the churn block next to its serving counters:
+counters ``churn.staged/flushed/tombstoned/flushes/compactions/rebalances/
+grows``, gauges ``churn.staged_rows/tombstoned_rows``, and the
+``churn.flush_ms`` distribution + ``churn.compact``/``churn.flush`` spans.
+
+The tombstone tally is the controller's own bookkeeping: once flipped to
+−1, a tombstoned row is indistinguishable from a build-time padding hole,
+so the gauge counts deletes since the last compaction (live-row delta per
+``remove``), resetting to zero when compaction reclaims them.
+"""
+from __future__ import annotations
+
+from repro import obs
+from repro.churn import ops
+
+
+class ChurnController:
+    """Drive live churn on a ``search.Engine`` (see module docstring)."""
+
+    def __init__(self, engine, *, staging_rows: int = 1024,
+                 flush_at: float = 0.5, compact_at: float = 0.25,
+                 imbalance_threshold: float = 1.25):
+        self.engine = engine
+        self.flush_at = float(flush_at)
+        self.compact_at = float(compact_at)
+        self.imbalance_threshold = float(imbalance_threshold)
+        self.obs = getattr(engine, "obs", None) or obs.default_registry()
+        self._tombstoned = 0
+        # install staging NOW, before the first search compiles — the
+        # buffer is pytree structure, so this is the one structural change
+        # the controller ever makes
+        if getattr(engine.state, "staging", None) is None:
+            engine.state = ops.with_staging(engine.state, staging_rows)
+        self._gauges()
+
+    # -- metric plumbing ---------------------------------------------------
+    def _count(self, name: str, n: int = 1) -> None:
+        self.obs.counter(f"churn.{name}").inc(n)
+
+    def _gauges(self) -> None:
+        self.obs.gauge("churn.staged_rows").set(ops.staged_rows(self.state))
+        self.obs.gauge("churn.tombstoned_rows").set(self._tombstoned)
+
+    @property
+    def state(self):
+        return self.engine.state
+
+    # -- mutations ---------------------------------------------------------
+    def add(self, X_new, new_ids) -> None:
+        """Stage new rows; they are served by the very next query. Flushes
+        (and compacts, if flushing cannot free enough slots) first when the
+        buffer cannot hold the batch."""
+        n = len(new_ids)
+        if ops.free_slots(self.state) < n:
+            self.flush()
+        if ops.free_slots(self.state) < n:
+            self.compact()
+        self.engine.state = ops.stage(self.state, X_new, new_ids)
+        self._count("staged", n)
+        self._gauges()
+
+    def remove(self, remove_ids) -> None:
+        """Tombstone rows by id — O(1), visible to the next query."""
+        before = ops.live_rows(self.state)
+        self.engine.state = ops.tombstone(self.state, remove_ids)
+        dead = before - ops.live_rows(self.state)
+        self._tombstoned += dead
+        self._count("tombstoned", dead)
+        self._gauges()
+
+    # -- maintenance -------------------------------------------------------
+    def flush(self) -> int:
+        """Fold staged rows into CSR holes (shape-preserving)."""
+        with self.obs.span("churn.flush") as sp:
+            new_state, moved = ops.flush(self.state)
+            sp.sync(new_state.index.ids if hasattr(new_state, "index")
+                    else new_state.ids)
+        self.engine.state = new_state
+        self.obs.distribution("churn.flush_ms").observe(sp.elapsed_ms)
+        self._count("flushes")
+        self._count("flushed", moved)
+        self._gauges()
+        return moved
+
+    def compact(self) -> None:
+        """Repack the live (+ staged) rows, reclaiming tombstoned blocks.
+        Steady-state compactions preserve every shape; genuine growth
+        (capacity or probe window) is counted via ``churn.grows`` — it
+        recompiles once, legitimately."""
+        st = self.state
+        cap_before = (st.index.capacity if hasattr(st, "index")
+                      else int(st.codes.shape[1]))
+        mb_before = st.max_blocks
+        with self.obs.span("churn.compact") as sp:
+            new_state = ops.compact(st)
+            sp.sync(new_state.ids if not hasattr(new_state, "index")
+                    else new_state.index.ids)
+        self.engine.state = new_state
+        cap_after = (new_state.index.capacity
+                     if hasattr(new_state, "index")
+                     else int(new_state.codes.shape[1]))
+        if cap_after != cap_before or new_state.max_blocks != mb_before:
+            self._count("grows")
+        self._count("compactions")
+        self._tombstoned = 0
+        self._gauges()
+
+    def maybe_rebalance(self) -> bool:
+        """Sharded states only: rebalance when max/mean shard occupancy
+        exceeds the threshold. Returns whether a rebalance ran."""
+        st = self.state
+        if not hasattr(st, "list_offsets") or not hasattr(st, "mesh"):
+            return False
+        import numpy as np
+
+        rows = (np.asarray(st.ids) >= 0).sum(axis=1).astype(np.float64)
+        if st.staging is not None:
+            rows += (np.asarray(st.staging.ids) >= 0).sum(axis=1)
+        imbalance = float(rows.max()) / max(float(rows.mean()), 1.0)
+        if imbalance <= self.imbalance_threshold:
+            return False
+        with self.obs.span("churn.rebalance"):
+            self.engine.state = ops.shard_rebalance(st)
+        self._count("rebalances")
+        self._tombstoned = 0   # rebalance repacks, reclaiming tombstones too
+        self._gauges()
+        return True
+
+    # -- the per-batch policy ----------------------------------------------
+    def step(self, *, add=None, add_ids=None, remove_ids=None) -> None:
+        """One churn tick between query batches: apply this tick's deletes
+        and adds, then run whatever maintenance the thresholds call for."""
+        if remove_ids is not None and len(remove_ids):
+            self.remove(remove_ids)
+        if add is not None and len(add_ids):
+            self.add(add, add_ids)
+        st = self.state
+        cap = st.staging.ids.size if st.staging is not None else 0
+        if cap and ops.staged_rows(st) >= self.flush_at * cap:
+            self.flush()
+        total_cap = (st.index.capacity if hasattr(st, "index")
+                     else int(st.codes.shape[1]) * st.codes.shape[0])
+        if self._tombstoned >= self.compact_at * max(total_cap, 1):
+            self.compact()
+        self.maybe_rebalance()

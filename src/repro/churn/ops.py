@@ -1,0 +1,627 @@
+"""Host-side churn primitives: stage, flush, tombstone, compact, rebalance.
+
+The mutation half of ``repro.churn``. Every primitive here takes a servable
+state, returns a new one, and is shape-preserving wherever the serving hot
+path can see it:
+
+  * ``tombstone`` — O(1) deletes: flip ids to −1 (CSR, staging, and exact
+    corpora alike); the in-kernel mask makes the rows score −inf on the
+    very next query. Never reshapes anything.
+  * ``stage`` — encode new rows against the state's frozen quantizers and
+    park them in free staging slots (``churn.buffer``); raises when the
+    buffer is full so the caller can flush/compact first.
+  * ``flush`` — fold staged rows into the CSR holes of their target lists.
+    Holes only: list offsets, shapes, and statics are untouched, and rows
+    that don't fit (their list has no holes) simply stay staged.
+  * ``compact`` — host-side repack of the live (+ optionally staged) rows,
+    reclaiming tombstoned blocks. Capacity is padded back up to the
+    original whenever the live set still fits, so steady-state compaction
+    (adds ≈ deletes) swaps arrays of identical shape under the compiled
+    executables — zero recompiles. Genuine growth returns bigger arrays
+    (and possibly a bigger ``max_blocks`` static): a legitimate, counted
+    recompile, not steady state.
+  * ``shard_rebalance`` — the sharded generalization of
+    ``index/ivf.py::shard_split``: gather every live row, re-partition by
+    id rank, repack per shard. Codes are carried, never re-encoded, so
+    scores are bit-identical to a fresh rebuild of the same rows.
+
+States are dispatched by shape ("duck typing"), not by class: this module
+sits below ``repro.search`` (whose modules import ``churn.buffer``) and
+must not import it back. The sharded placement helper is therefore inlined
+here — same spec as ``search/sharded.py::_place_sharded``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.churn import buffer as churn_buffer
+from repro.churn.buffer import StagingBuffer
+from repro.index import ivf as index_ivf
+from repro.index.ivf import IVFPQIndex
+
+
+# ---------------------------------------------------------------------------
+# State dispatch
+# ---------------------------------------------------------------------------
+
+
+def _kind(state) -> str:
+    """Which churn family a state belongs to, by structure (no
+    ``repro.search`` imports — see module docstring)."""
+    if isinstance(state, IVFPQIndex):
+        return "index"
+    if hasattr(state, "index"):                    # search.flat.ADCState
+        return "adc"
+    if hasattr(state, "tiles"):                    # StreamingExactState
+        return "exact_stream"
+    if hasattr(state, "list_offsets"):             # ShardedADCState
+        return "sharded_adc"
+    if hasattr(state, "XR"):                       # Exact(/Sharded)State
+        return "sharded_exact" if state.XR.ndim == 3 else "exact"
+    raise TypeError(
+        f"{type(state).__name__} is not a churn-capable state (expected an "
+        "IVFPQIndex, an ADC/exact searcher state, or a sharded twin)")
+
+
+def _place(arr: jax.Array, mesh, axes: tuple[str, ...]) -> jax.Array:
+    """Partition a stacked (S, ...) per-shard array: leading axis over the
+    resolved row axes (the ``search/sharded.py::_place_sharded`` spec)."""
+    spec = P(axes if len(axes) > 1 else axes[0], *([None] * (arr.ndim - 1)))
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
+
+def _place_buffer(buf: StagingBuffer, mesh, axes) -> StagingBuffer:
+    return StagingBuffer(codes=_place(buf.codes, mesh, axes),
+                         ids=_place(buf.ids, mesh, axes),
+                         lists=_place(buf.lists, mesh, axes))
+
+
+def _row_lists(offsets: np.ndarray, capacity: int,
+               num_lists: int) -> np.ndarray:
+    """Coarse-list id of every CSR row (sentinel/pad rows clamp into the
+    last list; they are holes, so the value never matters)."""
+    rl = np.searchsorted(offsets, np.arange(capacity), side="right") - 1
+    return np.clip(rl, 0, num_lists - 1).astype(np.int32)
+
+
+def _repack_bound(live: int, num_lists: int, block_size: int) -> int:
+    """Upper bound on ``pack()``'s capacity for ``live`` rows however they
+    distribute over lists: per-list rounding wastes < one block per list,
+    plus the sentinel block — a block multiple by construction."""
+    bound = live + num_lists * (block_size - 1) + block_size
+    return math.ceil(bound / block_size) * block_size
+
+
+# ---------------------------------------------------------------------------
+# Occupancy facts (host-side, for controllers/tests)
+# ---------------------------------------------------------------------------
+
+
+def staged_rows(state) -> int:
+    """Live rows currently staged (0 when no buffer is attached)."""
+    stg = getattr(state, "staging", None)
+    if stg is None:
+        return 0
+    return int(np.sum(np.asarray(stg.ids) >= 0))
+
+
+def free_slots(state) -> int:
+    """Free staging slots across all shards."""
+    stg = getattr(state, "staging", None)
+    if stg is None:
+        return 0
+    return int(np.sum(np.asarray(stg.ids) < 0))
+
+
+def live_rows(state) -> int:
+    """Total live (servable) rows: CSR/corpus plus staged."""
+    kind = _kind(state)
+    if kind == "index":
+        return int(np.sum(np.asarray(state.ids) >= 0))
+    if kind == "adc":
+        return int(np.sum(np.asarray(state.index.ids) >= 0)) \
+            + staged_rows(state)
+    if kind == "exact_stream":
+        return sum(int(np.sum(np.asarray(t) >= 0)) for t in state.tile_ids)
+    # sharded_adc / exact / sharded_exact all carry a stacked/flat ids array
+    return int(np.sum(np.asarray(state.ids) >= 0)) + staged_rows(state)
+
+
+# ---------------------------------------------------------------------------
+# Staging
+# ---------------------------------------------------------------------------
+
+
+def with_staging(state, capacity: int, *, window_slack: int | None = None):
+    """Attach an (empty) append buffer of ``capacity`` rows — per shard for
+    sharded states. Do this ONCE, before the first search: the buffer is
+    part of the pytree structure, so installing it later invalidates
+    compiled executables (installing it first means they are traced with
+    staging from the start and churn never recompiles them).
+
+    ``window_slack`` extra blocks are added to the static ``max_blocks``
+    probe window (default: the buffer capacity in blocks) so lists that
+    grow when staged rows are compacted in stay fully scanned without a
+    recompile — out-of-range window tiles redirect to the sentinel hole
+    block, so slack costs only masked scan work.
+
+    Capacity also gains worst-case block-rounding headroom (≤ one block
+    per list, holes past the last list offset — pure reserve, never
+    scanned or flushed into): a ``compact()`` of the same live row count
+    can round per-list padding differently, and without the reserve a
+    one-block drift would grow the arrays and recompile. With it,
+    steady-state compaction is shape-preserving by construction.
+    """
+    kind = _kind(state)
+    if kind == "adc":
+        if state.staging is not None:
+            return state
+        idx = state.index
+        slack = (math.ceil(capacity / idx.block_size)
+                 if window_slack is None else window_slack)
+        buf = churn_buffer.empty(capacity, idx.codes.shape[1],
+                                 idx.codes.dtype)
+        mb = (state.max_blocks if state.max_blocks >= 1
+              else idx.max_list_blocks())
+        idx = _pad_capacity(idx, _repack_bound(
+            int(np.sum(np.asarray(idx.ids) >= 0)), idx.num_lists,
+            idx.block_size))
+        return dataclasses.replace(state, index=idx, staging=buf,
+                                   max_blocks=mb + slack)
+    if kind == "sharded_adc":
+        if state.staging is not None:
+            return state
+        slack = (math.ceil(capacity / state.block_size)
+                 if window_slack is None else window_slack)
+        buf = churn_buffer.empty(capacity, state.codes.shape[-1],
+                                 state.codes.dtype,
+                                 shards=state.codes.shape[0])
+        mb = state.max_blocks
+        if mb < 1:
+            lens = np.diff(np.asarray(state.list_offsets), axis=1)
+            mb = max(int(lens.max()) // state.block_size, 1)
+        ids_np = np.asarray(state.ids)
+        num_lists = np.asarray(state.list_offsets).shape[1] - 1
+        cap = max(int(state.codes.shape[1]), _repack_bound(
+            int((ids_np >= 0).sum(axis=1).max()), num_lists,
+            state.block_size))
+        extra = cap - int(state.codes.shape[1])
+        mesh, axes = state.mesh, state.axes
+        out = dataclasses.replace(
+            state, staging=_place_buffer(buf, mesh, axes),
+            max_blocks=mb + slack)
+        if extra:
+            codes = np.pad(np.asarray(state.codes),
+                           ((0, 0), (0, extra), (0, 0)))
+            ids = np.pad(ids_np, ((0, 0), (0, extra)), constant_values=-1)
+            out = dataclasses.replace(
+                out, codes=_place(jnp.asarray(codes), mesh, axes),
+                ids=_place(jnp.asarray(ids), mesh, axes))
+        return out
+    raise TypeError(
+        "append buffers require a quantized (ADC) state — exact backends "
+        "store raw vectors and take no staged codes")
+
+
+def stage(state, X_new: jax.Array, new_ids):
+    """Encode raw rows against the state's quantizers and park them in free
+    staging slots (most-free shard first on sharded states, so the side
+    passes stay balanced). Raises ``ValueError`` when the buffer cannot
+    hold them — ``flush``/``compact`` first (ChurnController does).
+
+    Encoding uses the state's stored rotation — the frozen R₀ under fused
+    refresh, exactly like the frozen codebooks the CSR codes live in, so
+    staged and resident rows score through one LUT pack."""
+    kind = _kind(state)
+    stg = getattr(state, "staging", None)
+    if stg is None:
+        raise ValueError(
+            "state has no staging buffer — churn.with_staging(state, cap) "
+            "first (before the first search, to keep executables warm)")
+    new_ids = np.asarray(new_ids, dtype=np.int32)
+    m = int(new_ids.shape[0])
+
+    if kind == "adc":
+        idx = state.index
+        XR = jnp.asarray(X_new) @ idx.R.astype(X_new.dtype)
+        list_ids, codes = index_ivf.encode(XR, idx.coarse, idx.quantizer)
+        s_codes = np.asarray(stg.codes).copy()
+        s_ids = np.asarray(stg.ids).copy()
+        s_lists = np.asarray(stg.lists).copy()
+        free = np.nonzero(s_ids < 0)[0]
+        if free.size < m:
+            raise ValueError(
+                f"staging buffer full: {m} new rows, {free.size} free slots "
+                "— flush() or compact() first")
+        sl = free[:m]
+        s_codes[sl] = np.asarray(codes)
+        s_ids[sl] = new_ids
+        s_lists[sl] = np.asarray(list_ids, dtype=np.int32)
+        return dataclasses.replace(state, staging=StagingBuffer(
+            codes=jnp.asarray(s_codes), ids=jnp.asarray(s_ids),
+            lists=jnp.asarray(s_lists)))
+
+    if kind == "sharded_adc":
+        XR = jnp.asarray(X_new) @ state.R.astype(X_new.dtype)
+        list_ids, codes = index_ivf.encode(XR, state.coarse, state.quantizer)
+        codes = np.asarray(codes)
+        list_ids = np.asarray(list_ids, dtype=np.int32)
+        s_codes = np.asarray(stg.codes).copy()
+        s_ids = np.asarray(stg.ids).copy()
+        s_lists = np.asarray(stg.lists).copy()
+        free = [list(np.nonzero(s_ids[s] < 0)[0]) for s in
+                range(s_ids.shape[0])]
+        if sum(len(f) for f in free) < m:
+            raise ValueError(
+                f"staging buffers full: {m} new rows, "
+                f"{sum(len(f) for f in free)} free slots across shards — "
+                "flush() or compact() first")
+        for r in range(m):
+            s = max(range(len(free)), key=lambda j: len(free[j]))
+            slot = free[s].pop(0)
+            s_codes[s, slot] = codes[r]
+            s_ids[s, slot] = new_ids[r]
+            s_lists[s, slot] = list_ids[r]
+        return dataclasses.replace(state, staging=_place_buffer(
+            StagingBuffer(codes=jnp.asarray(s_codes),
+                          ids=jnp.asarray(s_ids),
+                          lists=jnp.asarray(s_lists)),
+            state.mesh, state.axes))
+
+    raise TypeError("stage() needs a quantized state with a staging buffer")
+
+
+def _flush_into(ids_np: np.ndarray, codes_np: np.ndarray,
+                offsets: np.ndarray, s_codes: np.ndarray,
+                s_ids: np.ndarray, s_lists: np.ndarray) -> int:
+    """Fill CSR holes from staged rows, in place on host copies; staged
+    rows that fit free their slot (id −1). Returns the rows moved. The
+    sentinel block sits past ``offsets[-1]`` and is never a target."""
+    moved = 0
+    staged = np.nonzero(s_ids >= 0)[0]
+    for l in np.unique(s_lists[staged]) if staged.size else ():
+        take = staged[s_lists[staged] == l]
+        seg = slice(int(offsets[l]), int(offsets[l + 1]))
+        holes = np.nonzero(ids_np[seg] < 0)[0] + int(offsets[l])
+        fit = min(holes.size, take.size)
+        if fit:
+            ids_np[holes[:fit]] = s_ids[take[:fit]]
+            codes_np[holes[:fit]] = s_codes[take[:fit]]
+            s_ids[take[:fit]] = -1
+            moved += fit
+    return moved
+
+
+def flush(state):
+    """Fold staged rows into the block-aligned CSR without touching
+    offsets, shapes, or other shards: holes only. Rows whose target list
+    has no free hole stay staged (compact() absorbs them with a repack).
+    Returns ``(new_state, rows_moved)``."""
+    kind = _kind(state)
+    stg = getattr(state, "staging", None)
+    if stg is None:
+        return state, 0
+
+    if kind == "adc":
+        idx = state.index
+        ids_np = np.asarray(idx.ids).copy()
+        codes_np = np.asarray(idx.codes).copy()
+        s_codes = np.asarray(stg.codes).copy()
+        s_ids = np.asarray(stg.ids).copy()
+        s_lists = np.asarray(stg.lists)
+        moved = _flush_into(ids_np, codes_np, np.asarray(idx.list_offsets),
+                            s_codes, s_ids, s_lists)
+        if not moved:
+            return state, 0
+        return dataclasses.replace(
+            state,
+            index=dataclasses.replace(idx, codes=jnp.asarray(codes_np),
+                                      ids=jnp.asarray(ids_np)),
+            staging=dataclasses.replace(stg, ids=jnp.asarray(s_ids)),
+        ), moved
+
+    if kind == "sharded_adc":
+        ids_np = np.asarray(state.ids).copy()
+        codes_np = np.asarray(state.codes).copy()
+        offs = np.asarray(state.list_offsets)
+        s_codes = np.asarray(stg.codes).copy()
+        s_ids = np.asarray(stg.ids).copy()
+        s_lists = np.asarray(stg.lists)
+        moved = 0
+        for s in range(ids_np.shape[0]):   # each shard flushes locally
+            moved += _flush_into(ids_np[s], codes_np[s], offs[s],
+                                 s_codes[s], s_ids[s], s_lists[s])
+        if not moved:
+            return state, 0
+        mesh, axes = state.mesh, state.axes
+        return dataclasses.replace(
+            state,
+            codes=_place(jnp.asarray(codes_np), mesh, axes),
+            ids=_place(jnp.asarray(ids_np), mesh, axes),
+            staging=dataclasses.replace(
+                stg, ids=_place(jnp.asarray(s_ids), mesh, axes)),
+        ), moved
+
+    raise TypeError("flush() needs a quantized state with a staging buffer")
+
+
+# ---------------------------------------------------------------------------
+# Tombstones
+# ---------------------------------------------------------------------------
+
+
+def tombstone_index(index: IVFPQIndex, remove_ids) -> IVFPQIndex:
+    """Tombstone items of a bare index by id: their rows become holes
+    (id −1) that score −inf in-kernel and are reused by later flushes.
+    Shape-preserving and jit-able."""
+    rids = jnp.asarray(remove_ids).astype(index.ids.dtype)
+    dead = jnp.isin(index.ids, rids)
+    return dataclasses.replace(index, ids=jnp.where(dead, -1, index.ids))
+
+
+def _tombstone_ids(ids: jax.Array, rids: jax.Array) -> jax.Array:
+    return jnp.where(jnp.isin(ids, rids.astype(ids.dtype)), -1, ids)
+
+
+def tombstone(state, remove_ids):
+    """O(1) delete on ANY backend state: flip matching ids (resident and
+    staged) to −1. Nothing is reshaped, no executable is invalidated — the
+    rows just stop scoring, everywhere, on the next query."""
+    rids = jnp.asarray(remove_ids)
+    kind = _kind(state)
+    if kind == "index":
+        return tombstone_index(state, rids)
+    if kind == "adc":
+        stg = state.staging
+        if stg is not None:
+            stg = dataclasses.replace(stg,
+                                      ids=_tombstone_ids(stg.ids, rids))
+        return dataclasses.replace(
+            state, index=tombstone_index(state.index, rids), staging=stg)
+    if kind == "sharded_adc":
+        mesh, axes = state.mesh, state.axes
+        stg = state.staging
+        if stg is not None:
+            stg = dataclasses.replace(
+                stg, ids=_place(_tombstone_ids(stg.ids, rids), mesh, axes))
+        return dataclasses.replace(
+            state, ids=_place(_tombstone_ids(state.ids, rids), mesh, axes),
+            staging=stg)
+    if kind == "exact":
+        return dataclasses.replace(state,
+                                   ids=_tombstone_ids(state.ids, rids))
+    if kind == "sharded_exact":
+        return dataclasses.replace(
+            state, ids=_place(_tombstone_ids(state.ids, rids),
+                              state.mesh, state.axes))
+    # exact_stream: host-resident tile id tuples + a live-row count field
+    rh = np.asarray(rids)
+    tile_ids = tuple(
+        np.where(np.isin(t, rh), -1, t).astype(np.int32)
+        for t in state.tile_ids)
+    rows = sum(int(np.sum(t >= 0)) for t in tile_ids)
+    return dataclasses.replace(state, tile_ids=tile_ids, rows=rows)
+
+
+# ---------------------------------------------------------------------------
+# Compaction & rebalance
+# ---------------------------------------------------------------------------
+
+
+def _pad_capacity(index: IVFPQIndex, cap: int) -> IVFPQIndex:
+    """Append hole rows so the index reaches ``cap`` total rows. Both
+    capacities are block multiples, so the trailing block stays all-hole
+    and ``sentinel_block`` (capacity//bs − 1) remains a valid redirect
+    target."""
+    cur = index.capacity
+    if cur >= cap:
+        return index
+    extra = cap - cur
+    codes = np.pad(np.asarray(index.codes), ((0, extra), (0, 0)))
+    ids = np.pad(np.asarray(index.ids), (0, extra), constant_values=-1)
+    return dataclasses.replace(index, codes=jnp.asarray(codes),
+                               ids=jnp.asarray(ids))
+
+
+def _gather_live(index_ids, index_codes, offsets, num_lists):
+    """(codes, list_ids, ids) of the live CSR rows — pack() operands."""
+    ids = np.asarray(index_ids)
+    codes = np.asarray(index_codes)
+    offs = np.asarray(offsets)
+    live = ids >= 0
+    rl = _row_lists(offs, ids.shape[0], num_lists)
+    return codes[live], rl[live], ids[live]
+
+
+def _drain_staged(stg: StagingBuffer | None, shard: int | None = None):
+    """(codes, list_ids, ids) of the live staged rows (empty triple when
+    no buffer). ``shard`` selects one stacked row."""
+    if stg is None:
+        return None
+    s_codes = np.asarray(stg.codes if shard is None else stg.codes[shard])
+    s_ids = np.asarray(stg.ids if shard is None else stg.ids[shard])
+    s_lists = np.asarray(stg.lists if shard is None else stg.lists[shard])
+    live = s_ids >= 0
+    return s_codes[live], s_lists[live].astype(np.int32), s_ids[live]
+
+
+def _empty_like(stg: StagingBuffer) -> StagingBuffer:
+    return dataclasses.replace(stg, ids=jnp.full_like(stg.ids, -1))
+
+
+def compact(state, *, include_staged: bool = True):
+    """Reclaim tombstoned blocks: repack the live rows (draining the
+    staging buffer too, by default) into fresh block-aligned CSR order.
+    Codes are carried, never re-encoded — scores are bit-identical to a
+    fresh rebuild of the same rows under the same quantizers.
+
+    Shape discipline: capacity is padded back to the pre-compact value
+    whenever the live set fits (the steady-churn case — pure shape-
+    preserving array swap, zero recompiles); a genuinely grown corpus
+    returns larger arrays, and a list grown past the static probe window
+    raises ``max_blocks`` — both are counted as growth by the controller
+    and recompile once.
+    """
+    kind = _kind(state)
+    if kind == "index":
+        c, l, i = _gather_live(state.ids, state.codes, state.list_offsets,
+                               state.num_lists)
+        new = index_ivf.pack(state.R, state.coarse, state.quantizer,
+                             c, l, i, block_size=state.block_size)
+        return _pad_capacity(new, state.capacity)
+
+    if kind == "adc":
+        idx = state.index
+        c, l, i = _gather_live(idx.ids, idx.codes, idx.list_offsets,
+                               idx.num_lists)
+        parts = [(c, l, i)]
+        stg = state.staging
+        if include_staged and stg is not None:
+            parts.append(_drain_staged(stg))
+            stg = _empty_like(stg)
+        new = index_ivf.pack(
+            idx.R, idx.coarse, idx.quantizer,
+            np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]),
+            np.concatenate([p[2] for p in parts]),
+            block_size=idx.block_size)
+        new = _pad_capacity(new, idx.capacity)
+        mb = state.max_blocks
+        if mb >= 1:
+            mb = max(mb, new.max_list_blocks())
+        return dataclasses.replace(state, index=new, staging=stg,
+                                   max_blocks=mb)
+
+    if kind == "sharded_adc":
+        return _compact_sharded(state, include_staged=include_staged,
+                                rebalance=False)
+    raise TypeError("compact() needs a quantized (ADC or index) state")
+
+
+def shard_rebalance(state, *, include_staged: bool = True):
+    """Move rows between shards when occupancy has drifted: gather every
+    live (+ staged) row, re-partition by id rank (``ivf.shard_split``'s
+    rule — dense whatever the id space), repack per shard. Codes carried →
+    bit-identical scores; shapes padded back to the common pre-call
+    capacity when the rows still fit, so a rebalance is recompile-free in
+    steady state."""
+    if _kind(state) != "sharded_adc":
+        raise TypeError("shard_rebalance() needs a sharded ADC state")
+    return _compact_sharded(state, include_staged=include_staged,
+                            rebalance=True)
+
+
+def _compact_sharded(state, *, include_staged: bool, rebalance: bool):
+    """Shared body: per-shard repack (compact) or global rank re-partition
+    + per-shard repack (rebalance)."""
+    S = state.codes.shape[0]
+    offs = np.asarray(state.list_offsets)
+    num_lists = offs.shape[1] - 1
+    stg = state.staging
+
+    # live rows per shard (+ that shard's staged rows)
+    per_shard = []
+    for s in range(S):
+        c, l, i = _gather_live(np.asarray(state.ids)[s],
+                               np.asarray(state.codes)[s], offs[s],
+                               num_lists)
+        if include_staged and stg is not None:
+            sc, sl, si = _drain_staged(stg, shard=s)
+            c = np.concatenate([c, sc])
+            l = np.concatenate([l, sl])
+            i = np.concatenate([i, si])
+        per_shard.append((c, l, i))
+
+    if rebalance:
+        all_c = np.concatenate([p[0] for p in per_shard])
+        all_l = np.concatenate([p[1] for p in per_shard])
+        all_i = np.concatenate([p[2] for p in per_shard])
+        # id-rank partition, exactly as ivf.shard_split
+        rank = np.empty(all_i.size, dtype=np.int64)
+        rank[np.argsort(all_i, kind="stable")] = np.arange(all_i.size)
+        shard_of = (rank * S) // max(all_i.size, 1)
+        per_shard = [(all_c[shard_of == s], all_l[shard_of == s],
+                      all_i[shard_of == s]) for s in range(S)]
+
+    parts = [index_ivf.pack(state.R, state.coarse, state.quantizer,
+                            c, l, i, block_size=state.block_size)
+             for c, l, i in per_shard]
+    cap = max(max(p.capacity for p in parts), int(state.codes.shape[1]))
+    codes = np.stack([np.pad(np.asarray(p.codes),
+                             ((0, cap - p.capacity), (0, 0)))
+                      for p in parts])
+    ids = np.stack([np.pad(np.asarray(p.ids), (0, cap - p.capacity),
+                           constant_values=-1) for p in parts])
+    offsets = np.stack([np.asarray(p.list_offsets) for p in parts])
+    mb = state.max_blocks
+    if mb >= 1:
+        mb = max(mb, max(p.max_list_blocks() for p in parts))
+    mesh, axes = state.mesh, state.axes
+    if include_staged and stg is not None:
+        stg = _place_buffer(_empty_like(stg), mesh, axes)
+    return dataclasses.replace(
+        state,
+        codes=_place(jnp.asarray(codes), mesh, axes),
+        ids=_place(jnp.asarray(ids), mesh, axes),
+        list_offsets=_place(jnp.asarray(offsets), mesh, axes),
+        staging=stg, max_blocks=mb)
+
+
+# ---------------------------------------------------------------------------
+# Bare-index ingest (the maintain.add path, rehomed)
+# ---------------------------------------------------------------------------
+
+
+def ingest_index(index: IVFPQIndex, X_new: jax.Array,
+                 new_ids) -> IVFPQIndex:
+    """Eager insert into a bare index: encode against the current
+    centroids/codebooks, fill each target list's holes, and fall back to a
+    full block-aligned repack when a list overflows (host-side, like
+    ``ivf.build``). This is the one-shot/offline path; live serving should
+    stage + flush instead (``maintain.add`` now shims here with a
+    DeprecationWarning)."""
+    XR = X_new @ index.R
+    list_ids, codes_new = index_ivf.encode(XR, index.coarse, index.quantizer)
+
+    list_ids_np = np.asarray(list_ids)
+    codes_np = np.asarray(codes_new)
+    new_ids_np = np.asarray(new_ids, dtype=np.int32)
+    ids_np = np.asarray(index.ids).copy()
+    all_codes_np = np.asarray(index.codes).copy()
+    offsets = np.asarray(index.list_offsets)
+
+    overflow = []
+    for l in np.unique(list_ids_np):
+        take = np.nonzero(list_ids_np == l)[0]
+        seg = slice(int(offsets[l]), int(offsets[l + 1]))
+        holes = np.nonzero(ids_np[seg] < 0)[0] + offsets[l]
+        fit = min(len(holes), len(take))
+        ids_np[holes[:fit]] = new_ids_np[take[:fit]]
+        all_codes_np[holes[:fit]] = codes_np[take[:fit]]
+        overflow.extend(take[fit:].tolist())
+
+    if not overflow:
+        return dataclasses.replace(
+            index,
+            codes=jnp.asarray(all_codes_np),
+            ids=jnp.asarray(ids_np),
+        )
+
+    # Some list overflowed its padding: repack everything (existing live
+    # rows keep their codes — no re-encode — only the layout is rebuilt).
+    live = ids_np >= 0
+    row_list = _row_lists(offsets, len(ids_np), index.num_lists)
+    ov = np.asarray(overflow)
+    return index_ivf.pack(
+        index.R, index.coarse, index.quantizer,
+        np.concatenate([all_codes_np[live], codes_np[ov]]),
+        np.concatenate([row_list[live], list_ids_np[ov]]),
+        np.concatenate([ids_np[live], new_ids_np[ov]]),
+        block_size=index.block_size,
+    )

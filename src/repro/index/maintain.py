@@ -24,14 +24,14 @@ size — versus the O(N·n·K) full re-encode, and matches the rebuild's codes
 on ≥99% of items per step (the acceptance test in tests/test_ivf.py; exact
 when the matching is restricted to within-subspace pairs).
 
-``add`` fills the hole rows that CSR block padding leaves inside each target
-list (O(new items) in the common case) and falls back to a full repack only
-when some list overflows; ``remove`` tombstones ids in place (jit-able,
-shape-preserving) and leaves the holes for future adds.
+Mutations have moved to ``repro.churn`` (staging buffers, in-kernel
+tombstones, background compaction); the ``add``/``remove`` here are
+deprecated shims over ``churn.ingest_index``/``churn.tombstone_index``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -83,58 +83,32 @@ def refresh_health(R: jax.Array,
 
 
 def remove(index: IVFPQIndex, remove_ids: jax.Array) -> IVFPQIndex:
-    """Tombstone items by id: their rows become holes (id −1) that score
-    −inf and are reused by subsequent ``add`` calls. Shape-preserving."""
-    dead = jnp.isin(index.ids, remove_ids.astype(index.ids.dtype))
-    return dataclasses.replace(
-        index, ids=jnp.where(dead, -1, index.ids)
-    )
+    """Deprecated alias for ``repro.churn.tombstone_index`` (kept for one
+    release so existing callers keep working — same semantics: tombstone
+    ids in place, shape-preserving). New code should use ``repro.churn``:
+    ``tombstone`` handles every backend state, not just bare indexes."""
+    warnings.warn(
+        "maintain.remove is deprecated — use repro.churn.tombstone (any "
+        "searcher state) or churn.tombstone_index (bare index)",
+        DeprecationWarning, stacklevel=2)
+    from repro import churn
+
+    return churn.tombstone_index(index, jnp.asarray(remove_ids))
 
 
 def add(index: IVFPQIndex, X_new: jax.Array, new_ids: jax.Array) -> IVFPQIndex:
-    """Insert raw vectors (rotated + residual-encoded against the current
-    centroids/codebooks). Hole rows inside each target list are filled
-    first; if any list runs out, the whole index is repacked with fresh
-    block padding (host-side, like ``ivf.build``)."""
-    XR = X_new @ index.R
-    list_ids, codes_new = ivf.encode(XR, index.coarse, index.quantizer)
+    """Deprecated alias for ``repro.churn.ingest_index`` (the eager
+    hole-fill + repack-on-overflow insert). Live serving should stage
+    through a ``churn.ChurnController`` / ``churn.stage`` instead: staged
+    adds are visible to the next query without ever repacking the CSR
+    under the compiled executables."""
+    warnings.warn(
+        "maintain.add is deprecated — use repro.churn.ingest_index "
+        "(offline) or churn.stage/ChurnController.add (live serving)",
+        DeprecationWarning, stacklevel=2)
+    from repro import churn
 
-    list_ids_np = np.asarray(list_ids)
-    codes_np = np.asarray(codes_new)
-    new_ids_np = np.asarray(new_ids, dtype=np.int32)
-    ids_np = np.asarray(index.ids).copy()
-    all_codes_np = np.asarray(index.codes).copy()
-    offsets = np.asarray(index.list_offsets)
-
-    overflow = []
-    for l in np.unique(list_ids_np):
-        take = np.nonzero(list_ids_np == l)[0]
-        seg = slice(int(offsets[l]), int(offsets[l + 1]))
-        holes = np.nonzero(ids_np[seg] < 0)[0] + offsets[l]
-        fit = min(len(holes), len(take))
-        ids_np[holes[:fit]] = new_ids_np[take[:fit]]
-        all_codes_np[holes[:fit]] = codes_np[take[:fit]]
-        overflow.extend(take[fit:].tolist())
-
-    if not overflow:
-        return dataclasses.replace(
-            index,
-            codes=jnp.asarray(all_codes_np),
-            ids=jnp.asarray(ids_np),
-        )
-
-    # Some list overflowed its padding: repack everything (existing live
-    # rows keep their codes — no re-encode — only the layout is rebuilt).
-    live = ids_np >= 0
-    row_list = np.searchsorted(offsets, np.arange(len(ids_np)), side="right") - 1
-    ov = np.asarray(overflow)
-    return ivf.pack(
-        index.R, index.coarse, index.quantizer,
-        np.concatenate([all_codes_np[live], codes_np[ov]]),
-        np.concatenate([row_list[live], list_ids_np[ov]]),
-        np.concatenate([ids_np[live], new_ids_np[ov]]),
-        block_size=index.block_size,
-    )
+    return churn.ingest_index(index, X_new, new_ids)
 
 
 def rotate_components(R: jax.Array, coarse, quantizer, pi: jax.Array,

@@ -143,15 +143,16 @@ def _search_core(index: IVFPQIndex, QR: jax.Array, lut, *,
     )
 
     lut, scales = split_lut_pack(lut)
+    # holes/tombstones (id < 0) are masked to −inf inside the tile body;
+    # adding the finite coarse term afterwards cannot resurrect them
     res_scores = kops.ivf_adc(
-        lut, index.codes, block_idx, block_query, scales,
+        lut, index.codes, block_idx, block_query, scales, index.ids,
         block_size=bs, use_kernel=use_kernel,
     ).reshape(b, nprobe, max_blocks, bs)
     scores = res_scores + cscores[:, :, None, None]            # + coarse term
 
     rows = blk[..., None] * bs + jnp.arange(bs)                # (b, p, B, bs)
     cand_ids = index.ids[rows]
-    scores = jnp.where(cand_ids >= 0, scores, NEG_INF)
     scores = sh.constrain(
         scores.reshape(b, -1), ("act_batch", "ivf_cand"), sh.IVF_RULES
     )
@@ -226,7 +227,8 @@ def flat_adc_prepared(index: IVFPQIndex, QR: jax.Array, lut, *,
     cache entry point, mirroring ``search_prepared``). ``lut`` is a LUT
     pack."""
     lut, scales = split_lut_pack(lut)
-    res = kops.adc_lookup(lut, index.codes, scales,
+    # holes/tombstones (id < 0) are masked to −inf inside the tile body
+    res = kops.adc_lookup(lut, index.codes, scales, index.ids,
                           use_kernel=use_kernel)  # (b, cap)
     # coarse term per row: row r belongs to list l iff offsets[l] ≤ r < offsets[l+1]
     row_list = jnp.searchsorted(
@@ -235,5 +237,4 @@ def flat_adc_prepared(index: IVFPQIndex, QR: jax.Array, lut, *,
     row_list = jnp.clip(row_list, 0, index.num_lists - 1).astype(jnp.int32)
     coarse = QR @ index.centroids.T                                 # (b, L)
     scores = res + coarse[:, row_list]
-    scores = jnp.where(index.ids[None, :] >= 0, scores, NEG_INF)
     return scores, index.ids

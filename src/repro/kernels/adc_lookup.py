@@ -6,6 +6,11 @@ out[b, n] = Σ_d LUT[b, d, c_nd]. CPU/GPU implementations use SIMD gathers
 one-hot-MXU body (adc_common.adc_tile_scores) — HBM traffic stays at
 O(N·Dp + N·b). Residual depth rides in the Dp column dimension.
 
+Tombstone masking lives INSIDE the tile body: with an ``ids`` operand the
+per-row id column rides the same HBM→VMEM pipeline as the codes and rows
+with id < 0 (holes/deletes) score −inf before the tile is written back —
+deletes are O(1) id writes that never reshape the scan.
+
 Grid (N/bn,): each step scores one item tile against all b queries.
 """
 from __future__ import annotations
@@ -31,11 +36,25 @@ def _kernel_q(codes_ref, lut_ref, scales_ref, out_ref):
     out_ref[...] = scores.astype(out_ref.dtype)
 
 
+def _kernel_m(codes_ref, lut_ref, ids_ref, out_ref):
+    # masked path: the (bn, 1) id column broadcasts over the query axis
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...])
+    scores = jnp.where(ids_ref[...] >= 0, scores, -jnp.inf)
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
+def _kernel_qm(codes_ref, lut_ref, scales_ref, ids_ref, out_ref):
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...], scales_ref[...])
+    scores = jnp.where(ids_ref[...] >= 0, scores, -jnp.inf)
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def adc_lookup(
     lut: jax.Array,
     codes: jax.Array,
     scales: jax.Array | None = None,
+    ids: jax.Array | None = None,
     *,
     block_n: int = 1024,
     interpret: bool = INTERPRET,
@@ -44,7 +63,8 @@ def adc_lookup(
 
     With ``scales`` (b, Dp, 2) the lut is an int8/uint8 pack from
     ``adc_common.quantize_luts``; the tile body dequantizes in VMEM so the
-    per-step LUT DMA moves 4× fewer bytes."""
+    per-step LUT DMA moves 4× fewer bytes. With ``ids`` (N,) the tombstone
+    mask applies in VMEM: rows with id < 0 come out −inf."""
     b, Dp, K = lut.shape
     N = codes.shape[0]
     bn = min(block_n, N)
@@ -54,11 +74,15 @@ def adc_lookup(
         pl.BlockSpec((b, Dp, K), lambda i: (0, 0, 0)),
     ]
     operands = [codes, lut]
-    kernel = _kernel
+    kernel = {(False, False): _kernel, (True, False): _kernel_q,
+              (False, True): _kernel_m, (True, True): _kernel_qm}[
+        (scales is not None, ids is not None)]
     if scales is not None:
         in_specs.append(pl.BlockSpec((b, Dp, 2), lambda i: (0, 0, 0)))
         operands.append(scales)
-        kernel = _kernel_q
+    if ids is not None:
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i: (i, 0)))
+        operands.append(ids.reshape(N, 1).astype(jnp.int32))
     # codes stay in their storage dtype (uint8 for K ≤ 256) all the way to
     # VMEM — the shared tile body widens per tile; widening here would
     # materialize a 4× int32 copy of the whole corpus per call.

@@ -16,7 +16,11 @@ one-hot expanded over K and contracted against the query's (D·K) LUT row on
 the MXU, exactly like the flat kernel.
 
 Grid: one step per selected (query, block) pair; out[s] = scores of the
-``block_size`` items of that tile (holes included — the caller masks ids<0).
+``block_size`` items of that tile. With an ``ids`` operand the tile's id row
+is DMA'd alongside its codes (steered by the same ``block_idx`` index_map)
+and rows with id < 0 — CSR padding holes and tombstoned deletes — score
+−inf inside the tile body, so a delete is one id write and masked rows can
+never surface downstream (the caller's added coarse term is finite).
 One LUT row per step keeps the schedule fully general (any query mix); batch
 efficiency comes from the ~100× fewer tiles the probe selects, not from
 sharing tiles between queries.
@@ -51,6 +55,25 @@ def _kernel_q(bi_ref, bq_ref, codes_ref, lut_ref, scales_ref, out_ref):
     out_ref[...] = scores.reshape(1, bn).astype(out_ref.dtype)
 
 
+def _kernel_m(bi_ref, bq_ref, codes_ref, lut_ref, ids_ref, out_ref):
+    del bi_ref, bq_ref  # consumed by the index_maps
+    bn = codes_ref.shape[0]
+    scores = adc_tile_scores(codes_ref[...], lut_ref[...]).reshape(1, bn)
+    # (1, bn) id tile of this codes block: holes/tombstones → −inf
+    scores = jnp.where(ids_ref[...] >= 0, scores, -jnp.inf)
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
+def _kernel_qm(bi_ref, bq_ref, codes_ref, lut_ref, scales_ref, ids_ref,
+               out_ref):
+    del bi_ref, bq_ref  # consumed by the index_maps
+    bn = codes_ref.shape[0]
+    scores = adc_tile_scores(
+        codes_ref[...], lut_ref[...], scales_ref[...]).reshape(1, bn)
+    scores = jnp.where(ids_ref[...] >= 0, scores, -jnp.inf)
+    out_ref[...] = scores.astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
 def ivf_adc(
     lut: jax.Array,
@@ -58,6 +81,7 @@ def ivf_adc(
     block_idx: jax.Array,
     block_query: jax.Array,
     scales: jax.Array | None = None,
+    ids: jax.Array | None = None,
     *,
     block_size: int = 128,
     interpret: bool = INTERPRET,
@@ -67,7 +91,8 @@ def ivf_adc(
 
     Residual depth rides in the Dp column dimension (Dp = M·D for RQ).
     With ``scales`` (b, Dp, 2) the lut is an int8/uint8 quantize_luts pack —
-    the per-step LUT-row DMA moves 4× fewer bytes."""
+    the per-step LUT-row DMA moves 4× fewer bytes. With ``ids`` (cap,) the
+    tombstone mask applies inside the tile body (rows with id < 0 → −inf)."""
     b, Dp, K = lut.shape
     S = block_idx.shape[0]
     in_specs = [
@@ -75,11 +100,20 @@ def ivf_adc(
         pl.BlockSpec((1, Dp, K), lambda i, bi, bq: (bq[i], 0, 0)),
     ]
     operands = [codes, lut]
-    kernel = _kernel
+    kernel = {(False, False): _kernel, (True, False): _kernel_q,
+              (False, True): _kernel_m, (True, True): _kernel_qm}[
+        (scales is not None, ids is not None)]
     if scales is not None:
         in_specs.append(pl.BlockSpec((1, Dp, 2), lambda i, bi, bq: (bq[i], 0, 0)))
         operands.append(scales)
-        kernel = _kernel_q
+    if ids is not None:
+        # the id column folded to (cap/bs, bs) tiles so the SAME block_idx
+        # prefetch steers its DMA as steers the codes tile
+        in_specs.append(pl.BlockSpec((1, block_size),
+                                     lambda i, bi, bq: (bi[i], 0)))
+        operands.append(
+            ids.reshape(codes.shape[0] // block_size, block_size)
+            .astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(S,),

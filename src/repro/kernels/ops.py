@@ -105,14 +105,15 @@ def pq_assign(X, codebooks, *, use_kernel: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
-def adc_lookup(lut, codes, scales=None, *, use_kernel: bool = True):
+def adc_lookup(lut, codes, scales=None, ids=None, *, use_kernel: bool = True):
     """Flat ADC scores (b, Dp, K) × (N, Dp) -> (b, N). Residual depth is the
     Dp column dimension (Dp = M·D for a depth-M RQ). With ``scales``
     (b, Dp, 2) the lut is an int8/uint8 ``quantize_luts`` pack, dequantized
-    in the tile body."""
+    in the tile body. With ``ids`` (N,) rows with id < 0 (holes/tombstones)
+    score −inf inside the tile body."""
     if use_kernel:
-        return _adc.adc_lookup(lut, codes, scales)
-    return ref.adc_lookup_ref(lut, codes, scales)
+        return _adc.adc_lookup(lut, codes, scales, ids)
+    return ref.adc_lookup_ref(lut, codes, scales, ids)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
@@ -126,16 +127,17 @@ def adc_batch(lut, codes, scales=None, *, use_kernel: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "use_kernel"))
-def ivf_adc(lut, codes, block_idx, block_query, scales=None, *,
+def ivf_adc(lut, codes, block_idx, block_query, scales=None, ids=None, *,
             block_size: int = 128, use_kernel: bool = True):
     """Selected-block IVF-ADC scan: (b, D, K) LUTs × (cap, D) CSR codes ×
     (S,) block schedule -> (S, block_size) scores. ``scales`` (b, D, 2):
-    quantized-LUT pack, the per-step LUT-row DMA shrinks 4×."""
+    quantized-LUT pack, the per-step LUT-row DMA shrinks 4×. ``ids`` (cap,):
+    tombstone mask — rows with id < 0 score −inf inside the tile body."""
     if use_kernel:
-        return _ivf.ivf_adc(lut, codes, block_idx, block_query, scales,
+        return _ivf.ivf_adc(lut, codes, block_idx, block_query, scales, ids,
                             block_size=block_size)
     return ref.ivf_adc_ref(lut, codes, block_idx, block_query,
-                           block_size=block_size, scales=scales)
+                           block_size=block_size, scales=scales, ids=ids)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

@@ -40,17 +40,24 @@ def pq_assign_ref(X: jax.Array, codebooks: jax.Array) -> jax.Array:
 
 
 def adc_lookup_ref(lut: jax.Array, codes: jax.Array,
-                   scales: jax.Array | None = None) -> jax.Array:
+                   scales: jax.Array | None = None,
+                   ids: jax.Array | None = None) -> jax.Array:
     """ADC score sum. lut (b, D, K), codes (N, D) -> (b, N).
 
     With ``scales`` (b, D, 2) the lut is an int8/uint8 pack from
     ``adc_common.quantize_luts`` and is dequantized first (semantic ground
-    truth for the in-VMEM dequant the kernels do)."""
+    truth for the in-VMEM dequant the kernels do). With ``ids`` (N,) the
+    tombstone mask is applied inside the scan: rows with id < 0 (holes and
+    deletes) score −inf, so a delete is an O(1) id write and never reshapes
+    the scored array."""
     if scales is not None:
         lut = dequantize_luts(lut, scales)
     D = lut.shape[1]
     g = lut[:, jnp.arange(D)[None, :], codes.astype(jnp.int32)]  # (b, N, D)
-    return jnp.sum(g, axis=-1)
+    out = jnp.sum(g, axis=-1)
+    if ids is not None:
+        out = jnp.where(ids[None, :] >= 0, out, -jnp.inf)
+    return out
 
 
 def fused_lut_ref(Q: jax.Array, qdelta: jax.Array, cb_flat: jax.Array,
@@ -105,13 +112,17 @@ def adc_batch_ref(lut: jax.Array, codes: jax.Array,
 
 def ivf_adc_ref(lut: jax.Array, codes: jax.Array, block_idx: jax.Array,
                 block_query: jax.Array, *, block_size: int = 128,
-                scales: jax.Array | None = None) -> jax.Array:
+                scales: jax.Array | None = None,
+                ids: jax.Array | None = None) -> jax.Array:
     """Selected-block ADC scan. lut (b, D, K), codes (cap, D),
     block_idx/block_query (S,) -> (S, block_size): the scores of tile
     ``block_idx[s]`` of the CSR codes array under query ``block_query[s]``'s
     LUT (gather formulation; the Pallas kernel must match).
 
-    ``scales`` (b, D, 2): quantized-LUT pack, dequantized up front."""
+    ``scales`` (b, D, 2): quantized-LUT pack, dequantized up front.
+    ``ids`` (cap,): tombstone mask — rows with id < 0 score −inf inside the
+    scan, so holes and deletes never surface however the caller post-
+    processes (the added coarse term is finite and cannot resurrect them)."""
     if scales is not None:
         lut = dequantize_luts(lut, scales)
     D = lut.shape[1]
@@ -124,7 +135,10 @@ def ivf_adc_ref(lut: jax.Array, codes: jax.Array, block_idx: jax.Array,
     g = jnp.take_along_axis(
         l_sel[:, None, :, :], c[..., None], axis=-1
     )[..., 0]                                                        # (S, bn, D)
-    return jnp.sum(g, axis=-1).astype(jnp.float32)
+    out = jnp.sum(g, axis=-1).astype(jnp.float32)
+    if ids is not None:
+        out = jnp.where(ids[rows] >= 0, out, -jnp.inf)
+    return out
 
 
 def embedding_bag_ref(table: jax.Array, indices: jax.Array, bag_ids: jax.Array,

@@ -451,4 +451,30 @@ class Engine:
             out["recall_probe"] = dict(k=self.probe.k,
                                        recall=self.probe.last,
                                        every=self.probe.every)
+        out["churn"] = self._churn_stats()
         return out
+
+    def _churn_stats(self) -> dict:
+        """The live-churn block of ``stats()``: read off this Engine's own
+        registry, where an attached ``churn.ChurnController`` records its
+        counters/gauges/spans. Always present (all-zero without a
+        controller) so dashboards have a stable schema; same two scopes as
+        above — counters are lifetime, ``flush_ms`` aggregates cover the
+        retained window described by the ``window`` dict."""
+        flush_ms = self.obs.distribution("churn.flush_ms")
+        summ = flush_ms.summary()
+        return dict(
+            staged_rows=self.obs.gauge("churn.staged_rows").value,
+            tombstoned_rows=self.obs.gauge("churn.tombstoned_rows").value,
+            staged=self.obs.counter("churn.staged").value,
+            flushed=self.obs.counter("churn.flushed").value,
+            tombstoned=self.obs.counter("churn.tombstoned").value,
+            flushes=self.obs.counter("churn.flushes").value,
+            compactions=self.obs.counter("churn.compactions").value,
+            rebalances=self.obs.counter("churn.rebalances").value,
+            grows=self.obs.counter("churn.grows").value,
+            flush_ms_p95=flush_ms.percentile(95.0),
+            window=dict(size=summ.get("window", 0),
+                        capacity=self.history,
+                        scope="flush_ms aggregates"),
+        )

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import rotations
+from repro.churn import buffer as churn_buffer
 from repro.index import maintain
 from repro.index import ivf as index_ivf
 from repro.index import search as index_search
@@ -77,6 +78,11 @@ class ADCState:
     rot: jax.Array | None = None     # (n, n) live rotation R₀·Δ (fused)
     wacc: jax.Array | None = None    # (n, n) within-subspace product W
     qdelta: jax.Array | None = None  # (n, n) query-side LUT transform Δ·Wᵀ
+    # live-churn append buffer (repro.churn): staged rows are scanned by a
+    # flat-ADC side pass and merged into every search below. None until
+    # ``churn.with_staging`` installs one; like fused-ness, its presence is
+    # pytree structure, so install it before the first search.
+    staging: churn_buffer.StagingBuffer | None = None
 
 
 def _fused_state(state: ADCState) -> ADCState:
@@ -194,7 +200,12 @@ def _flat_topk(state: ADCState, QR: jax.Array, lut,
         state.index, QR, lut, use_kernel=state.use_kernel)
     top_scores, top_ids = topk_padded(scores, cand_ids, k)
     scanned = jnp.full((QR.shape[0],), state.index.capacity, jnp.int32)
-    return SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+    res = SearchResult(scores=top_scores, ids=top_ids, scanned=scanned)
+    if state.staging is not None:
+        res = churn_buffer.merge_staged(
+            res, state.staging, QR, lut, state.index.centroids, k,
+            use_kernel=state.use_kernel)
+    return res
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ from typing import ClassVar
 import jax
 
 from repro import rotations
+from repro.churn import buffer as churn_buffer
 from repro.index import ivf as index_ivf
 from repro.index import search as index_search
 from repro.index.ivf import IVFPQIndex
@@ -83,9 +84,10 @@ class IVF:
 
     def search(self, state: ADCState, Q: jax.Array, *, k: int = 10,
                nprobe: int | None = None) -> SearchResult:
-        if state.qdelta is not None:
-            # fused mode: the LUT build must route through the accumulated
-            # query-side transform, so go via the prepared path
+        if state.qdelta is not None or state.staging is not None:
+            # fused mode (LUT build must route through the accumulated
+            # query-side transform) and live churn (staged rows merge after
+            # the main scan) both go via the prepared path
             QR = flat._rotate_queries(state, Q)
             return self.search_prepared(state, QR, flat._luts(state, QR),
                                         k=k, nprobe=nprobe)
@@ -108,10 +110,17 @@ class IVF:
     def search_prepared(self, state: ADCState, QR: jax.Array,
                         lut, *, k: int = 10,
                         nprobe: int | None = None) -> SearchResult:
-        return index_search.search_prepared(
+        res = index_search.search_prepared(
             state.index, QR, lut, nprobe=self.effective_nprobe(state, nprobe),
             k=k, max_blocks=self._max_blocks(state),
             use_kernel=state.use_kernel)
+        if state.staging is not None:
+            # live churn: staged rows ride a flat-ADC side pass over the
+            # same LUT pack and merge into the probed top-k
+            res = churn_buffer.merge_staged(
+                res, state.staging, QR, lut, state.index.centroids, k,
+                use_kernel=state.use_kernel)
+        return res
 
     def refresh(self, state: ADCState,
                 delta: rotations.RotationDelta) -> ADCState:

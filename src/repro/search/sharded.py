@@ -58,6 +58,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat, obs, quant, rotations
+from repro.churn import buffer as churn_buffer
 from repro.index import ivf as index_ivf
 from repro.index import maintain
 from repro.index import search as index_search
@@ -347,6 +348,10 @@ class ShardedADCState:
     rot: jax.Array | None = None     # fused refresh: live rotation R₀·Δ
     wacc: jax.Array | None = None    # fused refresh: within-subspace W
     qdelta: jax.Array | None = None  # fused refresh: query transform Δ·Wᵀ
+    # live-churn append buffers, one per shard stacked on the leading axis
+    # and partitioned like the CSR; each shard's side pass runs inside the
+    # shard_map local body (repro.churn). None until churn.with_staging.
+    staging: churn_buffer.StagingBuffer | None = None
 
     @property
     def num_shards(self) -> int:
@@ -448,14 +453,27 @@ def _local_index(R, coarse, quantizer, codes_s, ids_s, offs_s,
 def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut,
                   local_body):
     """Run ``local_body(local_index, QR, lut) -> SearchResult`` on every
-    shard and merge (body already emits a padded local top-k)."""
+    shard and merge (body already emits a padded local top-k). With a
+    staging buffer attached, each shard's staged rows ride its local
+    flat-ADC side pass and fold into its run before the cross-shard merge
+    — staged rows never cross devices."""
     axes = state.axes
+    stg = state.staging
+    extra = () if stg is None else (stg.codes, stg.ids, stg.lists)
+    extra_specs = () if stg is None else (_shard_spec(axes),) * 3
 
-    def local(R, coarse, quantizer, codes, ids, offs, QR, lut):
+    def local(R, coarse, quantizer, codes, ids, offs, QR, lut, *stg_parts):
         idx = _local_index(R, coarse, quantizer, codes, ids, offs,
                            state.block_size)
         with jax.named_scope("obs.shard_scan"):
             res = local_body(idx, QR, lut)
+            if stg_parts:
+                buf = churn_buffer.StagingBuffer(
+                    codes=stg_parts[0][0], ids=stg_parts[1][0],
+                    lists=stg_parts[2][0])
+                res = churn_buffer.merge_staged(
+                    res, buf, QR, lut, coarse.centroids,
+                    res.scores.shape[1], use_kernel=state.use_kernel)
         scores, out_ids = _merge_local_topk(
             res.scores, res.ids, res.scores.shape[1], axes)
         return SearchResult(scores=scores, ids=out_ids,
@@ -466,12 +484,12 @@ def _sharded_scan(state: ShardedADCState, QR: jax.Array, lut,
         in_specs=(P(), _replicated_specs(state.coarse),
                   _replicated_specs(state.quantizer),
                   _shard_spec(axes), _shard_spec(axes), _shard_spec(axes),
-                  P(), _replicated_specs(lut)),
+                  P(), _replicated_specs(lut), *extra_specs),
         out_specs=SearchResult(scores=P(), ids=P(), scanned=P()),
         check_vma=False,
     )
     return f(state.R, state.coarse, state.quantizer, state.codes, state.ids,
-             state.list_offsets, QR, lut)
+             state.list_offsets, QR, lut, *extra)
 
 
 def _flat_local_body(k: int, use_kernel: bool):

@@ -1,0 +1,380 @@
+"""repro.churn — streaming ingest, tombstone deletes, background compaction.
+
+Coverage demanded by ISSUE 8:
+  * staged adds are served by the very next query (flat side pass merged
+    into every backend's top-k) and flush/compact preserve scores exactly;
+  * hypothesis-driven interleavings of add/remove/refresh/flush/compact
+    hold score parity against a from-scratch rebuild of the live rows and
+    recall against the exact oracle after EVERY mutation sequence;
+  * ChurnController sequences stage→flush→compact between Engine batches
+    with zero recompiles and zero LUT invalidations in steady state;
+  * maintain.add/remove are DeprecationWarning shims over the churn
+    primitives (same results);
+  * Engine.stats()["churn"] reports the controller's counters/gauges with
+    PR 6's window-scoping conventions.
+"""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import churn, rotations, search
+from repro.data import synthetic
+from repro.index import ivf as index_ivf
+from repro.index import maintain
+
+DIM, SUB, K, L, BS = 16, 4, 16, 8, 8
+N, B = 1200, 8
+CFG = search.SearchConfig(num_lists=L, subspaces=SUB, codewords=K,
+                          block_size=BS, nprobe=L, tile_rows=256)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = synthetic.sift_like(jax.random.PRNGKey(0), N, DIM)
+    R = rotations.random_rotation(jax.random.PRNGKey(1), DIM)
+    Q = synthetic.sift_like(jax.random.PRNGKey(2), B, DIM)
+    return np.asarray(X), np.asarray(R), np.asarray(Q)
+
+
+def _fresh_ivf(data, **attach_kw):
+    X, R, _ = data
+    index = index_ivf.build(jax.random.PRNGKey(3), jnp.asarray(X),
+                            jnp.asarray(R), CFG.ivf_config(), train_size=512)
+    return search.IVF.attach(index, nprobe=L, **attach_kw)
+
+
+def _delta(R, key=0, lr=1e-3):
+    G = jax.random.normal(jax.random.PRNGKey(100 + key), (DIM, DIM))
+    learner = rotations.make("subspace_gcd", sub=DIM // SUB)
+    _, delta = learner.update(learner.init_from(jnp.asarray(R)), G, lr,
+                              jax.random.PRNGKey(key))
+    return delta
+
+
+def _result_map(res):
+    """Per-query {id: score} dicts — packing-order-independent comparison."""
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    return [{int(i): float(s) for i, s in zip(row_i, row_s) if i >= 0}
+            for row_i, row_s in zip(ids, scores)]
+
+
+def _assert_same_results(a, b, rtol=1e-5):
+    for da, db in zip(_result_map(a), _result_map(b)):
+        assert set(da) == set(db)
+        for i in da:
+            np.testing.assert_allclose(da[i], db[i], rtol=rtol, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Staging buffer: adds visible to the next query, flush/compact exact
+# ---------------------------------------------------------------------------
+
+
+def test_staged_adds_served_immediately(data):
+    X, R, Q = data
+    state = churn.with_staging(_fresh_ivf(data), 64)
+    Xn = np.asarray(synthetic.sift_like(jax.random.PRNGKey(7), 20, DIM))
+    state = churn.stage(state, jnp.asarray(Xn), np.arange(N, N + 20))
+    assert churn.staged_rows(state) == 20
+    searcher = search.make("ivf")
+    # the staged side pass serves EXACTLY what an eager pack would: compare
+    # against churn.ingest_index folding the same rows into the CSR
+    res = searcher.search(state, jnp.asarray(Xn), k=5, nprobe=L)
+    eager = search.IVF.attach(
+        churn.ingest_index(state.index, jnp.asarray(Xn),
+                           jnp.arange(N, N + 20, dtype=jnp.int32)),
+        nprobe=L)
+    want = searcher.search(eager, jnp.asarray(Xn), k=5, nprobe=L)
+    _assert_same_results(res, want)
+    # staged self-recall == eager-pack self-recall (ADC error is the
+    # quantizer's, never the staging lane's)
+    res10 = searcher.search(state, jnp.asarray(Xn), k=10, nprobe=L)
+    want10 = searcher.search(eager, jnp.asarray(Xn), k=10, nprobe=L)
+    hits = [N + i in np.asarray(res10.ids)[i] for i in range(20)]
+    want_hits = [N + i in np.asarray(want10.ids)[i] for i in range(20)]
+    assert hits == want_hits
+    # flat_adc serves the same staged rows through the same state
+    res_flat = search.make("flat_adc").search(state, jnp.asarray(Xn), k=5)
+    _assert_same_results(res, res_flat)
+
+    # flush folds them into CSR holes without moving any score
+    before = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+    state2, moved = churn.flush(state)
+    after = searcher.search(state2, jnp.asarray(Q), k=10, nprobe=L)
+    assert moved + churn.staged_rows(state2) == 20
+    _assert_same_results(before, after)
+
+
+def test_with_staging_rejects_exact_states(data):
+    X, R, _ = data
+    ex = search.make("exact").build(jax.random.PRNGKey(3), jnp.asarray(X),
+                                    jnp.asarray(R), CFG)
+    with pytest.raises(TypeError, match="append buffers"):
+        churn.with_staging(ex, 64)
+
+
+def test_stage_overflow_raises(data):
+    state = churn.with_staging(_fresh_ivf(data), 8)
+    rng = np.random.default_rng(8)
+    Xn = rng.standard_normal((9, DIM)).astype(np.float32)
+    with pytest.raises(ValueError, match="staging buffer full"):
+        churn.stage(state, jnp.asarray(Xn), np.arange(N, N + 9))
+    bare = _fresh_ivf(data)
+    with pytest.raises(ValueError, match="no staging buffer"):
+        churn.stage(bare, jnp.asarray(Xn[:1]), np.array([N]))
+
+
+def test_compact_is_bit_identical_to_fresh_rebuild(data):
+    """compact() carries codes — a from-scratch ivf.pack of the same live
+    rows (same quantizers) must serve the exact same {id: score} sets."""
+    X, R, Q = data
+    state = churn.with_staging(_fresh_ivf(data), 64)
+    rng = np.random.default_rng(9)
+    Xn = rng.standard_normal((30, DIM)).astype(np.float32)
+    state = churn.stage(state, jnp.asarray(Xn), np.arange(N, N + 30))
+    state = churn.tombstone(state, np.arange(0, 300))
+    searcher = search.make("ivf")
+    before = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+
+    compacted = churn.compact(state)
+    assert churn.staged_rows(compacted) == 0          # staged rows absorbed
+    after = searcher.search(compacted, jnp.asarray(Q), k=10, nprobe=L)
+    _assert_same_results(before, after)
+    # shape discipline: steady-state compaction preserved every shape
+    assert compacted.index.capacity == state.index.capacity
+    assert compacted.max_blocks == state.max_blocks
+
+    # fresh rebuild of the same live rows under the same quantizers
+    idx = compacted.index
+    live_X = np.concatenate([X[300:], Xn])
+    live_ids = np.concatenate([np.arange(300, N), np.arange(N, N + 30)])
+    XR = jnp.asarray(live_X) @ idx.R
+    list_ids, codes = index_ivf.encode(XR, idx.coarse, idx.quantizer)
+    rebuilt = index_ivf.pack(idx.R, idx.coarse, idx.quantizer, codes,
+                             list_ids, live_ids.astype(np.int32),
+                             block_size=BS)
+    want = search.make("ivf").search(
+        search.IVF.attach(rebuilt, nprobe=L), jnp.asarray(Q), k=10, nprobe=L)
+    _assert_same_results(after, want)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: interleaved mutations vs the exact oracle + fresh rebuild
+# ---------------------------------------------------------------------------
+
+
+@given(seq=st.lists(st.sampled_from(
+    ["add", "remove", "refresh", "flush", "compact"]),
+    min_size=1, max_size=7), seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_interleaved_mutations_hold_parity(seq, seed):
+    """Any interleaving of add/remove/refresh/flush/compact leaves the
+    churn state serving the same {id: score} sets as a from-scratch pack
+    of its live rows, and recall@10 ≥ the fresh rebuild's vs brute force
+    (the staged/flushed/compacted lanes never lose a live row)."""
+    rng = np.random.default_rng(seed)
+    Xh = rng.standard_normal((400, DIM)).astype(np.float32)
+    R = np.asarray(rotations.random_rotation(jax.random.PRNGKey(1), DIM))
+    Q = rng.standard_normal((4, DIM)).astype(np.float32)
+    cfg = CFG.ivf_config()
+    index = index_ivf.build(jax.random.PRNGKey(3), jnp.asarray(Xh),
+                            jnp.asarray(R), cfg, train_size=256)
+    searcher = search.make("ivf")
+    state = churn.with_staging(search.IVF.attach(index, nprobe=L), 64)
+
+    vecs = {i: Xh[i] for i in range(400)}     # the live-set model
+    next_id = 400
+    for op in seq:
+        if op == "add":
+            m = int(rng.integers(1, 12))
+            Xn = rng.standard_normal((m, DIM)).astype(np.float32)
+            ids = np.arange(next_id, next_id + m)
+            if churn.free_slots(state) < m:
+                state = churn.compact(state)
+            state = churn.stage(state, jnp.asarray(Xn), ids)
+            vecs.update({int(i): x for i, x in zip(ids, Xn)})
+            next_id += m
+        elif op == "remove" and len(vecs) > 20:
+            dead = rng.choice(sorted(vecs), size=10, replace=False)
+            state = churn.tombstone(state, dead.astype(np.int32))
+            for i in dead:
+                vecs.pop(int(i))
+        elif op == "refresh":
+            state = searcher.refresh(state, _delta(R, key=len(vecs)))
+        elif op == "flush":
+            state, _ = churn.flush(state)
+        elif op == "compact":
+            state = churn.compact(state)
+
+    got = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+    ids = np.asarray(got.ids)
+    assert set(ids[ids >= 0].ravel().tolist()) <= set(vecs)
+
+    # fresh rebuild of the live rows under the state's CURRENT quantizers
+    idx = state.index
+    live_ids = np.asarray(sorted(vecs), dtype=np.int32)
+    live_X = np.stack([vecs[int(i)] for i in live_ids])
+    XR = jnp.asarray(live_X) @ idx.R
+    list_ids, codes = index_ivf.encode(XR, idx.coarse, idx.quantizer)
+    rebuilt = index_ivf.pack(idx.R, idx.coarse, idx.quantizer, codes,
+                             list_ids, live_ids, block_size=BS)
+    want = searcher.search(search.IVF.attach(rebuilt, nprobe=L),
+                           jnp.asarray(Q), k=10, nprobe=L)
+    _assert_same_results(got, want, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ChurnController behind the Engine
+# ---------------------------------------------------------------------------
+
+
+def test_controller_zero_recompiles_in_steady_state(data):
+    X, R, Q = data
+    state = _fresh_ivf(data, fused_refresh=True)
+    engine = search.Engine(search.make("ivf"), state, k=10, nprobe=L,
+                           min_bucket=4)
+    ctl = churn.ChurnController(engine, staging_rows=64, flush_at=0.5,
+                                compact_at=0.1)
+    engine.search(jnp.asarray(Q))             # compile once, WITH staging
+    compiles = engine.stats()["compiles"]
+
+    rng = np.random.default_rng(11)
+    live = list(range(N))
+    next_id = N
+    for step in range(10):
+        add = rng.standard_normal((12, DIM)).astype(np.float32)
+        add_ids = np.arange(next_id, next_id + 12)
+        next_id += 12
+        dead = rng.choice(live, size=12, replace=False)
+        live = [i for i in live if i not in set(dead.tolist())]
+        live += add_ids.tolist()
+        ctl.step(add=jnp.asarray(add), add_ids=add_ids, remove_ids=dead)
+        engine.refresh(_delta(R, key=step))   # train-while-churning
+        res = engine.search(jnp.asarray(Q))
+        ids = np.asarray(res.ids)
+        assert set(ids[ids >= 0].ravel().tolist()) <= set(live)
+
+    st_ = engine.stats()
+    assert st_["compiles"] == compiles         # ZERO recompiles under churn
+    assert st_["lut_invalidations"] == 0       # fused refresh kept the LUTs
+    ch = st_["churn"]
+    assert ch["staged"] == 120 and ch["tombstoned"] == 120
+    assert ch["grows"] == 0
+    assert ch["flushes"] >= 1 and ch["compactions"] >= 1
+    assert ch["flush_ms_p95"] >= 0.0
+    assert ch["window"]["capacity"] == engine.history
+    # the side pass keeps the scan-work metric honest: staged rows counted
+    assert int(np.asarray(res.scanned)[0]) >= churn.staged_rows(ctl.state)
+
+
+def test_controller_grows_when_corpus_grows(data):
+    """Genuine growth (adds outpace deletes past capacity) recompiles ONCE
+    and is counted — it is not steady-state churn."""
+    X, R, Q = data
+    engine = search.Engine(search.make("ivf"), _fresh_ivf(data), k=10,
+                           nprobe=L, min_bucket=4)
+    ctl = churn.ChurnController(engine, staging_rows=32, flush_at=0.25,
+                                compact_at=0.05)
+    engine.search(jnp.asarray(Q))
+    rng = np.random.default_rng(12)
+    next_id = N
+    for _ in range(12):
+        add = rng.standard_normal((24, DIM)).astype(np.float32)
+        ctl.step(add=jnp.asarray(add),
+                 add_ids=np.arange(next_id, next_id + 24))
+        next_id += 24
+    assert churn.live_rows(ctl.state) == N + 12 * 24
+    assert engine.stats()["churn"]["grows"] >= 1
+
+
+def test_engine_stats_churn_block_schema(data):
+    """The churn block is always present (stable dashboard schema) and
+    all-zero without a controller."""
+    engine = search.Engine(search.make("ivf"), _fresh_ivf(data), k=10,
+                           nprobe=L)
+    ch = engine.stats()["churn"]
+    for key in ("staged", "flushed", "tombstoned", "flushes", "compactions",
+                "rebalances", "grows"):
+        assert ch[key] == 0
+    assert ch["staged_rows"] == 0 and ch["tombstoned_rows"] == 0
+    assert ch["window"]["scope"] == "flush_ms aggregates"
+
+
+# ---------------------------------------------------------------------------
+# maintain.add/remove deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_maintain_shims_warn_and_match(data):
+    X, R, _ = data
+    index = _fresh_ivf(data).index
+    rng = np.random.default_rng(13)
+    Xn = rng.standard_normal((16, DIM)).astype(np.float32)
+
+    with pytest.warns(DeprecationWarning, match="churn.tombstone"):
+        via_shim = maintain.remove(index, jnp.arange(50, dtype=jnp.int32))
+    direct = churn.tombstone_index(index, jnp.arange(50, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(via_shim.ids),
+                                  np.asarray(direct.ids))
+
+    with pytest.warns(DeprecationWarning, match="churn.ingest_index"):
+        added = maintain.add(via_shim, jnp.asarray(Xn),
+                             jnp.arange(N, N + 16, dtype=jnp.int32))
+    added_direct = churn.ingest_index(direct, jnp.asarray(Xn),
+                                      jnp.arange(N, N + 16, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(added.ids),
+                                  np.asarray(added_direct.ids))
+    np.testing.assert_array_equal(np.asarray(added.codes),
+                                  np.asarray(added_direct.codes))
+    assert int(added.num_items()) == N - 50 + 16
+
+
+# ---------------------------------------------------------------------------
+# Sharded states (S = 1 in-process; multi-device churn parity runs in the
+# churn benchmark's forced-host-device subprocess and in CI churn-smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_churn_roundtrip(data):
+    from repro.launch.mesh import make_data_mesh
+
+    X, R, Q = data
+    mesh = make_data_mesh()
+    index = _fresh_ivf(data).index
+    searcher = search.make("ivf_sharded")
+    state = searcher.attach(index, mesh=mesh, nprobe=L)
+    state = churn.with_staging(state, 32)
+    Xn = np.asarray(synthetic.sift_like(jax.random.PRNGKey(14), 10, DIM))
+    state = churn.stage(state, jnp.asarray(Xn), np.arange(N, N + 10))
+    res = searcher.search(state, jnp.asarray(Xn), k=10, nprobe=L)
+    staged_set = np.arange(N, N + 10)
+    assert np.isin(staged_set, np.asarray(res.ids)).mean() >= 0.5
+
+    state = churn.tombstone(state, np.arange(0, 100))
+    before = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+    assert not np.any(np.isin(np.asarray(before.ids), np.arange(100)))
+    state, _ = churn.flush(state)
+    state = churn.compact(state)
+    after = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+    _assert_same_results(before, after)
+    state = churn.shard_rebalance(state)
+    balanced = searcher.search(state, jnp.asarray(Q), k=10, nprobe=L)
+    _assert_same_results(before, balanced)
+
+
+def test_exact_stream_tombstone_updates_rows(data):
+    X, R, Q = data
+    state = search.make("exact_stream").build(
+        jax.random.PRNGKey(3), jnp.asarray(X), jnp.asarray(R), CFG)
+    rows_before = state.rows
+    state2 = churn.tombstone(state, np.arange(0, 200))
+    assert state2.rows == rows_before - 200
+    assert dataclasses.is_dataclass(state2)
+    res = search.make("exact_stream").search(state2, jnp.asarray(Q), k=10)
+    assert not np.any(np.isin(np.asarray(res.ids), np.arange(200)))

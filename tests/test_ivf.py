@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import churn
 from repro.core import givens, matching, pq
 from repro.data import synthetic
 from repro.index import ivf, maintain, search
@@ -155,7 +156,7 @@ def test_search_k_exceeding_candidate_pool_pads(index_and_data):
 def test_remove_tombstones_and_masks(index_and_data):
     index, _, Q = index_and_data
     dead = jnp.arange(50, dtype=jnp.int32)
-    idx2 = maintain.remove(index, dead)
+    idx2 = churn.tombstone_index(index, dead)
     assert int(index.num_items()) - int(idx2.num_items()) == 50
     res = search.search(idx2, Q, nprobe=L, k=10, use_kernel=False)
     assert not np.any(np.isin(np.asarray(res.ids), np.asarray(dead)))
@@ -163,10 +164,10 @@ def test_remove_tombstones_and_masks(index_and_data):
 
 def test_add_fills_holes_then_repacks(index_and_data):
     index, _, _ = index_and_data
-    idx2 = maintain.remove(index, jnp.arange(100, dtype=jnp.int32))
+    idx2 = churn.tombstone_index(index, jnp.arange(100, dtype=jnp.int32))
     Xn = synthetic.sift_like(jax.random.PRNGKey(13), 60, DIM)
     new_ids = jnp.arange(N, N + 60, dtype=jnp.int32)
-    idx3 = maintain.add(idx2, Xn, new_ids)
+    idx3 = churn.ingest_index(idx2, Xn, new_ids)
     assert int(idx3.num_items()) == N - 100 + 60
     # new items are findable and correctly encoded
     XR = Xn @ idx3.R
@@ -181,7 +182,8 @@ def test_add_fills_holes_then_repacks(index_and_data):
         )
     # force the overflow/repack path: add more than the holes can absorb
     Xbig = synthetic.sift_like(jax.random.PRNGKey(14), 500, DIM)
-    idx4 = maintain.add(idx3, Xbig, jnp.arange(10_000, 10_500, dtype=jnp.int32))
+    idx4 = churn.ingest_index(idx3, Xbig,
+                              jnp.arange(10_000, 10_500, dtype=jnp.int32))
     assert int(idx4.num_items()) == int(idx3.num_items()) + 500
     offsets = np.asarray(idx4.list_offsets)
     assert np.all(offsets % BS == 0)

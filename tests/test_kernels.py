@@ -245,3 +245,67 @@ def test_streaming_topk_ref_tile_order_invariance():
                                   np.sort(np.asarray(want_i)))
     np.testing.assert_allclose(np.sort(np.asarray(got_s)),
                                np.sort(np.asarray(want_s)))
+
+
+# ---------------------------------------------------------------------------
+# PR 8: in-kernel tombstone masks (repro.churn deletes)
+# ---------------------------------------------------------------------------
+
+
+@given(N=st.integers(10, 400), D=st.sampled_from([2, 8]),
+       K=st.sampled_from([4, 16]), b=st.integers(1, 4),
+       quantized=st.booleans())
+@settings(deadline=None, max_examples=12)
+def test_adc_lookup_mask_property(N, D, K, b, quantized):
+    """Masked flat scan: kernel == ref, masked rows exactly −inf, live rows
+    bit-equal to the unmasked scan (the mask must not perturb live scores)."""
+    key = jax.random.PRNGKey(N * 31 + D)
+    lut = jax.random.normal(key, (b, D, K))
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (N, D), 0, K)
+    ids = jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(key, 2), 0.3, (N,)),
+        -1, jnp.arange(N, dtype=jnp.int32))
+    scales = None
+    if quantized:
+        lut, scales = ops.quantize_luts(lut, "int8")
+    got = np.asarray(ops.adc_lookup(lut, codes, scales, ids))
+    want = np.asarray(ref.adc_lookup_ref(lut, codes, scales, ids))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    dead = np.asarray(ids) < 0
+    assert np.all(np.isneginf(got[:, dead]))
+    plain = np.asarray(ops.adc_lookup(lut, codes, scales))
+    np.testing.assert_array_equal(got[:, ~dead], plain[:, ~dead])
+
+
+@given(nblocks=st.integers(2, 16), bs=st.sampled_from([8, 16]),
+       b=st.integers(1, 4), quantized=st.booleans())
+@settings(deadline=None, max_examples=12)
+def test_ivf_adc_mask_property(nblocks, bs, b, quantized):
+    """Masked probed scan: the ids operand rides the same block_idx
+    prefetch as the codes tile — kernel == ref, masked rows −inf, live
+    rows bit-equal to the unmasked scan."""
+    D, K = 4, 16
+    key = jax.random.PRNGKey(nblocks * 17 + bs)
+    lut = jax.random.normal(key, (b, D, K))
+    cap = bs * nblocks
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (cap, D), 0, K)
+    ids = jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(key, 2), 0.3, (cap,)),
+        -1, jnp.arange(cap, dtype=jnp.int32))
+    block_idx = jnp.asarray(
+        np.random.RandomState(nblocks).permutation(nblocks), jnp.int32)
+    block_query = jnp.asarray(np.resize(np.arange(b), nblocks), jnp.int32)
+    scales = None
+    if quantized:
+        lut, scales = ops.quantize_luts(lut, "int8")
+    got = np.asarray(ops.ivf_adc(lut, codes, block_idx, block_query,
+                                 scales, ids, block_size=bs))
+    want = np.asarray(ref.ivf_adc_ref(lut, codes, block_idx, block_query,
+                                      block_size=bs, scales=scales, ids=ids))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    rows = (np.asarray(block_idx)[:, None] * bs + np.arange(bs))
+    dead = np.asarray(ids)[rows] < 0
+    assert np.all(np.isneginf(got[dead]))
+    plain = np.asarray(ops.ivf_adc(lut, codes, block_idx, block_query,
+                                   scales, block_size=bs))
+    np.testing.assert_array_equal(got[~dead], plain[~dead])

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import quant
+from repro import churn, quant
 from repro.core import givens
 from repro.data import synthetic
 from repro.index import ivf, maintain, search
@@ -228,9 +228,10 @@ def test_rq_index_refresh_rotation(rq_index):
 
 def test_rq_index_add_remove(rq_index):
     index, _, _ = rq_index
-    idx2 = maintain.remove(index, jnp.arange(40, dtype=jnp.int32))
+    idx2 = churn.tombstone_index(index, jnp.arange(40, dtype=jnp.int32))
     Xn = synthetic.sift_like(jax.random.PRNGKey(25), 30, 16)
-    idx3 = maintain.add(idx2, Xn, jnp.arange(2000, 2030, dtype=jnp.int32))
+    idx3 = churn.ingest_index(idx2, Xn,
+                              jnp.arange(2000, 2030, dtype=jnp.int32))
     assert int(idx3.num_items()) == 2000 - 40 + 30
     assert idx3.codes.shape[1] == index.codes.shape[1]
 

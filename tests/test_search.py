@@ -216,6 +216,31 @@ def test_padding_when_k_exceeds_candidates(backend):
         assert rec == 1.0
 
 
+@pytest.mark.parametrize("backend", search.names())
+def test_padding_when_deletes_shrink_pool_below_k(backend, data, states):
+    """Live deletes can shrink the pool below k on ANY backend: the result
+    must pad with (−1, −inf) past the live count — exactly the k > pool
+    contract — and never surface a tombstoned id."""
+    from repro import churn
+
+    _, _, Q, _ = data
+    k, live = 10, 6                       # tombstone down to live < k
+    dead = np.arange(N - live, dtype=np.int32)
+    state = churn.tombstone(states[backend], dead)
+    # full probe on the ivf pair so "every survivor served" is scan-
+    # complete (narrow probes may legitimately miss survivors' lists)
+    kw = {"nprobe": L} if backend.startswith("ivf") else {}
+    res = search.make(backend).search(state, Q, k=k, **kw)
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    assert ids.shape == (B, k)
+    assert not np.any(np.isin(ids, dead))              # no tombstone leaks
+    assert np.all((ids == -1) | (ids >= N - live))
+    assert np.all((ids == -1) == np.isneginf(scores))  # pad pairs up
+    assert np.all(np.isfinite(scores[ids >= 0]))
+    assert np.all((ids >= 0).sum(axis=1) == live)      # all survivors served
+
+
 def test_direct_adcstate_construction_searches_exactly(data, states):
     """ADCState(index=...) without attach must derive the probe window from
     the index, not silently truncate probed lists to one block."""
