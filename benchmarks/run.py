@@ -37,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2a,fig2bc,table1,fig4,ivf,churn,"
-                         "kernels,roofline")
+                         "serve,kernels,roofline")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--devices", type=int, default=1,
                     help="ivf/churn sections: run the sharded cells on N "
@@ -117,6 +117,19 @@ def main() -> None:
         else:
             res, checks = churn_bench.run(devices=args.devices)
         book("churn", res, checks)
+
+    if want("serve"):
+        # multi-tenant serving under Poisson load: continuous batching +
+        # SLO-adaptive nprobe vs fixed baselines, isolation pinned
+        from benchmarks import serve_load
+        if args.fast:
+            res, checks = serve_load.run(
+                n=8000, dim=32, lists=128, subspaces=16, codewords=64,
+                ladder=(2, 4, 16), requests=600, max_admit=8,
+                refresh_every=150)
+        else:
+            res, checks = serve_load.run()
+        book("serve", res, checks)
 
     if want("kernels"):
         from benchmarks import kernels_micro

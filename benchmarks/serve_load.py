@@ -1,0 +1,323 @@
+"""Open-loop Poisson load over the repro.serve front-end.
+
+The serving claim this benchmark pins (ISSUE 9 acceptance): under Poisson
+arrivals near the top rung's capacity, **SLO-adaptive nprobe beats every
+fixed-nprobe baseline of equal-or-better recall on p99 latency**, with
+zero steady-state recompiles and zero cross-namespace LUT invalidations.
+
+Method
+------
+Two namespaces (``alpha``, ``beta`` — separate corpora, fused-refresh IVF
+backends, alpha also carries a ChurnController for idle-slot maintenance
+ticks) are served by one Frontend per cell. Cells: one fixed-nprobe cell
+per ladder rung plus the adaptive cell; every cell replays the SAME
+arrival trace (seeded Poisson inter-arrivals over a finite query pool —
+pools model real traffic repeats and keep the LUT cache meaningful).
+
+Time is virtual (``serve.VirtualClock``): queueing dynamics unfold on the
+virtual axis while batch service times are REAL measured compute folded
+in via ``advance`` — deterministic arrivals, honest service. The arrival
+rate is calibrated from the adaptive cell's warmup-seeded latency model:
+``load`` × the top rung's full-bucket throughput, so "near capacity"
+means the same thing on any host.
+
+During the run alpha absorbs periodic **cross-subspace** rotation deltas
+(the kind fused refresh can NOT keep LUTs through) — alpha's cache
+invalidates, and the isolation check pins that beta's never does.
+
+Per cell, the first ``warm_frac`` of completed tickets are discarded
+(small host-side jits — LUT builds at novel miss widths — warm up there),
+then p50/p99/QPS/SLO-attainment/recall@10 come from the rest.
+
+CLI: ``--fast`` is the CI smoke preset; ``--out`` (or $REPRO_BENCH_DIR)
+writes schema-validated BENCH_serve.json; exit 1 on any failed check.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import numpy as np
+
+from repro import rotations, search, serve
+from repro.data import synthetic
+from repro.metrics import recall_at_k
+
+NAMESPACES = ("alpha", "beta")
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def _cross_subspace_delta(R, dim, step):
+    """A full-width GCD delta — deliberately NOT within-subspace, so the
+    fused backends must invalidate cached LUTs (isolation stressor)."""
+    G = jax.random.normal(jax.random.PRNGKey(7000 + step), (dim, dim))
+    learner = rotations.make("gcd")
+    _, delta = learner.update(learner.init_from(R), G, 1e-3,
+                              jax.random.PRNGKey(step))
+    return delta
+
+
+def _build_states(*, n, dim, lists, subspaces, codewords, nprobe, seed=0):
+    """One fused-refresh IVF state per namespace, plus its query pool and
+    exact ground truth (MIPS is rotation-invariant: truth from raw X/Q)."""
+    s = search.make("ivf")
+    cfg = search.SearchConfig(
+        num_lists=lists, subspaces=subspaces, codewords=codewords,
+        nprobe=nprobe, train_size=min(n, 16384), fused_refresh=True)
+    out = {}
+    for i, name in enumerate(NAMESPACES):
+        X = np.asarray(synthetic.sift_like(
+            jax.random.PRNGKey(seed + 10 * i), n, dim))
+        R = rotations.random_rotation(jax.random.PRNGKey(seed + 10 * i + 1),
+                                      dim)
+        state = s.build(jax.random.PRNGKey(seed + 10 * i + 2), X, R, cfg)
+        pool = np.asarray(synthetic.sift_like(
+            jax.random.PRNGKey(seed + 10 * i + 3), 64, dim))
+        truth = np.argsort(-(pool @ X.T), axis=1)[:, :10]
+        out[name] = dict(state=state, pool=pool, truth=truth)
+    return s, out
+
+
+def _make_frontend(searcher, corpora, *, ladder, fixed_nprobe, slo_ms,
+                   admission_ms, max_admit, clock):
+    """One cell's Frontend: adaptive (``ladder``) or fixed
+    (``fixed_nprobe`` as each Engine's default, no adaptation)."""
+    fe = serve.Frontend(slo_ms=slo_ms, clock=clock.now, advance=clock.advance,
+                        lut_budget_rows=4096)
+    for name in NAMESPACES:
+        c = corpora[name]
+        ekw = {"min_bucket": max_admit}
+        if fixed_nprobe is not None:
+            ekw["nprobe"] = fixed_nprobe
+        churn = {"staging_rows": 256} if name == "alpha" else None
+        fe.create_namespace(
+            name, searcher, c["state"], k=10,
+            nprobe_ladder=ladder if fixed_nprobe is None else None,
+            admission_ms=admission_ms, max_admit=max_admit, churn=churn,
+            warmup_queries=c["pool"][:4], engine_kwargs=ekw)
+    return fe
+
+
+def _arrival_trace(rng, *, requests, rate_qps, pool_size):
+    """(t, namespace, pool index) triples — one seeded trace replayed by
+    every cell so fixed vs adaptive see identical load."""
+    gaps = rng.exponential(1.0 / rate_qps, size=requests)
+    ts = np.cumsum(gaps)
+    names = rng.integers(0, len(NAMESPACES), size=requests)
+    qis = rng.integers(0, pool_size, size=requests)
+    return [(float(ts[i]), NAMESPACES[int(names[i])], int(qis[i]))
+            for i in range(requests)]
+
+
+def _run_cell(searcher, corpora, trace, *, ladder, fixed_nprobe, slo_ms,
+              admission_ms, max_admit, dim, refresh_every, warm_frac):
+    """Replay one trace through one Frontend configuration; returns the
+    cell's measured-phase metrics."""
+    clock = serve.VirtualClock()
+    fe = _make_frontend(searcher, corpora, ladder=ladder,
+                        fixed_nprobe=fixed_nprobe, slo_ms=slo_ms,
+                        admission_ms=admission_ms, max_admit=max_admit,
+                        clock=clock)
+    spaces = {name: fe.namespaces.get(name) for name in NAMESPACES}
+    warm_at = int(len(trace) * warm_frac)
+    measured_from = {name: None for name in NAMESPACES}  # compiles at cutoff
+
+    done, i, refreshes = [], 0, 0
+    while i < len(trace) or fe.next_deadline() is not None:
+        nd = fe.next_deadline()
+        na = trace[i][0] if i < len(trace) else None
+        if nd is None and na is None:
+            break
+        clock.set(min(t for t in (nd, na) if t is not None))
+        while i < len(trace) and trace[i][0] <= clock.now():
+            t_arr, name, qi = trace[i]
+            fe.submit(name, corpora[name]["pool"][qi], arrival=t_arr)
+            i += 1
+            if i == warm_at:
+                for nm, ns in spaces.items():
+                    measured_from[nm] = ns.engine.stats()["compiles"]
+            if refresh_every and i % refresh_every == 0:
+                # between-batch rotation absorption on alpha only
+                eng = spaces["alpha"].engine
+                eng.refresh(_cross_subspace_delta(
+                    eng.state.index.R, dim, step=i))
+                refreshes += 1
+        done.extend(fe.poll())
+    done.extend(fe.drain())
+    assert len(done) == len(trace), (len(done), len(trace))
+
+    done.sort(key=lambda t: t.arrival)
+    meas = done[warm_at:]
+    lats = [t.latency_ms for t in meas]
+    rung_mix = {}
+    for t in meas:
+        rung_mix[t.nprobe_served] = rung_mix.get(t.nprobe_served, 0) + 1
+    recs = [float(recall_at_k(
+        np.asarray(t.result.ids)[None, :],
+        corpora[t.namespace]["truth"][_pool_index(t, corpora)][None, :]))
+        for t in meas]
+    span_s = max(t.completed for t in meas) - min(t.arrival for t in meas)
+    stats = fe.stats()
+    steady_recompiles = sum(
+        stats["namespaces"][nm]["compiles"] - measured_from[nm]
+        for nm in NAMESPACES if measured_from[nm] is not None)
+    return dict(
+        requests=len(meas),
+        qps=len(meas) / span_s if span_s > 0 else 0.0,
+        p50_ms=_percentile(lats, 50), p99_ms=_percentile(lats, 99),
+        slo_attainment=float(np.mean([t.latency_ms <= t.slo_ms
+                                      for t in meas])),
+        recall=float(np.mean(recs)),
+        rung_mix={str(r): c for r, c in sorted(rung_mix.items())},
+        sheds=stats["sheds"], flushes=stats["flushes"],
+        maintenance_ticks=stats["maintenance_ticks"],
+        steady_recompiles=steady_recompiles,
+        alpha_refreshes=refreshes,
+        alpha_lut_invalidations=(
+            stats["namespaces"]["alpha"]["lut_invalidations"]),
+        beta_lut_invalidations=(
+            stats["namespaces"]["beta"]["lut_invalidations"]),
+        beta_lut_epoch=stats["namespaces"]["beta"]["lut_epoch"],
+        lut_evictions={nm: stats["namespaces"][nm]["lut_evictions"]
+                       for nm in NAMESPACES},
+    )
+
+
+def _pool_index(ticket, corpora):
+    """Recover which pool row a ticket served (pools are small; row bytes
+    are unique per pool with overwhelming probability)."""
+    pool = corpora[ticket.namespace]["pool"]
+    hit = np.flatnonzero((pool == ticket.query).all(axis=1))
+    return int(hit[0])
+
+
+def run(*, n=50_000, dim=64, lists=256, subspaces=32, codewords=64,
+        ladder=(2, 8, 32), requests=1500, load=1.1, slo_factor=4.0,
+        admission_ms=2.0, max_admit=16, refresh_every=200, warm_frac=0.3,
+        verbose=True):
+    """All cells on one trace; returns (results, checks)."""
+    out = print if verbose else (lambda *a, **k: None)
+    ladder = tuple(sorted(ladder))
+    searcher, corpora = _build_states(
+        n=n, dim=dim, lists=lists, subspaces=subspaces,
+        codewords=codewords, nprobe=ladder[-1])
+    out(f"# built {len(NAMESPACES)} fused ivf namespaces: N={n} "
+        f"L={lists} D={subspaces} K={codewords} ladder={ladder}")
+
+    # calibrate the arrival rate from a throwaway adaptive frontend's
+    # warmup-seeded latency model: load × top-rung full-bucket throughput
+    cal_clock = serve.VirtualClock()
+    cal = _make_frontend(searcher, corpora, ladder=ladder, fixed_nprobe=None,
+                         slo_ms=1e9, admission_ms=admission_ms,
+                         max_admit=max_admit, clock=cal_clock)
+    top_ms = max(cal.namespaces.get(nm).slo.predict_ms(max_admit, ladder[-1])
+                 for nm in NAMESPACES)
+    rate_qps = load * max_admit / (top_ms * 1e-3)
+    slo_ms = slo_factor * top_ms
+    out(f"# calibration: top-rung bucket {top_ms:.2f} ms -> "
+        f"rate {rate_qps:.0f} q/s (load {load}), slo {slo_ms:.1f} ms")
+
+    trace = _arrival_trace(np.random.default_rng(42), requests=requests,
+                           rate_qps=rate_qps,
+                           pool_size=corpora["alpha"]["pool"].shape[0])
+    kw = dict(slo_ms=slo_ms, admission_ms=admission_ms,
+              max_admit=max_admit, dim=dim, refresh_every=refresh_every,
+              warm_frac=warm_frac)
+    cells = {}
+    for rung in ladder:
+        cells[f"fixed_np{rung}"] = _run_cell(
+            searcher, corpora, trace, ladder=ladder, fixed_nprobe=rung, **kw)
+        c = cells[f"fixed_np{rung}"]
+        out(f"# [serve] fixed np={rung:>3}: p50 {c['p50_ms']:7.2f}  "
+            f"p99 {c['p99_ms']:8.2f}  recall {c['recall']:.3f}  "
+            f"slo-att {c['slo_attainment']:.3f}  qps {c['qps']:.0f}")
+    cells["adaptive"] = _run_cell(
+        searcher, corpora, trace, ladder=ladder, fixed_nprobe=None, **kw)
+    a = cells["adaptive"]
+    out(f"# [serve] adaptive    : p50 {a['p50_ms']:7.2f}  "
+        f"p99 {a['p99_ms']:8.2f}  recall {a['recall']:.3f}  "
+        f"slo-att {a['slo_attainment']:.3f}  qps {a['qps']:.0f}  "
+        f"sheds {a['sheds']}/{a['flushes']}  mix {a['rung_mix']}")
+
+    # comparable fixed baselines: equal-or-better recall (±0.01)
+    comparable = {name: c for name, c in cells.items()
+                  if name != "adaptive" and c["recall"] >= a["recall"] - 0.01}
+    best_fixed_p99 = (min(c["p99_ms"] for c in comparable.values())
+                      if comparable else float("inf"))
+    out(f"# [serve] comparable fixed cells at recall >= "
+        f"{a['recall'] - 0.01:.3f}: {sorted(comparable)} "
+        f"(best p99 {best_fixed_p99:.2f} ms vs adaptive {a['p99_ms']:.2f})")
+
+    results = dict(
+        rate_qps=rate_qps, slo_ms=slo_ms, ladder=list(ladder),
+        requests=requests, cells=cells,
+        comparable_fixed=sorted(comparable),
+        best_fixed_p99_ms=best_fixed_p99,
+    )
+    checks = dict(
+        adaptive_beats_best_fixed_p99_at_equal_recall=(
+            bool(comparable) and a["p99_ms"] < best_fixed_p99),
+        zero_steady_state_recompiles=all(
+            c["steady_recompiles"] == 0 for c in cells.values()),
+        zero_cross_namespace_lut_invalidations=all(
+            c["beta_lut_invalidations"] == 0 and c["beta_lut_epoch"] == 0
+            for c in cells.values()),
+        refresh_isolation_exercised=(
+            a["alpha_refreshes"] >= 1 and a["alpha_lut_invalidations"] >= 1),
+        adaptive_sheds_under_load=a["sheds"] >= 1,
+        maintenance_ticks_in_idle_slots=a["maintenance_ticks"] >= 1,
+    )
+    return results, checks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--lists", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=1500)
+    ap.add_argument("--load", type=float, default=1.1,
+                    help="arrival rate as a fraction of top-rung capacity "
+                         "(>1 = the top rung alone cannot keep up)")
+    ap.add_argument("--slo-factor", type=float, default=4.0,
+                    help="per-request SLO as a multiple of the top rung's "
+                         "full-bucket service time")
+    ap.add_argument("--fast", action="store_true",
+                    help="small corpus / short trace (CI serve-smoke scale)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH_serve.json destination dir (default "
+                         "$REPRO_BENCH_DIR; unset → print only)")
+    args = ap.parse_args()
+    kw = dict(n=args.n, dim=args.dim, lists=args.lists,
+              requests=args.requests, load=args.load,
+              slo_factor=args.slo_factor)
+    if args.fast:
+        kw = dict(n=8000, dim=32, lists=128, subspaces=16, codewords=64,
+                  ladder=(2, 4, 16), requests=600, load=args.load,
+                  slo_factor=args.slo_factor, max_admit=8,
+                  refresh_every=150)
+    res, checks = run(**kw)
+
+    out_dir = args.out or os.environ.get("REPRO_BENCH_DIR")
+    if out_dir:
+        from repro import obs
+        path = obs.write_bench(out_dir, "serve", sections={"serve": res},
+                               checks=checks, config=vars(args))
+        errs = obs.validate_bench(path)
+        print(f"# BENCH written: {path} "
+              f"({'schema-valid' if not errs else f'INVALID: {errs}'})")
+        if errs:
+            sys.exit(1)
+    if not all(checks.values()):
+        print("# FAILED checks:",
+              sorted(k for k, v in checks.items() if not v))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -167,7 +167,10 @@ def topk_merge(scores, ids, k: int):
     (b, k) global top-k under the −inf/−1 padding contract. The reduce step
     of the sharded searcher family (search/sharded.py): each shard scans
     its local CSR rows, emits a padded local top-k, and the all_gather'd
-    (b, shards·k) runs merge here. Pure top_k — XLA's sort is already
-    optimal at these widths, so there is no Pallas variant (the ref IS the
+    (b, shards·k) runs merge here. Ties are deterministic — equal scores
+    rank by ascending id (lexicographic two-key sort), so results are
+    identical regardless of shard/tile order or which serve batch a
+    request was grouped into. Pure XLA sort — already optimal at these
+    widths, so there is no Pallas variant (the ref IS the
     implementation)."""
     return ref.topk_merge_ref(scores, ids, k)

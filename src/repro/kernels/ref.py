@@ -161,11 +161,21 @@ def topk_merge_ref(scores: jax.Array, ids: jax.Array,
     candidate pool carry score −inf, and every −inf slot gets id −1 so
     padding survives the merge. Returns (b, k), padded the same way when
     k > C.
+
+    Tie-breaking is deterministic: equal scores rank by ascending id
+    (a lexicographic two-key sort, not ``top_k``'s positional tie-break),
+    so the merged top-k is a pure function of the candidate SET — invariant
+    to shard order, tile order, and whichever batch composition a serving
+    request landed in (the repro.serve determinism contract).
     """
     b, C = scores.shape
     kk = min(k, C)
-    top_scores, pos = jax.lax.top_k(scores, kk)
-    top_ids = jnp.take_along_axis(ids, pos, axis=1)
+    # ascending (−score, id): equal scores break to the smaller id. −inf
+    # slots sort last regardless of id and are re-padded to −1 below.
+    neg_sorted, top_ids = jax.lax.sort(
+        (-scores, ids.astype(jnp.int32)), dimension=1, num_keys=2)
+    top_scores = -neg_sorted[:, :kk]
+    top_ids = top_ids[:, :kk]
     top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, -1)
     if kk < k:
         top_scores = jnp.pad(top_scores, ((0, 0), (0, k - kk)),

@@ -32,6 +32,14 @@ the hot path shape-stable:
     buffers are donated to the executable, so serving steady-state holds
     one in-flight copy instead of two (donation is skipped on CPU, where
     XLA would warn and ignore it).
+  * **submit/collect split** — ``submit`` runs everything up to and
+    including launching the compiled executable and returns WITHOUT
+    blocking (JAX dispatch is async); ``collect`` blocks on the result and
+    records the request metrics. ``search`` is exactly
+    ``collect(submit(...))`` plus chunking, so direct callers see no
+    change — but a serving loop (``repro.serve``) can overlap host-side
+    admission/batching for the next bucket with device execution of the
+    current one.
   * **serving observability** — every request lands in a private, always-on
     ``repro.obs.Registry`` (latency distribution with p50/p95/p99, scanned
     rows, bucket pad waste, LUT hit rate, compile counts) aggregated by
@@ -55,7 +63,8 @@ from __future__ import annotations
 
 import collections
 import inspect
-from typing import Any
+import time
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +106,22 @@ def _pad_lut(lut, pad: int):
     if isinstance(lut, np.ndarray):
         return jnp.asarray(np.pad(lut, pads))
     return jnp.pad(lut, pads)
+
+
+class Pending(NamedTuple):
+    """An in-flight ``Engine.submit`` — device work dispatched, not yet
+    blocked on. Pass to ``Engine.collect`` exactly once; the request is
+    only counted (latency, LUT hits, events) at collect time."""
+
+    res: SearchResult          # sliced back to the request's b rows
+    batch: int
+    bucket: int
+    k: int
+    nprobe: int | None
+    lut_hits: int
+    lut_misses: int
+    t0: float                  # perf_counter at submit — latency anchor
+    compiled_before: int | float
 
 
 class Engine:
@@ -167,7 +192,8 @@ class Engine:
         self._counters = {
             name: self.obs.counter(f"engine.{name}")
             for name in ("requests", "queries", "compiles", "refreshes",
-                         "lut_hits", "lut_misses", "lut_invalidations")}
+                         "lut_hits", "lut_misses", "lut_invalidations",
+                         "lut_evictions")}
         self.probe = probe
         self._in_probe = False
 
@@ -285,25 +311,29 @@ class Engine:
         return rows, hits, misses
 
     def _evict(self) -> None:
+        """Trim to the capacity cap (LRU-first), counting every eviction —
+        ``lut_evictions`` is how a multi-tenant front-end sees one hot
+        namespace churning its budget (repro.serve sizes each tenant's cap
+        so that churn can never spill into another tenant's cache)."""
         while len(self._luts) > self.lut_cache_rows:
             self._luts.popitem(last=False)
+            self._counters["lut_evictions"].inc()
 
     # -- serving -----------------------------------------------------------
-    def search(self, Q: jax.Array, *, k: int | None = None,
-               nprobe: int | None = None) -> SearchResult:
-        """Serve one (b, n) query batch (any b ≥ 1) at top-``k``."""
+    def submit(self, Q: jax.Array, *, k: int | None = None,
+               nprobe: int | None = None) -> Pending:
+        """Dispatch one (b, n) batch (1 ≤ b ≤ ``max_bucket``) WITHOUT
+        blocking: bucketize, resolve LUTs, launch the compiled executable,
+        and return a ``Pending`` the caller hands to ``collect``. Device
+        work proceeds asynchronously in the meantime, so a serving loop can
+        keep admitting/batching the next bucket while this one runs."""
         b = Q.shape[0]
         if b == 0:
             raise ValueError("empty query batch")
-        if b > self.max_bucket:  # chunk oversized requests
-            parts = [self.search(Q[i:i + self.max_bucket], k=k,
-                                 nprobe=nprobe)
-                     for i in range(0, b, self.max_bucket)]
-            return SearchResult(
-                scores=jnp.concatenate([p.scores for p in parts]),
-                ids=jnp.concatenate([p.ids for p in parts]),
-                scanned=jnp.concatenate([p.scanned for p in parts]))
-
+        if b > self.max_bucket:
+            raise ValueError(
+                f"submit is bounded by max_bucket={self.max_bucket} "
+                f"(got {b}); search() chunks oversized batches")
         k = self.k if k is None else k
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
@@ -311,45 +341,61 @@ class Engine:
         bucket = self._bucket(b)
         pad = bucket - b
         compiled_before = self._counters["compiles"].value
+        t0 = time.perf_counter()
 
         lut_hits = lut_misses = 0
-        with self.obs.span("engine.search") as sp:
-            if self._prepared_ok:
-                # the LUT cache keys on raw query bytes — the one place the
-                # batch must visit the host (dtype preserved, matching the
-                # plain path and direct searcher calls); rotation reads the
-                # original array, so a device-resident Q is not re-uploaded
-                Qnp = np.asarray(Q)
-                QR = self.searcher.rotate_queries(self.state, Q)
-                lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
-                QR = jnp.pad(QR, ((0, pad), (0, 0)))
-                # pack-aware: cached host rows and all-miss device packs
-                # both pad up to the bucket and land on device
-                lut = _pad_lut(lut, pad)
-                res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
-            else:
-                # plain path: never leaves the device
-                Qp = jnp.pad(jnp.asarray(Q), ((0, pad), (0, 0)))
-                res = self._plain_fn(bucket, k, npb)(self.state, Qp)
+        if self._prepared_ok:
+            # the LUT cache keys on raw query bytes — the one place the
+            # batch must visit the host (dtype preserved, matching the
+            # plain path and direct searcher calls); rotation reads the
+            # original array, so a device-resident Q is not re-uploaded
+            Qnp = np.asarray(Q)
+            QR = self.searcher.rotate_queries(self.state, Q)
+            lut, lut_hits, lut_misses = self._gather_luts(Qnp, QR)
+            QR = jnp.pad(QR, ((0, pad), (0, 0)))
+            # pack-aware: cached host rows and all-miss device packs
+            # both pad up to the bucket and land on device
+            lut = _pad_lut(lut, pad)
+            res = self._prepared_fn(bucket, k, npb)(self.state, QR, lut)
+        else:
+            # plain path: never leaves the device
+            Qp = jnp.pad(jnp.asarray(Q), ((0, pad), (0, 0)))
+            res = self._plain_fn(bucket, k, npb)(self.state, Qp)
 
-            res = SearchResult(scores=res.scores[:b], ids=res.ids[:b],
-                               scanned=res.scanned[:b])
-            sp.sync(res)  # latency includes the device work, as before
-        latency_ms = sp.elapsed_ms
+        res = SearchResult(scores=res.scores[:b], ids=res.ids[:b],
+                           scanned=res.scanned[:b])
+        return Pending(res=res, batch=b, bucket=bucket, k=k, nprobe=npb,
+                       lut_hits=lut_hits, lut_misses=lut_misses, t0=t0,
+                       compiled_before=compiled_before)
+
+    def collect(self, pending: Pending) -> SearchResult:
+        """Block on a ``submit``'s device work and account the request:
+        latency covers submit → result-ready (exactly what the fused
+        ``search`` span used to measure), LUT hits/misses and the request
+        event land here. Call once per Pending."""
+        res = pending.res
+        leaves = [x for x in jax.tree_util.tree_leaves(res)
+                  if not isinstance(x, jax.core.Tracer)]
+        if leaves:
+            jax.block_until_ready(leaves)
+        latency_ms = (time.perf_counter() - pending.t0) * 1e3
 
         scanned_rows = float(np.mean(np.asarray(res.scanned)))
         self._counters["requests"].inc()
-        self._counters["queries"].inc(b)
-        self._counters["lut_hits"].inc(lut_hits)
-        self._counters["lut_misses"].inc(lut_misses)
+        self._counters["queries"].inc(pending.batch)
+        self._counters["lut_hits"].inc(pending.lut_hits)
+        self._counters["lut_misses"].inc(pending.lut_misses)
         self._latency.observe(latency_ms)
         self._scanned.observe(scanned_rows)
-        self._pad_waste.observe(pad / bucket)
+        self._pad_waste.observe(
+            (pending.bucket - pending.batch) / pending.bucket)
         self.obs.event(
-            "request", batch=b, bucket=bucket, k=k, nprobe=npb,
-            latency_ms=latency_ms, scanned_rows=scanned_rows,
-            lut_hits=lut_hits, lut_misses=lut_misses,
-            compiled=self._counters["compiles"].value > compiled_before)
+            "request", batch=pending.batch, bucket=pending.bucket,
+            k=pending.k, nprobe=pending.nprobe, latency_ms=latency_ms,
+            scanned_rows=scanned_rows, lut_hits=pending.lut_hits,
+            lut_misses=pending.lut_misses,
+            compiled=(self._counters["compiles"].value
+                      > pending.compiled_before))
 
         if self.probe is not None and not self._in_probe:
             self._in_probe = True
@@ -359,6 +405,23 @@ class Engine:
             finally:
                 self._in_probe = False
         return res
+
+    def search(self, Q: jax.Array, *, k: int | None = None,
+               nprobe: int | None = None) -> SearchResult:
+        """Serve one (b, n) query batch (any b ≥ 1) at top-``k`` —
+        ``collect(submit(...))``, chunking batches beyond ``max_bucket``."""
+        b = Q.shape[0]
+        if b == 0:
+            raise ValueError("empty query batch")
+        if b > self.max_bucket:  # chunk oversized requests
+            parts = [self.collect(self.submit(Q[i:i + self.max_bucket],
+                                              k=k, nprobe=nprobe))
+                     for i in range(0, b, self.max_bucket)]
+            return SearchResult(
+                scores=jnp.concatenate([p.scores for p in parts]),
+                ids=jnp.concatenate([p.ids for p in parts]),
+                scanned=jnp.concatenate([p.scanned for p in parts]))
+        return self.collect(self.submit(Q, k=k, nprobe=nprobe))
 
     # -- live rotation refresh --------------------------------------------
     def refresh(self, delta: rotations.RotationDelta) -> None:
@@ -431,6 +494,7 @@ class Engine:
             lut_misses=c["lut_misses"],
             lut_hit_rate=(c["lut_hits"] / looked if looked else 0.0),
             lut_cached_rows=len(self._luts),
+            lut_evictions=c["lut_evictions"],
             lut_invalidations=c["lut_invalidations"],
             lut_epoch=self._epoch,
             window=dict(size=lat.get("window", 0),

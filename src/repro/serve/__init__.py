@@ -1,0 +1,40 @@
+"""repro.serve — async multi-tenant serving front-end over search.Engine.
+
+The Engine (search/engine.py) solved the single-index problems: shape
+bucketing, compile caching, LUT caching, live refresh. This package adds
+the request-scheduling layer production serving actually runs on:
+
+  * ``queue``      — continuous-batching admission (deadline-driven
+                     buckets, no fixed-batch stalls), plus the
+                     ``VirtualClock`` used by deterministic simulations;
+  * ``slo``        — per-request latency SLOs driving adaptive nprobe
+                     from a fixed pre-compiled rung ladder;
+  * ``namespaces`` — many named indexes behind one front-end, isolated
+                     caches, one shared host LUT budget;
+  * ``frontend``   — the loop tying them together: submit → poll →
+                     completed tickets, with churn maintenance ticked
+                     into idle slots.
+
+Minimal serving session::
+
+    from repro import serve
+    fe = serve.Frontend(slo_ms=50.0)
+    fe.create_namespace("tenant-a", "ivf", state, nprobe_ladder=(4, 16, 32),
+                        warmup_queries=Qtrain[:8])
+    t = fe.submit("tenant-a", q_row)
+    while not t.done:
+        fe.poll()
+    print(t.result.ids, t.latency_ms, t.nprobe_served)
+
+Load-generation and the SLO-adaptive-vs-fixed comparison live in
+benchmarks/serve_load.py.
+"""
+from repro.serve.frontend import Frontend
+from repro.serve.namespaces import Namespace, NamespaceSet
+from repro.serve.queue import BatchQueue, Ticket, VirtualClock
+from repro.serve.slo import SLOController
+
+__all__ = [
+    "Frontend", "Namespace", "NamespaceSet", "BatchQueue", "Ticket",
+    "VirtualClock", "SLOController",
+]

@@ -1,0 +1,121 @@
+"""Multi-tenant namespaces: many named indexes behind one front-end.
+
+A namespace is one tenant's complete serving unit — its own Engine (any
+registry backend), its own admission queue, its own SLO controller, and
+optionally its own ChurnController. Tenants share nothing that could
+couple their tail latencies EXCEPT what they must share:
+
+  * the device mesh (batches from different namespaces interleave on it —
+    that is the point of a front-end);
+  * the host LUT budget: ``NamespaceSet`` owns one global
+    ``lut_budget_rows`` pot and splits it evenly across tenants, writing
+    each Engine's ``lut_cache_rows`` on every create/drop and trimming
+    immediately. A hot tenant hammering distinct queries evicts only its
+    OWN cache (visible in its ``lut_evictions`` counter) — it can never
+    push another tenant's warm LUTs out.
+
+Isolation invariants (pinned in tests/test_serve.py):
+
+  * refresh on tenant A never touches tenant B's LUT cache or epoch —
+    each Engine has a private ``_luts``/``_epoch``;
+  * compile caches are per-Engine, so A's shapes never evict B's
+    executables;
+  * obs registries are per-Engine (each Engine owns a private always-on
+    Registry); the front-end aggregates views, never merges state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.search.engine import Engine
+from repro.serve.queue import BatchQueue
+from repro.serve.slo import SLOController
+
+
+@dataclasses.dataclass
+class Namespace:
+    """One tenant: engine + queue + nprobe controller (+ churn hook)."""
+
+    name: str
+    engine: Engine
+    queue: BatchQueue
+    slo: SLOController
+    churn: Any | None = None          # ChurnController, when churn-enabled
+    slo_ms: float = 50.0              # default per-request latency budget
+    adaptive: bool = False            # SLO controller picks nprobe rungs
+    warm_compiles: int = 0            # executables compiled by warmup
+
+    def maintenance_tick(self) -> bool:
+        """Run one idle-slot churn step (threshold-driven flush / compact /
+        rebalance — a no-op when nothing crossed a threshold). Returns
+        whether this namespace had a controller to tick."""
+        if self.churn is None:
+            return False
+        self.churn.step()
+        return True
+
+    def stats(self) -> dict:
+        s = self.engine.stats()
+        s["queue_depth"] = self.queue.depth
+        s["slo"] = self.slo.stats()
+        return s
+
+
+class NamespaceSet:
+    """The tenant table + the shared host-LUT budget arbiter.
+
+    ``lut_budget_rows`` is the TOTAL host cache budget across all tenants
+    (same unit as ``Engine.lut_cache_rows``: cached per-query LUT rows).
+    Every create/drop re-splits it evenly and re-trims each Engine, so the
+    global bound holds at all times regardless of tenant count.
+    """
+
+    def __init__(self, *, lut_budget_rows: int = 8192):
+        if lut_budget_rows < 0:
+            raise ValueError(f"lut_budget_rows must be >= 0, "
+                             f"got {lut_budget_rows}")
+        self.lut_budget_rows = int(lut_budget_rows)
+        self._spaces: dict[str, Namespace] = {}
+
+    def __len__(self) -> int:
+        return len(self._spaces)
+
+    def __iter__(self):
+        return iter(self._spaces.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._spaces
+
+    def get(self, name: str) -> Namespace:
+        try:
+            return self._spaces[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown namespace {name!r}; have {sorted(self._spaces)}"
+            ) from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._spaces)
+
+    def _resplit(self) -> None:
+        """Even split of the global budget; each Engine trims to its new
+        cap right away (evictions are counted by the Engine itself)."""
+        if not self._spaces:
+            return
+        share = self.lut_budget_rows // len(self._spaces)
+        for ns in self._spaces.values():
+            ns.engine.lut_cache_rows = share
+            ns.engine._evict()
+
+    def add(self, ns: Namespace) -> Namespace:
+        if ns.name in self._spaces:
+            raise ValueError(f"namespace {ns.name!r} already exists")
+        self._spaces[ns.name] = ns
+        self._resplit()
+        return ns
+
+    def drop(self, name: str) -> None:
+        self.get(name)          # raise the uniform KeyError on unknowns
+        del self._spaces[name]
+        self._resplit()

@@ -1,0 +1,111 @@
+"""SLO-adaptive nprobe: a feedback controller over measured latencies.
+
+``nprobe`` is the serving-time quality/latency dial: more probed IVF
+lists → higher recall and proportionally more scan work. A fixed nprobe
+either wastes the latency budget at low load or blows p99 under bursts.
+``SLOController`` closes the loop:
+
+  * it only ever picks from a small fixed **ladder** of nprobe rungs —
+    the set the front-end warms up — so adaptivity NEVER causes a
+    recompile (the Engine compile cache is keyed on (bucket, k, nprobe)
+    and the ladder keeps that keyspace finite and pre-compiled);
+  * per (bucket, rung) it keeps an EWMA of measured batch service
+    latency (seeded from warmup, updated from every served batch via
+    ``observe`` — the same measurements the Engine's ``latency_ms``
+    distribution sees);
+  * ``choose`` picks the HIGHEST rung whose predicted latency — inflated
+    by a safety margin and by the backlog still queued behind this batch
+    (queued work rides in later waves, so each wave of backlog adds one
+    predicted service time of queueing delay) — fits the remaining
+    per-request budget. Under light load that is the top rung (spend the
+    budget on recall); under a burst it sheds toward the floor and keeps
+    p99 inside the SLO.
+
+The controller is deliberately tiny and deterministic: no background
+threads, no percentile estimation — an EWMA tracks the mean well enough
+because batch service times at a fixed (bucket, rung) are tight (same
+executable, same shapes).
+"""
+from __future__ import annotations
+
+import math
+
+
+class SLOController:
+    """Pick an nprobe rung for each flush so requests meet their SLO.
+
+    Parameters
+    ----------
+    ladder : tuple of ints, ascending nprobe rungs (the only values ever
+        returned — the front-end compiles exactly these).
+    safety : multiplier on the predicted latency before comparing against
+        the budget (>1 biases toward meeting the SLO at some recall cost).
+    ewma : smoothing factor for new observations (higher = faster
+        adaptation, noisier predictions).
+    """
+
+    def __init__(self, ladder=(4, 16, 32), *, safety: float = 1.3,
+                 ewma: float = 0.3):
+        if not ladder:
+            raise ValueError("nprobe ladder must be non-empty")
+        self.ladder = tuple(sorted(int(r) for r in ladder))
+        if self.ladder[0] < 1:
+            raise ValueError(f"nprobe rungs must be >= 1, got {self.ladder}")
+        if not 0 < ewma <= 1:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma}")
+        self.safety = float(safety)
+        self.ewma = float(ewma)
+        self._lat_ms: dict[tuple[int, int], float] = {}   # (bucket, rung) → EWMA
+        self.decisions = 0
+        self.sheds = 0          # picked below the top rung
+        self.floors = 0         # budget fit nothing — served at the floor
+
+    def predict_ms(self, bucket: int, rung: int) -> float | None:
+        """Current latency estimate for one (bucket, rung) batch, or None
+        before any observation (warmup seeds every cell it compiles)."""
+        return self._lat_ms.get((bucket, rung))
+
+    def observe(self, bucket: int, rung: int, latency_ms: float) -> None:
+        """Fold one measured batch service latency into the EWMA."""
+        if not math.isfinite(latency_ms) or latency_ms < 0:
+            return
+        key = (int(bucket), int(rung))
+        prev = self._lat_ms.get(key)
+        if prev is None:
+            self._lat_ms[key] = float(latency_ms)
+        else:
+            self._lat_ms[key] = (1 - self.ewma) * prev + self.ewma * latency_ms
+
+    def choose(self, budget_ms: float, bucket: int, backlog: int = 0) -> int:
+        """Highest rung predicted to fit ``budget_ms`` for a ``bucket``-row
+        batch with ``backlog`` requests still queued behind it.
+
+        The backlog inflates predictions by (1 + backlog/bucket): each full
+        wave of queued work in front of a future request adds roughly one
+        batch service time before it runs, so under a burst the controller
+        sheds *before* the queue delay shows up in measured latencies —
+        feedback plus feedforward. Unknown cells (no EWMA yet) are treated
+        as not fitting, except the floor rung, which is always allowed:
+        a late request still gets served, at minimum cost.
+        """
+        self.decisions += 1
+        waves = 1.0 + max(0, int(backlog)) / max(1, int(bucket))
+        for rung in reversed(self.ladder):
+            pred = self._lat_ms.get((int(bucket), rung))
+            if pred is not None and pred * self.safety * waves <= budget_ms:
+                if rung != self.ladder[-1]:
+                    self.sheds += 1
+                return rung
+        self.floors += 1
+        self.sheds += 1
+        return self.ladder[0]
+
+    def stats(self) -> dict:
+        return {
+            "ladder": self.ladder,
+            "decisions": self.decisions,
+            "sheds": self.sheds,
+            "floors": self.floors,
+            "cells": {f"b{b}/np{r}": round(v, 4)
+                      for (b, r), v in sorted(self._lat_ms.items())},
+        }

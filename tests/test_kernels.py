@@ -219,6 +219,39 @@ def test_fused_lut_rq_colmap():
         np.testing.assert_allclose(want[:, p], direct, atol=1e-4, rtol=1e-4)
 
 
+def test_topk_merge_deterministic_ties():
+    """Equal scores rank by ascending id, so the merged top-k is a pure
+    function of the candidate SET — identical under any permutation of the
+    candidate axis (the serve batch-composition determinism contract)."""
+    rng = np.random.RandomState(7)
+    b, C, k = 4, 24, 8
+    # heavy ties: scores drawn from 4 distinct values
+    scores = jnp.asarray(
+        rng.choice([3.0, 2.0, 1.0, -np.inf], size=(b, C)).astype(np.float32))
+    ids = jnp.asarray(rng.permutation(C).astype(np.int32)[None, :]
+                      .repeat(b, axis=0))
+    ids = jnp.where(jnp.isfinite(scores), ids, -1)   # padding contract
+    want_s, want_i = ops.topk_merge(scores, ids, k)
+    # within every tied score run, ids must come out ascending
+    ws, wi = np.asarray(want_s), np.asarray(want_i)
+    for r in range(b):
+        for v in (3.0, 2.0, 1.0):
+            run = wi[r][ws[r] == v]
+            assert list(run) == sorted(run), (r, v, run)
+    # permutation invariance: merging the same candidates in any order
+    # yields the bit-identical result
+    for trial in range(5):
+        perm = rng.permutation(C)
+        got_s, got_i = ops.topk_merge(scores[:, perm], ids[:, perm], k)
+        np.testing.assert_array_equal(np.asarray(got_i), wi)
+        np.testing.assert_array_equal(np.asarray(got_s), ws)
+    # −inf slots surface only when the pool runs dry, always with id −1
+    empty_s, empty_i = ops.topk_merge(
+        jnp.full((2, 3), -jnp.inf), jnp.full((2, 3), -1, jnp.int32), k)
+    assert np.all(np.asarray(empty_s) == -np.inf)
+    assert np.all(np.asarray(empty_i) == -1)
+
+
 def test_streaming_topk_ref_tile_order_invariance():
     """The streamed merge is bit-identical to a one-shot top-k over the
     concatenated scores, whatever order the tiles arrive in."""
