@@ -37,6 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2a,fig2bc,table1,fig4,ivf,churn,"
+                         "train_e2e,"
                          "serve,kernels,roofline")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--devices", type=int, default=1,
@@ -65,6 +66,25 @@ def main() -> None:
             checks_all[key] = bool(v)
             if not v:
                 failures.append(key)
+
+    if want("train_e2e"):
+        # overlapped end-to-end training: async prefetch + live refresh +
+        # background compaction with staleness re-encode — step overhead,
+        # hidden-pause p99, and recall-vs-rebuild pinned. Runs FIRST: the
+        # p99 pins compare an off-thread pack against an inline one, and a
+        # heap pre-warmed by other sections skews the two arms differently
+        # (standalone conditions are the calibrated ones).
+        from benchmarks import train_e2e
+        if args.fast:
+            res, checks = train_e2e.run(
+                n=32000, dim=32, queries=64, lists=32, subspaces=8,
+                codewords=32, steps=54, batch=8192, nprobe=8,
+                refresh_every=6, compact_every=3, reencode_rows=2048,
+                staging_rows=512, churn_batch=32, churn_every=3,
+                warmup=12, probe_every=6)
+        else:
+            res, checks = train_e2e.run()
+        book("train_e2e", res, checks)
 
     if want("fig2a"):
         from benchmarks import fig2a_convergence

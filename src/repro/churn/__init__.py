@@ -10,6 +10,14 @@ search stack's states — built so the serving hot path never changes shape:
                      (host-side, state-in state-out).
   * ``controller`` — ``ChurnController``: sequences stage→flush→compact
                      between Engine batches, instrumented via repro.obs.
+  * ``compactor``  — ``BackgroundCompactor``: double-buffers the next
+                     compacted state in a worker thread and swaps it at the
+                     Engine refresh point (deletes replayed, staging and
+                     rotation state taken live) — the repack off the
+                     critical path.
+  * ``staleness``  — ``StalenessTracker``: rotation epoch at encode time
+                     per row, so each compaction pass re-encodes only the
+                     stalest rows (``ops.compact(reencode=...)``).
 
 Deletes are O(1) id flips honored inside the Pallas scan kernels; adds are
 visible to the next query via the staging side pass; compaction repacks at
@@ -17,14 +25,16 @@ preserved shapes in steady state, so sustained churn costs zero recompiles.
 """
 from repro.churn.buffer import (StagingBuffer, empty, merge_staged,
                                 staged_topk)
+from repro.churn.compactor import BackgroundCompactor
 from repro.churn.controller import ChurnController
 from repro.churn.ops import (compact, flush, free_slots, ingest_index,
                              live_rows, shard_rebalance, stage, staged_rows,
                              tombstone, tombstone_index, with_staging)
+from repro.churn.staleness import StalenessTracker
 
 __all__ = [
     "StagingBuffer", "empty", "merge_staged", "staged_topk",
-    "ChurnController",
+    "ChurnController", "BackgroundCompactor", "StalenessTracker",
     "with_staging", "stage", "flush", "tombstone", "compact",
     "shard_rebalance", "tombstone_index", "ingest_index",
     "staged_rows", "free_slots", "live_rows",

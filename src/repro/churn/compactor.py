@@ -1,0 +1,238 @@
+"""Background compaction: repack the NEXT index state off the critical path.
+
+``ChurnController.compact`` runs ``ops.compact`` synchronously between
+Engine batches — at full corpus scale that host-side repack is the p99 of
+the serving/training loop. ``BackgroundCompactor`` moves it to a worker
+thread double-buffering the next state while the current one serves, and
+swaps at the Engine's existing refresh point (a wholesale ``engine.state``
+assignment, same as ``Engine.refresh`` — the Engine re-reads state per
+batch, so the swap is one reference write on the poll thread).
+
+Correctness under concurrent mutation — the worker compacts a SNAPSHOT,
+so by swap time the live state may have moved. The reconcile rules:
+
+  * ``tombstone`` since submit → replayed onto the compacted arrays by id
+    (set difference of live CSR ids, snapshot vs current). O(deads).
+  * ``stage`` since submit → staged rows live in the staging buffer, which
+    the swap takes from the CURRENT state (the worker compacts with
+    ``include_staged=False``), so they keep serving uninterrupted.
+  * ``refresh`` since submit → refresh carries codes and only moves
+    R/coarse/quantizer, which the swap also takes from the CURRENT state;
+    compacted codes stay valid (they are the snapshot's codes, reordered).
+  * ``flush``/``compact``/``rebalance`` since submit → the CSR itself moved
+    under the worker; the result is DISCARDED (validity check: unchanged
+    list offsets + current live ids ⊆ snapshot live ids). The controller
+    defers flushes while a compaction is in flight precisely so discards
+    stay rare.
+
+Because codes are carried, a background compaction that raced nothing is
+bit-identical to a foreground ``ops.compact`` of the same input — pinned
+in tests/test_churn.py.
+
+Staleness re-encode rides along: given a ``StalenessTracker`` and a
+``reencode_fn(ids) -> raw vectors``, each pass re-encodes the stalest rows
+against the snapshot's current quantizers (``ops.compact(reencode=...)``),
+so index freshness is maintained inside maintenance the index was already
+doing — never as extra critical-path work.
+
+Threading discipline: the worker runs pure compute and touches NO obs
+registry and NO engine state — it returns ``(state, elapsed_s)`` through a
+Future. All registry writes and the swap happen in ``poll()`` on the
+caller's thread, under one lock (no torn stats, no double swap — stressed
+in tests/test_churn.py with an artificially delayed worker via
+``worker_delay_s``).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+import time
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.churn import ops
+
+
+def _csr_ids(state) -> np.ndarray:
+    """The CSR id array (flat or stacked) — staging excluded."""
+    if hasattr(state, "index"):
+        return np.asarray(state.index.ids)
+    return np.asarray(state.ids)
+
+
+def _csr_offsets(state) -> np.ndarray:
+    if hasattr(state, "index"):
+        return np.asarray(state.index.list_offsets)
+    return np.asarray(state.list_offsets)
+
+
+def _live_set(ids: np.ndarray) -> set:
+    return set(int(i) for i in ids.ravel() if i >= 0)
+
+
+class BackgroundCompactor:
+    """Double-buffered ``ops.compact`` with an Engine-swap reconcile.
+
+    ``engine`` is anything with a ``.state`` attribute (``search.Engine``
+    or a bare holder). ``tracker``/``reencode_fn``/``reencode_rows`` wire
+    the staleness pass; ``worker_delay_s`` artificially delays the worker
+    (stress tests). Single poll-thread convention: ``submit``/``poll`` may
+    be called from any one thread at a time (they lock), the worker never
+    writes shared state.
+    """
+
+    def __init__(self, engine, *, tracker=None, reencode_fn=None,
+                 reencode_rows: int = 256, include_staged: bool = False,
+                 worker_delay_s: float = 0.0, registry=None):
+        self.engine = engine
+        self.tracker = tracker
+        self.reencode_fn = reencode_fn
+        self.reencode_rows = int(reencode_rows)
+        self.include_staged = bool(include_staged)
+        self.worker_delay_s = float(worker_delay_s)
+        self.obs = (registry if registry is not None
+                    else getattr(engine, "obs", None) or
+                    obs.default_registry())
+        self._lock = threading.Lock()
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="churn-compact")
+        self._future: concurrent.futures.Future | None = None
+        self._snap_live: set = set()
+        self._snap_offsets: np.ndarray | None = None
+        self._snap_epoch = 0
+        self._reencode_ids: np.ndarray | None = None
+
+    # -- worker body: pure compute, no registry/engine writes ---------------
+    def _work(self, snapshot, reencode):
+        if self.worker_delay_s > 0:
+            time.sleep(self.worker_delay_s)
+        t0 = time.perf_counter()
+        new = ops.compact(snapshot, include_staged=self.include_staged,
+                          reencode=reencode)
+        jax.block_until_ready(_csr_ids(new))
+        return new, time.perf_counter() - t0
+
+    @property
+    def in_flight(self) -> bool:
+        with self._lock:
+            return self._future is not None
+
+    def submit(self) -> bool:
+        """Snapshot the current state and start compacting it in the
+        background. Returns False (no-op) when a pass is already in
+        flight."""
+        with self._lock:
+            if self._future is not None:
+                return False
+            snapshot = self.engine.state
+            self._snap_offsets = _csr_offsets(snapshot).copy()
+            self._snap_live = _live_set(_csr_ids(snapshot))
+            reencode = None
+            self._reencode_ids = None
+            if self.tracker is not None and self.reencode_fn is not None \
+                    and self.reencode_rows > 0:
+                rid = self.tracker.stalest(self.reencode_rows)
+                if rid.size:
+                    reencode = (rid, np.asarray(self.reencode_fn(rid)))
+                    self._reencode_ids = rid
+            self._snap_epoch = (self.tracker.epoch
+                                if self.tracker is not None else 0)
+            self._future = self._pool.submit(self._work, snapshot, reencode)
+            return True
+
+    def poll(self) -> bool:
+        """Consume a finished pass: validate, reconcile, swap. Returns True
+        when a swap happened. Never blocks on an unfinished worker. All
+        metric writes happen here, on the caller's thread."""
+        with self._lock:
+            fut = self._future
+            if fut is None or not fut.done():
+                return False
+            self._future = None          # double-swap guard: consumed once
+            compacted, elapsed = fut.result()
+            current = self.engine.state
+
+            cur_ids = _csr_ids(current)
+            cur_live = _live_set(cur_ids)
+            valid = (np.array_equal(_csr_offsets(current),
+                                    self._snap_offsets)
+                     and cur_live <= self._snap_live)
+            if not valid:
+                # the CSR moved under the worker (flush/compact/rebalance):
+                # the snapshot's repack no longer describes the live rows
+                self.obs.counter("churn.bg_discarded").inc()
+                return False
+
+            # replay deletes that landed since the snapshot
+            dead = self._snap_live - cur_live
+            swapped = self._swap(current, compacted, dead)
+            self.engine.state = swapped
+
+            if self.tracker is not None:
+                if self._reencode_ids is not None:
+                    self.tracker.record(self._reencode_ids,
+                                        epoch=self._snap_epoch)
+                    self.obs.counter("churn.reencoded").inc(
+                        int(self._reencode_ids.size))
+                if dead:
+                    self.tracker.forget(np.fromiter(
+                        dead, dtype=np.int64, count=len(dead)))
+                self.tracker.histogram(self.obs)
+            self.obs.counter("churn.bg_compactions").inc()
+            self.obs.distribution("churn.bg_compact_ms").observe(
+                elapsed * 1e3)
+            # the whole worker wall time was hidden behind the caller's
+            # step loop — the overlap win train_e2e pins
+            self.obs.distribution("churn.compact_hidden_ms").observe(
+                elapsed * 1e3)
+            return True
+
+    def _swap(self, current, compacted, dead: set):
+        """Compose the post-swap state: CSR layout from the compacted
+        snapshot (deletes replayed), everything a refresh moves
+        (R/coarse/quantizer/rot state) and the staging buffer from the
+        CURRENT state."""
+        dead_arr = (np.fromiter(dead, dtype=np.int64, count=len(dead))
+                    if dead else None)
+
+        def replay(ids_arr):
+            if dead_arr is None:
+                return ids_arr
+            ids_np = np.asarray(ids_arr)
+            out = np.where(np.isin(ids_np, dead_arr), -1, ids_np)
+            return jax.numpy.asarray(out)
+
+        if hasattr(current, "index"):        # flat/ivf ADC state
+            comp_idx = compacted.index
+            new_idx = dataclasses.replace(
+                current.index,
+                codes=comp_idx.codes,
+                ids=replay(comp_idx.ids),
+                list_offsets=comp_idx.list_offsets)
+            return dataclasses.replace(
+                current, index=new_idx, max_blocks=compacted.max_blocks)
+        if hasattr(current, "mesh"):         # sharded ADC state
+            ids = replay(compacted.ids)
+            ids = ops._place(ids, current.mesh, current.axes)
+            return dataclasses.replace(
+                current, codes=compacted.codes, ids=ids,
+                list_offsets=compacted.list_offsets,
+                max_blocks=compacted.max_blocks)
+        # bare IVFPQIndex
+        return dataclasses.replace(
+            current, codes=compacted.codes, ids=replay(compacted.ids),
+            list_offsets=compacted.list_offsets)
+
+    def join(self, timeout: float | None = None) -> None:
+        """Block until the in-flight worker (if any) finishes — it still
+        needs a ``poll()`` to swap."""
+        with self._lock:
+            fut = self._future
+        if fut is not None:
+            concurrent.futures.wait([fut], timeout=timeout)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True, cancel_futures=True)

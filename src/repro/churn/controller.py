@@ -32,6 +32,13 @@ The tombstone tally is the controller's own bookkeeping: once flipped to
 −1, a tombstoned row is indistinguishable from a build-time padding hole,
 so the gauge counts deletes since the last compaction (live-row delta per
 ``remove``), resetting to zero when compaction reclaims them.
+
+With a ``BackgroundCompactor`` attached (``compactor=``), ``compact()``
+becomes a non-blocking submit and each ``step`` polls for a finished pass
+to swap in — the repack leaves the critical path entirely. Flushes are
+deferred while a pass is in flight (a flush moves the CSR, which would
+invalidate the worker's snapshot); the one blocking fallback is an ``add``
+into a full buffer, which joins the worker before flushing.
 """
 from __future__ import annotations
 
@@ -44,12 +51,14 @@ class ChurnController:
 
     def __init__(self, engine, *, staging_rows: int = 1024,
                  flush_at: float = 0.5, compact_at: float = 0.25,
-                 imbalance_threshold: float = 1.25):
+                 imbalance_threshold: float = 1.25, compactor=None):
         self.engine = engine
         self.flush_at = float(flush_at)
         self.compact_at = float(compact_at)
         self.imbalance_threshold = float(imbalance_threshold)
         self.obs = getattr(engine, "obs", None) or obs.default_registry()
+        self.compactor = compactor
+        self._tombstoned_at_submit = 0
         self._tombstoned = 0
         # install staging NOW, before the first search compiles — the
         # buffer is pytree structure, so this is the one structural change
@@ -77,9 +86,14 @@ class ChurnController:
         buffer cannot hold the batch."""
         n = len(new_ids)
         if ops.free_slots(self.state) < n:
+            if self.compactor is not None and self.compactor.in_flight:
+                # the one blocking fallback: a full buffer needs a flush,
+                # and a flush would invalidate the in-flight snapshot
+                self.compactor.join()
+                self.poll_background()
             self.flush()
         if ops.free_slots(self.state) < n:
-            self.compact()
+            self._compact_sync()
         self.engine.state = ops.stage(self.state, X_new, new_ids)
         self._count("staged", n)
         self._gauges()
@@ -95,7 +109,13 @@ class ChurnController:
 
     # -- maintenance -------------------------------------------------------
     def flush(self) -> int:
-        """Fold staged rows into CSR holes (shape-preserving)."""
+        """Fold staged rows into CSR holes (shape-preserving). Deferred
+        (returns 0) while a background compaction is in flight — a flush
+        moves the CSR and would force the worker's result to be
+        discarded."""
+        if self.compactor is not None and self.compactor.in_flight:
+            self._count("flushes_deferred")
+            return 0
         with self.obs.span("churn.flush") as sp:
             new_state, moved = ops.flush(self.state)
             sp.sync(new_state.index.ids if hasattr(new_state, "index")
@@ -109,9 +129,20 @@ class ChurnController:
 
     def compact(self) -> None:
         """Repack the live (+ staged) rows, reclaiming tombstoned blocks.
+        With a ``BackgroundCompactor`` attached this is a non-blocking
+        submit (the swap lands on a later ``step``/``poll_background``);
+        without one it runs synchronously on the calling thread.
         Steady-state compactions preserve every shape; genuine growth
         (capacity or probe window) is counted via ``churn.grows`` — it
         recompiles once, legitimately."""
+        if self.compactor is not None:
+            if self.compactor.submit():
+                self._tombstoned_at_submit = self._tombstoned
+                self._count("bg_submitted")
+            return
+        self._compact_sync()
+
+    def _compact_sync(self) -> None:
         st = self.state
         cap_before = (st.index.capacity if hasattr(st, "index")
                       else int(st.codes.shape[1]))
@@ -129,6 +160,20 @@ class ChurnController:
         self._count("compactions")
         self._tombstoned = 0
         self._gauges()
+
+    def poll_background(self) -> bool:
+        """Swap in a finished background compaction, if one is ready.
+        Deletes that landed since the submit were replayed by the
+        compactor, so only they remain tombstoned after the swap."""
+        if self.compactor is None:
+            return False
+        if not self.compactor.poll():
+            return False
+        self._tombstoned = max(
+            0, self._tombstoned - self._tombstoned_at_submit)
+        self._count("compactions")
+        self._gauges()
+        return True
 
     def maybe_rebalance(self) -> bool:
         """Sharded states only: rebalance when max/mean shard occupancy
@@ -155,6 +200,7 @@ class ChurnController:
     def step(self, *, add=None, add_ids=None, remove_ids=None) -> None:
         """One churn tick between query batches: apply this tick's deletes
         and adds, then run whatever maintenance the thresholds call for."""
+        self.poll_background()
         if remove_ids is not None and len(remove_ids):
             self.remove(remove_ids)
         if add is not None and len(add_ids):

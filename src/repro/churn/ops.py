@@ -455,11 +455,45 @@ def _empty_like(stg: StagingBuffer) -> StagingBuffer:
     return dataclasses.replace(stg, ids=jnp.full_like(stg.ids, -1))
 
 
-def compact(state, *, include_staged: bool = True):
+def _reencode_rows(codes: np.ndarray, lists: np.ndarray, ids: np.ndarray,
+                   reencode, R, coarse, quantizer):
+    """Re-encode the gathered rows named by ``reencode=(ids, vectors)``
+    against the CURRENT rotation/quantizers (the staleness pass: rows
+    encoded many refreshes ago drift from the codebooks the LUTs are built
+    on). ``vectors`` are the raw, unrotated embeddings aligned with the id
+    list; ids not live in this gather (tombstoned/rebalanced away) are
+    skipped. Returns (codes, lists, rows_reencoded) — in-place on copies.
+    """
+    rid = np.asarray(reencode[0]).astype(np.int64)
+    if rid.size == 0:
+        return codes, lists, 0
+    pos = {int(v): k for k, v in enumerate(ids)}
+    keep = np.asarray([j for j, r in enumerate(rid) if int(r) in pos],
+                      dtype=np.int64)
+    if keep.size == 0:
+        return codes, lists, 0
+    sel = np.asarray([pos[int(rid[j])] for j in keep], dtype=np.int64)
+    X = jnp.asarray(np.asarray(reencode[1])[keep])
+    XR = X @ R.astype(X.dtype)
+    new_lists, new_codes = index_ivf.encode(XR, coarse, quantizer)
+    codes = codes.copy()
+    lists = lists.copy()
+    codes[sel] = np.asarray(new_codes)
+    lists[sel] = np.asarray(new_lists, dtype=np.int32)
+    return codes, lists, int(keep.size)
+
+
+def compact(state, *, include_staged: bool = True, reencode=None):
     """Reclaim tombstoned blocks: repack the live rows (draining the
     staging buffer too, by default) into fresh block-aligned CSR order.
     Codes are carried, never re-encoded — scores are bit-identical to a
     fresh rebuild of the same rows under the same quantizers.
+
+    ``reencode=(ids, vectors)`` folds a staleness pass into the repack:
+    those live rows are re-encoded from their raw ``vectors`` against the
+    state's CURRENT rotation/quantizers (and re-homed to their new coarse
+    list) instead of carrying their frozen codes. With ``reencode=None``
+    the repack stays bit-identical.
 
     Shape discipline: capacity is padded back to the pre-compact value
     whenever the live set fits (the steady-churn case — pure shape-
@@ -472,6 +506,9 @@ def compact(state, *, include_staged: bool = True):
     if kind == "index":
         c, l, i = _gather_live(state.ids, state.codes, state.list_offsets,
                                state.num_lists)
+        if reencode is not None:
+            c, l, _ = _reencode_rows(c, l, i, reencode, state.R,
+                                     state.coarse, state.quantizer)
         new = index_ivf.pack(state.R, state.coarse, state.quantizer,
                              c, l, i, block_size=state.block_size)
         return _pad_capacity(new, state.capacity)
@@ -485,12 +522,14 @@ def compact(state, *, include_staged: bool = True):
         if include_staged and stg is not None:
             parts.append(_drain_staged(stg))
             stg = _empty_like(stg)
-        new = index_ivf.pack(
-            idx.R, idx.coarse, idx.quantizer,
-            np.concatenate([p[0] for p in parts]),
-            np.concatenate([p[1] for p in parts]),
-            np.concatenate([p[2] for p in parts]),
-            block_size=idx.block_size)
+        c = np.concatenate([p[0] for p in parts])
+        l = np.concatenate([p[1] for p in parts])
+        i = np.concatenate([p[2] for p in parts])
+        if reencode is not None:
+            c, l, _ = _reencode_rows(c, l, i, reencode, idx.R,
+                                     idx.coarse, idx.quantizer)
+        new = index_ivf.pack(idx.R, idx.coarse, idx.quantizer, c, l, i,
+                             block_size=idx.block_size)
         new = _pad_capacity(new, idx.capacity)
         mb = state.max_blocks
         if mb >= 1:
@@ -500,7 +539,7 @@ def compact(state, *, include_staged: bool = True):
 
     if kind == "sharded_adc":
         return _compact_sharded(state, include_staged=include_staged,
-                                rebalance=False)
+                                rebalance=False, reencode=reencode)
     raise TypeError("compact() needs a quantized (ADC or index) state")
 
 
@@ -517,7 +556,8 @@ def shard_rebalance(state, *, include_staged: bool = True):
                             rebalance=True)
 
 
-def _compact_sharded(state, *, include_staged: bool, rebalance: bool):
+def _compact_sharded(state, *, include_staged: bool, rebalance: bool,
+                     reencode=None):
     """Shared body: per-shard repack (compact) or global rank re-partition
     + per-shard repack (rebalance)."""
     S = state.codes.shape[0]
@@ -536,6 +576,9 @@ def _compact_sharded(state, *, include_staged: bool, rebalance: bool):
             c = np.concatenate([c, sc])
             l = np.concatenate([l, sl])
             i = np.concatenate([i, si])
+        if reencode is not None:
+            c, l, _ = _reencode_rows(c, l, i, reencode, state.R,
+                                     state.coarse, state.quantizer)
         per_shard.append((c, l, i))
 
     if rebalance:

@@ -208,3 +208,20 @@ def refresh_mismatch(refreshed: IVFPQIndex, X: jax.Array) -> jax.Array:
     rebuilt = codes_rebuild[jnp.maximum(refreshed.ids, 0)]
     mismatch = jnp.any(stored != rebuilt, axis=-1) & live
     return jnp.sum(mismatch) / jnp.maximum(jnp.sum(live), 1)
+
+
+def drifted_ids(index: IVFPQIndex, X: jax.Array) -> np.ndarray:
+    """Item ids whose stored codes disagree with a fresh encode of their
+    raw vectors against the index's CURRENT rotation/quantizers — the
+    ground-truth stale set ``refresh_mismatch`` reports the fraction of.
+    The staleness machinery (``churn.StalenessTracker`` + the compactor's
+    re-encode pass) approximates this set from epochs alone, without the
+    full re-encode this oracle pays for; tests/benchmarks use this to
+    check how well the approximation tracks reality."""
+    XR = X @ index.R
+    _, codes_rebuild = ivf.encode(XR, index.coarse, index.quantizer)
+    ids = np.asarray(index.ids)
+    live = ids >= 0
+    rebuilt = np.asarray(codes_rebuild)[np.maximum(ids, 0)]
+    mism = np.any(np.asarray(index.codes) != rebuilt, axis=-1) & live
+    return np.unique(ids[mism])

@@ -133,7 +133,8 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
           resume: bool = True, full: bool = False, seed: int = 0,
           ckpt_every: int = 50, watchdog_factor: float = 5.0,
           rotation: str = "gcd_greedy", log_every: int = 10,
-          stop_after: int | None = None, obs_log: str | None = None):
+          stop_after: int | None = None, obs_log: str | None = None,
+          prefetch: bool = False, live_loop=None):
     """``stop_after``: checkpoint and exit after that many steps — simulates
     a crash for the resume tests (the schedule still targets ``steps``, so a
     resumed run is bit-identical to an uninterrupted one).
@@ -141,7 +142,17 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
     ``obs_log``: enable the global ``repro.obs`` registry with a JSONL
     event log at that path — per-step spans/metrics (time, loss, grad
     norm, rotation health every ``log_every``) stream there; the loop
-    stays metric-free when observability is off."""
+    stays metric-free when observability is off.
+
+    ``prefetch``: double-buffer the host pipeline — batch k+1 is generated
+    on a worker thread while step k runs. Bit-identical stream (batches
+    are pure functions of (seed, step)); checkpoints carry the cursor
+    either way, so resume works mid-prefetch.
+
+    ``live_loop``: a ``repro.pipeline.LiveIndexLoop`` to drive from this
+    trainer — the step function is built with ``emit_deltas=True`` and the
+    loop's ``on_step`` runs after each step (live-index refresh + the
+    background compactor's poll stay off the device's critical path)."""
     if obs_log:
         obs.enable(jsonl=obs_log)
     reg = obs.default_registry()
@@ -157,7 +168,8 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
     key = jax.random.PRNGKey(seed)
     params = init_model(key, cfg, arch.family)
     state = ts.init_state(jax.random.fold_in(key, 1), params, ocfg)
-    pipe = pipe_lib.Pipeline(batch_fn, seed=seed)
+    pipe = pipe_lib.Pipeline(batch_fn, seed=seed, prefetch=prefetch,
+                             registry=reg)
 
     # ---- auto-resume (elastic: arrays re-device_put on the current mesh) ----
     start_step = 0
@@ -171,7 +183,10 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
             start_step = latest
             print(f"[train] resumed from step {latest}")
 
-    step_fn = jax.jit(ts.make_train_step(loss_fn, ocfg), donate_argnums=(0,))
+    step_fn = jax.jit(
+        ts.make_train_step(loss_fn, ocfg,
+                           emit_deltas=live_loop is not None),
+        donate_argnums=(0,))
 
     times: list[float] = []
     metrics_hist = []
@@ -181,6 +196,8 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
             batch_data = next(pipe)
             state, metrics = step_fn(state, *batch_data)
             loss = float(metrics["loss"])   # blocks: the span covers compute
+        if live_loop is not None:
+            live_loop.on_step(metrics)
         dt = time.time() - t0
         times.append(dt)
         metrics_hist.append(loss)
@@ -214,7 +231,11 @@ def train(arch_id: str, steps: int, batch: int, ckpt_dir: str | None,
                           (jax.tree.map(np.asarray, state), pipe.state()),
                           metadata={"arch": arch_id, "crashed": True})
             print(f"[train] simulated crash after step {i + 1}")
+            pipe.close()
             return state, metrics_hist
+    if live_loop is not None:
+        live_loop.drain()
+    pipe.close()
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, (jax.tree.map(np.asarray, state),
                                     pipe.state()),
@@ -238,10 +259,14 @@ def main():
     ap.add_argument("--obs-log", default=None,
                     help="enable repro.obs and stream step events to this "
                          "JSONL file; a metrics report prints at exit")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffer host batch synthesis + device_put "
+                         "on a worker thread (bit-identical stream)")
     args = ap.parse_args()
     _, hist = train(args.arch, args.steps, args.batch, args.ckpt_dir,
                     resume=not args.no_resume, full=args.full,
-                    rotation=args.rotation, obs_log=args.obs_log)
+                    rotation=args.rotation, obs_log=args.obs_log,
+                    prefetch=args.prefetch)
     print(f"final loss: {hist[-1]:.4f} (start {hist[0]:.4f})")
     if args.obs_log:
         print(obs.report())

@@ -30,8 +30,12 @@ timing (with ``error=True``) and propagates. When the registry's
 ``jax.profiler.TraceAnnotation`` so host spans line up with device ops in
 an XLA trace; ``trace(dir)`` wraps ``jax.profiler.trace`` the same way.
 
-Registries are process-local and not thread-safe for concurrent writers to
-the SAME metric (same single-writer assumption as ``search.Engine``); the
+Registries are process-local. Metric CREATION (the get-or-create in
+``counter``/``gauge``/``distribution``/``event``) is guarded by a lock, so
+threads racing to instrument the same name always share one object — the
+background-compaction worker relies on this. Concurrent WRITERS to the
+same metric remain single-writer by convention (same assumption as
+``search.Engine``): writers on the poll thread, workers return values; the
 span stack is per-thread so concurrent readers/writers of different
 metrics are fine in practice.
 """
@@ -279,6 +283,7 @@ class Registry:
         self._events: dict[str, collections.deque] = {}
         self._sinks: list = []
         self._local = threading.local()
+        self._create_lock = threading.Lock()
 
     # -- metric accessors (get-or-create) ----------------------------------
     def _get(self, cls, name: str, labels: dict, **kw):
@@ -287,8 +292,13 @@ class Registry:
         key = _key(name, labels)
         m = self._metrics.get(key)
         if m is None:
-            m = cls(name, key[1], **kw)
-            self._metrics[key] = m
+            # creation is locked so racing threads share ONE metric object
+            # (two Counter instances under one key would tear increments)
+            with self._create_lock:
+                m = self._metrics.get(key)
+                if m is None:
+                    m = cls(name, key[1], **kw)
+                    self._metrics[key] = m
         return m
 
     def counter(self, name: str, **labels) -> Counter:
@@ -332,8 +342,11 @@ class Registry:
         rec = {"kind": kind, "t": time.time(), **fields}
         win = self._events.get(kind)
         if win is None:
-            win = collections.deque(maxlen=self.window)
-            self._events[kind] = win
+            with self._create_lock:
+                win = self._events.get(kind)
+                if win is None:
+                    win = collections.deque(maxlen=self.window)
+                    self._events[kind] = win
         win.append(rec)
         for sink in self._sinks:
             sink.write(rec)

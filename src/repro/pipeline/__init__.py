@@ -1,0 +1,29 @@
+"""repro.pipeline: the overlapped training runtime.
+
+Closes the paper's loop at scale — rotation learning *during* training
+with a live index — while keeping every slow host-side piece off the
+step's critical path:
+
+  * ``data.pipeline.Pipeline(prefetch=True)`` — double-buffered
+    host→device prefetch (re-exported here); batch k+1 is generated and
+    ``device_put`` while step k runs, bit-identical stream, checkpoint/
+    restore carries the cursor.
+  * ``LiveIndexLoop`` — consumes the trainer's per-step ``RotationDelta``s
+    (``make_train_step(emit_deltas=True)``) and refreshes a live Engine
+    every N steps through the zero-recompile path, tracking per-row
+    staleness so only drifted rows are ever re-encoded.
+  * ``churn.BackgroundCompactor`` — repacks the next index state in a
+    worker thread and swaps at the Engine refresh point; the staleness
+    re-encode rides inside each pass.
+
+``benchmarks/train_e2e.py`` measures the assembled loop: in-training
+recall@10 vs exact over wall-clock, step-time overhead of going live, and
+the p99 win of hiding compaction.
+"""
+from repro.churn.compactor import BackgroundCompactor
+from repro.churn.staleness import StalenessTracker
+from repro.data.pipeline import Pipeline
+from repro.pipeline.loop import LiveIndexLoop
+
+__all__ = ["Pipeline", "LiveIndexLoop", "BackgroundCompactor",
+           "StalenessTracker"]

@@ -73,6 +73,7 @@ class GCD:
     preconditioner: str = "none"     # none | adagrad | adam
     sweeps: int = 16                 # 2-opt sweeps for method="steepest"
     reorthonormalize_every: int = 0  # 0 = never (exact in f32)
+    score_kernel_min_n: int = 256    # fused Pallas A=GᵀR−RᵀG at n ≥ this; 0 off
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -113,8 +114,7 @@ class GCD:
 
     def update(self, state: GCDState, grad: jax.Array, lr: float | jax.Array,
                key: jax.Array) -> tuple[GCDState, base.GivensDelta]:
-        A = givens.directional_derivs(
-            grad.astype(jnp.float32), state.R.astype(jnp.float32))
+        A = self._score(grad.astype(jnp.float32), state.R.astype(jnp.float32))
         Ahat, acc, acc2 = _precondition(state, self._mask(A),
                                         self.preconditioner)
         pi, pj = self.select_pairs(Ahat, key)
@@ -126,6 +126,18 @@ class GCD:
         R_new = base.maybe_reorthonormalize(
             delta.apply(state.R), step, self.reorthonormalize_every)
         return GCDState(R=R_new, step=step, accum=acc, accum2=acc2), delta
+
+    def _score(self, G: jax.Array, R: jax.Array) -> jax.Array:
+        """A = GᵀR − RᵀG. Large rotations route through the fused Pallas
+        kernel (one pass over G/R instead of matmul + transpose + subtract);
+        bit-identical to the reference — pinned in tests/test_rotations.py.
+        Below ``score_kernel_min_n`` the kernel's block padding costs more
+        than it saves, so small/odd sizes keep the jnp reference."""
+        n = G.shape[-1]
+        if self.score_kernel_min_n and n >= self.score_kernel_min_n:
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.gcd_score(G, R)
+        return givens.directional_derivs(G, R)
 
     def _mask(self, A: jax.Array) -> jax.Array:
         """Hook for SubspaceGCD; the full-matching family is unmasked."""

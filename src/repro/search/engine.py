@@ -432,6 +432,24 @@ class Engine:
         case the whole cache and its epoch survive. Compiled executables
         survive either way (the state pytree's structure and statics are
         refresh-invariant)."""
+        R = self._live_rot()
+        if R is not None:
+            n = int(R.shape[-1])
+            pi = getattr(delta, "pi", None)
+            if pi is not None and pi.size and int(
+                    jnp.maximum(pi.max(), delta.pj.max())) >= n:
+                # out-of-range pair indices would one-hot to zero rows and
+                # silently corrupt R — a trainer/index dimension mismatch
+                raise ValueError(
+                    f"refresh: delta rotates pairs up to index "
+                    f"{int(jnp.maximum(pi.max(), delta.pj.max()))} but the "
+                    f"live rotation is {n}x{n} — the trainer's manifold "
+                    f"leaf and this index have different dimensions")
+            dR = getattr(delta, "dR", None)
+            if dR is not None and dR.shape[-1] != n:
+                raise ValueError(
+                    f"refresh: dense delta is {dR.shape[-1]}x"
+                    f"{dR.shape[-1]} but the live rotation is {n}x{n}")
         keep = (hasattr(self.searcher, "luts_refresh_invariant")
                 and self.searcher.luts_refresh_invariant(self.state, delta))
         with self.obs.span("engine.refresh") as sp:
@@ -452,13 +470,19 @@ class Engine:
             # state.R / state.index.R are frozen at R₀ there), else state.R
             # (exact/flat/sharded) or state.index.R (the replicated ivf
             # backend wraps an IVFPQIndex)
-            R = getattr(self.state, "rot", None)
-            if R is None:
-                R = getattr(self.state, "R", None)
-            if R is None:
-                R = getattr(getattr(self.state, "index", None), "R", None)
+            R = self._live_rot()
             if R is not None:
                 maintain.refresh_health(R, delta)
+
+    def _live_rot(self):
+        """The live rotation the current backend scores through (see the
+        per-backend comment in ``refresh``), or None."""
+        R = getattr(self.state, "rot", None)
+        if R is None:
+            R = getattr(self.state, "R", None)
+        if R is None:
+            R = getattr(getattr(self.state, "index", None), "R", None)
+        return R
 
     # -- observability -----------------------------------------------------
     @property
@@ -538,6 +562,14 @@ class Engine:
             rebalances=self.obs.counter("churn.rebalances").value,
             grows=self.obs.counter("churn.grows").value,
             flush_ms_p95=flush_ms.percentile(95.0),
+            # background compaction (BackgroundCompactor; zero without one)
+            bg_submitted=self.obs.counter("churn.bg_submitted").value,
+            bg_compactions=self.obs.counter("churn.bg_compactions").value,
+            bg_discarded=self.obs.counter("churn.bg_discarded").value,
+            flushes_deferred=self.obs.counter("churn.flushes_deferred").value,
+            reencoded=self.obs.counter("churn.reencoded").value,
+            compact_hidden_ms_total=self.obs.distribution(
+                "churn.compact_hidden_ms").total,
             window=dict(size=summ.get("window", 0),
                         capacity=self.history,
                         scope="flush_ms aggregates"),

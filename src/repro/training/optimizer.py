@@ -197,11 +197,15 @@ def _adafactor_leaf(cfg: OptimizerConfig, lr, t, g, p, vr, vc):
     return p_n, vr_n, vc_n
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array):
-    """Returns (new_params, new_state). Clips the global grad norm, then
-    AdamW everywhere except the SO(n) leaves, which go through the
-    configured ``repro.rotations`` learner (``cfg.rotation``)."""
+def _update_impl(grads, state: OptState, params, cfg: OptimizerConfig,
+                 key: jax.Array):
+    """Shared update body → (new_params, new_state, rotation_deltas).
+
+    ``rotation_deltas`` maps each manifold leaf's ``path_key`` to the
+    ``RotationDelta`` the learner applied this step — the exact pytree a
+    live index consumes through ``Engine.refresh``. ``update`` discards it
+    (XLA dead-code-eliminates the unused outputs); ``update_with_deltas``
+    returns it for the overlapped train-and-refresh loop."""
     step = state.step
     lr = schedule_lr(cfg, step)
     t = (step + 1).astype(jnp.float32)
@@ -217,6 +221,7 @@ def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array)
 
     learner = rot_lib.from_config(cfg.rotation)
     rot_n: dict[str, Any] = {}
+    deltas: dict[str, Any] = {}
     cdt = cfg.compute_dtype
 
     def upd(path, g, p, mu, nu):
@@ -228,19 +233,19 @@ def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array)
             st = state.rot[path_key(path)]
 
             def one_rot(s, G, k):
-                s2, _delta = learner.update(s, G, cfg.rotation.lr, k)
-                return s2
+                return learner.update(s, G, cfg.rotation.lr, k)
 
             if p.ndim == 3:  # stacked per-layer rotations
                 st = jax.vmap(learner.with_rotation)(st, p)
                 ks = jax.random.split(kk, p.shape[0])
-                st2 = jax.vmap(one_rot)(st, g, ks)
+                st2, delta = jax.vmap(one_rot)(st, g, ks)
                 p_n = jax.vmap(learner.materialize)(st2)
             else:
                 st = learner.with_rotation(st, p)
-                st2 = one_rot(st, g, kk)
+                st2, delta = one_rot(st, g, kk)
                 p_n = learner.materialize(st2)
             rot_n[path_key(path)] = st2
+            deltas[path_key(path)] = delta
             return p_n.astype(p.dtype), mu, nu
         if cfg.name == "adafactor":
             return _adafactor_leaf(cfg, lr, t, g, p, mu, nu)
@@ -264,4 +269,22 @@ def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array)
     p_n = treedef.unflatten([r[0] for r in flat])
     mu_n = treedef.unflatten([r[1] for r in flat])
     nu_n = treedef.unflatten([r[2] for r in flat])
-    return p_n, OptState(mu=mu_n, nu=nu_n, rot=rot_n, step=step + 1)
+    return p_n, OptState(mu=mu_n, nu=nu_n, rot=rot_n, step=step + 1), deltas
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def update(grads, state: OptState, params, cfg: OptimizerConfig, key: jax.Array):
+    """Returns (new_params, new_state). Clips the global grad norm, then
+    AdamW everywhere except the SO(n) leaves, which go through the
+    configured ``repro.rotations`` learner (``cfg.rotation``)."""
+    p_n, state_n, _deltas = _update_impl(grads, state, params, cfg, key)
+    return p_n, state_n
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def update_with_deltas(grads, state: OptState, params, cfg: OptimizerConfig,
+                       key: jax.Array):
+    """``update`` that also returns ``{path_key: RotationDelta}`` for the
+    manifold leaves — feed these to a live index (``Engine.refresh``) to
+    keep it aligned with the trainer's rotations at zero rebuild cost."""
+    return _update_impl(grads, state, params, cfg, key)

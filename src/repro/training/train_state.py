@@ -63,8 +63,14 @@ def make_train_step(
     loss_fn: Callable[..., jax.Array],
     opt_cfg: opt_lib.OptimizerConfig,
     grad_shardings=None,
+    emit_deltas: bool = False,
 ) -> Callable:
     """loss_fn(params, *batch_arrays) -> scalar. Returns a pure step fn.
+
+    ``emit_deltas=True`` adds ``metrics["rotation_deltas"]`` — the
+    ``{path_key: RotationDelta}`` dict each manifold update applied, ready
+    to replay onto a live index via ``Engine.refresh`` (the overlapped
+    train-and-refresh loop in ``repro.pipeline``).
 
     ``opt_cfg.accum_steps > 1`` splits the global batch into microbatches
     scanned sequentially with f32 gradient accumulation — activation memory
@@ -114,14 +120,21 @@ def make_train_step(
     def train_step(state: TrainState, *batch) -> tuple[TrainState, dict]:
         loss, grads = _grads(state.params, *batch)
         key, sub = jax.random.split(state.rng)
-        params, opt_state = opt_lib.update(
-            grads, state.opt_state, state.params, opt_cfg, sub
-        )
+        if emit_deltas:
+            params, opt_state, deltas = opt_lib.update_with_deltas(
+                grads, state.opt_state, state.params, opt_cfg, sub
+            )
+        else:
+            params, opt_state = opt_lib.update(
+                grads, state.opt_state, state.params, opt_cfg, sub
+            )
         metrics = {
             "loss": loss.astype(jnp.float32),
             "grad_norm": opt_lib.global_norm(grads),
             "lr": opt_lib.schedule_lr(opt_cfg, state.step),
         }
+        if emit_deltas:
+            metrics["rotation_deltas"] = deltas
         return (
             TrainState(params=params, opt_state=opt_state,
                        step=state.step + 1, rng=key),

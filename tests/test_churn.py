@@ -14,6 +14,7 @@ Coverage demanded by ISSUE 8:
     PR 6's window-scoping conventions.
 """
 import dataclasses
+import time
 
 import hypothesis.strategies as st
 import jax
@@ -378,3 +379,170 @@ def test_exact_stream_tombstone_updates_rows(data):
     assert dataclasses.is_dataclass(state2)
     res = search.make("exact_stream").search(state2, jnp.asarray(Q), k=10)
     assert not np.any(np.isin(np.asarray(res.ids), np.arange(200)))
+
+
+# ---------------------------------------------------------------------------
+# PR 10: background compaction + staleness re-encode
+# ---------------------------------------------------------------------------
+
+
+def test_background_compact_bit_identical_to_foreground(data):
+    """A quiescent background pass must be BIT-identical to foreground
+    ``churn.compact`` — same scores, same ids (the acceptance pin: moving
+    the pack off-thread changes scheduling, never results)."""
+    X, R, Q = data
+    state = churn.with_staging(_fresh_ivf(data), 64)
+    state = churn.tombstone(state, np.arange(0, N, 7, dtype=np.int32))
+    eng = search.Engine(search.make("ivf"), state, k=10, nprobe=L)
+    comp = churn.BackgroundCompactor(eng)
+    fg = churn.compact(eng.state, include_staged=False)
+    assert comp.submit()
+    comp.join()
+    assert comp.poll()
+    searcher = search.make("ivf")
+    res_bg = searcher.search(eng.state, jnp.asarray(Q), k=10, nprobe=L)
+    res_fg = searcher.search(fg, jnp.asarray(Q), k=10, nprobe=L)
+    assert bool(jnp.array_equal(res_bg.scores, res_fg.scores))
+    assert bool(jnp.array_equal(res_bg.ids, res_fg.ids))
+    comp.close()
+
+
+def test_background_compactor_replays_mutations_since_submit(data):
+    """Deletes and stages landing while the worker packs are not lost:
+    deletes are replayed onto the compacted result at swap time, staged
+    rows ride the CURRENT state's buffer (the worker packs CSR only)."""
+    X, R, Q = data
+    eng = search.Engine(search.make("ivf"),
+                        churn.with_staging(_fresh_ivf(data), 64),
+                        k=10, nprobe=L)
+    comp = churn.BackgroundCompactor(eng, worker_delay_s=0.3)
+    assert comp.submit()
+    dead = np.arange(0, 40, dtype=np.int32)
+    new_ids = np.asarray([N + 1, N + 2, N + 3, N + 4], dtype=np.int32)
+    eng.state = churn.tombstone(eng.state, dead)
+    eng.state = churn.stage(eng.state, jnp.asarray(X[:4]), new_ids)
+    comp.join()
+    assert comp.poll()
+    assert eng.stats()["churn"]["bg_discarded"] == 0
+    res = search.make("ivf").search(eng.state, jnp.asarray(Q), k=10,
+                                    nprobe=L)
+    served = set(np.asarray(res.ids).ravel().tolist())
+    assert not served & set(dead.tolist())
+    assert churn.staged_rows(eng.state) == 4   # the in-flight adds survived
+    comp.close()
+
+
+def test_background_compactor_discards_on_csr_move(data):
+    """A flush while the worker packs moves the CSR — the stale result must
+    be discarded at poll, never swapped in."""
+    X, R, Q = data
+    eng = search.Engine(search.make("ivf"),
+                        churn.with_staging(_fresh_ivf(data), 64),
+                        k=10, nprobe=L)
+    eng.state = churn.tombstone(eng.state, np.arange(0, 64, dtype=np.int32))
+    eng.state = churn.stage(eng.state, jnp.asarray(X[:4]),
+                            np.asarray([N + 1, N + 2, N + 3, N + 4],
+                                       dtype=np.int32))
+    comp = churn.BackgroundCompactor(eng, worker_delay_s=0.3)
+    assert comp.submit()
+    eng.state, _ = churn.flush(eng.state)       # CSR holes refilled: moved
+    comp.join()
+    assert not comp.poll()
+    st = eng.stats()["churn"]
+    assert st["bg_discarded"] == 1 and st["bg_compactions"] == 0
+    comp.close()
+
+
+def test_background_compactor_poll_stress_no_double_swap(data):
+    """Racing pollers against a deliberately slow worker, across rounds:
+    exactly one swap per submit, one submit in flight at a time, no torn
+    counters (Engine.stats stays readable throughout)."""
+    import threading
+    eng = search.Engine(search.make("ivf"),
+                        churn.with_staging(_fresh_ivf(data), 64),
+                        k=10, nprobe=L)
+    comp = churn.BackgroundCompactor(eng, worker_delay_s=0.15)
+    rounds = 3
+    for r in range(rounds):
+        eng.state = churn.tombstone(
+            eng.state, np.arange(r * 20, r * 20 + 20, dtype=np.int32))
+        assert comp.submit()
+        assert not comp.submit()       # single pass in flight
+        swaps: list[int] = []
+        stop = threading.Event()
+
+        def poller():
+            while not stop.is_set():
+                if comp.poll():
+                    swaps.append(1)
+                eng.stats()            # torn-stats probe
+                # yield: a zero-sleep spin convoys the GIL/lock handoff
+                # and can starve the worker indefinitely (unfair locks)
+                time.sleep(0.002)
+
+        threads = [threading.Thread(target=poller) for _ in range(4)]
+        for t in threads:
+            t.start()
+        comp.join()
+        deadline = time.time() + 10.0
+        while not swaps and time.time() < deadline:
+            time.sleep(0.005)
+        stop.set()
+        for t in threads:
+            t.join()
+        assert sum(swaps) == 1, swaps  # no double-swap, no lost swap
+    st = eng.stats()["churn"]
+    assert st["bg_compactions"] == rounds
+    assert st["bg_discarded"] == 0
+    assert churn.live_rows(eng.state) == N - rounds * 20
+    comp.close()
+
+
+def test_staleness_reencode_fixes_drifted_rows(data):
+    """Cross-subspace refresh deltas drift stored codes off a fresh encode
+    (``maintain.drifted_ids`` is the oracle); a compaction pass that
+    re-encodes every stale row must drive the drifted set to empty."""
+    X, R, Q = data
+    eng = search.Engine(search.make("ivf"),
+                        churn.with_staging(_fresh_ivf(data), 64),
+                        k=10, nprobe=L)
+    tracker = churn.StalenessTracker()
+    tracker.record(np.arange(N))
+    comp = churn.BackgroundCompactor(
+        eng, tracker=tracker,
+        reencode_fn=lambda ids: np.stack([X[int(i)] for i in ids]),
+        reencode_rows=N)
+    learner = rotations.make("gcd", method="greedy")
+    for t in range(4):
+        st = learner.init_from(jnp.asarray(eng.state.index.R,
+                                           dtype=jnp.float32))
+        G = jax.random.normal(jax.random.PRNGKey(t), (DIM, DIM))
+        _, delta = learner.update(st, G, 5e-2, jax.random.PRNGKey(t))
+        eng.refresh(delta)
+        tracker.bump()
+    assert maintain.drifted_ids(eng.state.index, jnp.asarray(X)).size > 0
+    assert comp.submit()
+    comp.join()
+    assert comp.poll()
+    assert maintain.drifted_ids(eng.state.index, jnp.asarray(X)).size == 0
+    assert eng.stats()["churn"]["reencoded"] == N
+    # every row was re-encoded at the current epoch: staleness repaid
+    assert tracker.stalest(N).size == 0
+    comp.close()
+
+
+def test_staleness_tracker_orders_by_epoch():
+    """stalest() returns the oldest-encoded rows first, deterministically,
+    and never selects rows encoded at the current epoch."""
+    tr = churn.StalenessTracker()
+    tr.record([1, 2, 3])          # epoch 0
+    tr.bump()
+    tr.record([4, 5])             # epoch 1
+    tr.bump()                     # now epoch 2
+    assert list(tr.stalest(2)) == [1, 2]
+    assert list(tr.stalest(10)) == [1, 2, 3, 4, 5]
+    tr.record([1, 2, 3, 4, 5])    # all fresh at epoch 2
+    assert tr.stalest(10).size == 0
+    tr.forget([5])
+    assert len(tr) == 4
+    assert {int(k) for k in tr.histogram()} == {0}

@@ -210,3 +210,25 @@ def test_bf16_long_horizon_drift_guard():
     unguarded = run(every=0)
     assert guarded < 0.05, guarded
     assert guarded <= unguarded + 1e-6, (guarded, unguarded)
+
+
+# --- satellite: fused Pallas score routing (kernels.ops.gcd_score) ----------
+
+def test_gcd_score_kernel_routing_bit_parity():
+    """``GCD.update`` with the score routed through the fused Pallas kernel
+    (``score_kernel_min_n`` at/below n) must be BITWISE identical to the
+    ``givens.directional_derivs`` reference path — same R, same delta —
+    so the size threshold can never change a training trajectory."""
+    for n in (16, 64):
+        G = jax.random.normal(jax.random.PRNGKey(21), (n, n))
+        ref = rotations.make("gcd", method="greedy", score_kernel_min_n=0)
+        ker = rotations.make("gcd", method="greedy", score_kernel_min_n=n)
+        s_ref, s_ker = ref.init(n), ker.init(n)
+        upd_ref, upd_ker = jax.jit(ref.update), jax.jit(ker.update)
+        for t in range(3):
+            s_ref, d_ref = upd_ref(s_ref, G, 0.05, jax.random.PRNGKey(t))
+            s_ker, d_ker = upd_ker(s_ker, G, 0.05, jax.random.PRNGKey(t))
+        assert bool(jnp.array_equal(s_ref.R, s_ker.R))
+        assert bool(jnp.array_equal(d_ref.pi, d_ker.pi))
+        assert bool(jnp.array_equal(d_ref.pj, d_ker.pj))
+        assert bool(jnp.array_equal(d_ref.theta, d_ker.theta))

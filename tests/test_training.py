@@ -146,3 +146,103 @@ def test_ef_compression_unbiased_over_time():
         acc_t += np.asarray(g_true)
     # error feedback: the long-run average matches full precision
     np.testing.assert_allclose(acc_q / 100, acc_t / 100, atol=1e-2)
+
+
+# --- PR 10 satellites: prefetch determinism + delta emission ----------------
+
+
+def test_pipeline_prefetch_bit_identical_and_resume():
+    """The double-buffered prefetcher must not change the batch stream:
+    prefetch on == off bitwise, and a pause/``state()``/``restore()``
+    mid-stream (with a batch in flight) reproduces the uninterrupted
+    stream exactly — the cursor is the whole checkpoint, never the
+    buffer contents."""
+    from repro.data import pipeline as pipe_lib
+
+    def make(key):
+        return jax.random.normal(key, (4, 8))
+
+    sync = pipe_lib.Pipeline(make, seed=5, prefetch=False)
+    want = [np.asarray(next(sync)) for _ in range(8)]
+
+    pre = pipe_lib.Pipeline(make, seed=5, prefetch=True)
+    got = [np.asarray(next(pre)) for _ in range(8)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert pre.prefetch_hits >= 6   # steady state: only the first can miss
+    pre.close()
+    sync.close()
+
+    for prefetch in (False, True):
+        p1 = pipe_lib.Pipeline(make, seed=5, prefetch=prefetch)
+        for _ in range(3):
+            next(p1)
+        cursor = p1.state()
+        p1.close()                   # in-flight batch 3 is dropped here
+        p2 = pipe_lib.Pipeline(make, seed=0, prefetch=prefetch)
+        p2.restore(cursor)
+        rest = [np.asarray(next(p2)) for _ in range(5)]
+        for w, g in zip(want[3:], rest):
+            np.testing.assert_array_equal(w, g)
+        p2.close()
+
+
+def test_train_launcher_prefetch_resume_exact():
+    """Launcher-level fault tolerance with prefetch on: crash-after-3 +
+    resume matches the uninterrupted prefetch-OFF run — the pipeline
+    cursor in the checkpoint is prefetch-agnostic."""
+    from repro.launch import train as train_mod
+    with tempfile.TemporaryDirectory() as d:
+        _, hist_a = train_mod.train(
+            "two-tower-retrieval", steps=6, batch=8, ckpt_dir=None,
+            seed=3, log_every=100)
+        train_mod.train("two-tower-retrieval", steps=6, batch=8, ckpt_dir=d,
+                        seed=3, ckpt_every=100, log_every=100, stop_after=3,
+                        prefetch=True)
+        _, hist_b = train_mod.train(
+            "two-tower-retrieval", steps=6, batch=8, ckpt_dir=d, seed=3,
+            ckpt_every=100, log_every=100, prefetch=True)
+        assert np.isclose(hist_a[-1], hist_b[-1], rtol=1e-4), (hist_a, hist_b)
+
+
+def test_update_with_deltas_matches_update():
+    """``update_with_deltas`` is the same optimizer step plus the manifold
+    deltas (the trainer→live-index sync contract): params bitwise equal to
+    ``update``, and the emitted delta applied to the old R reproduces the
+    new R."""
+    cfg = opt.OptimizerConfig(
+        lr=0.1, rotation=rotations.RotationConfig(learner="gcd",
+                                                  method="greedy", lr=0.05))
+    params = {"R": jnp.eye(8), "w": jnp.zeros((8,))}
+    state = opt.init(params, cfg)
+    grads = {"R": jax.random.normal(jax.random.PRNGKey(0), (8, 8)),
+             "w": jnp.ones((8,))}
+    p1, s1 = opt.update(grads, state, params, cfg, jax.random.PRNGKey(1))
+    p2, s2, deltas = opt.update_with_deltas(grads, state, params, cfg,
+                                            jax.random.PRNGKey(1))
+    assert bool(jnp.array_equal(p1["R"], p2["R"]))
+    assert bool(jnp.array_equal(p1["w"], p2["w"]))
+    assert set(deltas) == {"R"}
+    np.testing.assert_allclose(np.asarray(deltas["R"].apply(params["R"])),
+                               np.asarray(p2["R"]), atol=1e-6)
+
+
+def test_train_step_emit_deltas_metric():
+    """``make_train_step(emit_deltas=True)`` surfaces the per-step manifold
+    delta under ``metrics["rotation_deltas"]`` and changes nothing else."""
+    cfg = _tiny_cfg()
+    p = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    tok, lab = synthetic.lm_batch(jax.random.PRNGKey(1), 8, 16, 97)
+    ocfg = opt.OptimizerConfig(
+        lr=1e-3, rotation=rotations.RotationConfig(learner="gcd",
+                                                   method="greedy"))
+    loss = lambda pp, t, l: tfm.forward_train(pp, t, l, cfg)  # noqa: E731
+    st0 = ts.init_state(jax.random.PRNGKey(2), p, ocfg)
+    _, m_plain = jax.jit(ts.make_train_step(loss, ocfg))(st0, tok, lab)
+    st0 = ts.init_state(jax.random.PRNGKey(2), p, ocfg)
+    st1, m_del = jax.jit(ts.make_train_step(loss, ocfg,
+                                            emit_deltas=True))(st0, tok, lab)
+    assert "rotation_deltas" not in m_plain
+    assert np.isclose(float(m_plain["loss"]), float(m_del["loss"]))
+    for key, delta in m_del["rotation_deltas"].items():
+        assert isinstance(delta, rotations.GivensDelta), key
